@@ -1,0 +1,91 @@
+"""Kernel micro-benchmarks: Pallas kernels (interpret) vs jnp references.
+
+On this CPU container the interesting output is CORRECTNESS deltas and the
+reference-path wall times (the TPU numbers come from the dry-run roofline);
+interpret=True wall-clock is not meaningful and is skipped by default.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, repeats=3):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else None
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.tree.map(
+            lambda x: x.block_until_ready() if hasattr(x, "block_until_ready") else x,
+            out,
+        )
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def bench_attention(check_kernel: bool):
+    print("\n== flash attention ==")
+    rng = np.random.default_rng(0)
+    for (B, S, H, K, D) in [(1, 512, 8, 8, 64), (1, 1024, 8, 2, 64),
+                            (4, 512, 16, 2, 128)]:
+        q = jnp.asarray(rng.normal(size=(B, S, H, D)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(B, S, K, D)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(B, S, K, D)), jnp.float32)
+        f_ref = jax.jit(lambda q, k, v: ref.attention_ref(q, k, v, causal=True))
+        f_chk = jax.jit(
+            lambda q, k, v: ref.attention_chunked(q, k, v, causal=True)
+        )
+        t_ref = _time(f_ref, q, k, v)
+        t_chk = _time(f_chk, q, k, v)
+        err = float(
+            jnp.abs(f_ref(q, k, v) - f_chk(q, k, v)).max()
+        )
+        line = (f"B{B} S{S} H{H}/K{K} D{D}: dense {t_ref*1e3:7.1f} ms, "
+                f"chunked {t_chk*1e3:7.1f} ms, |err| {err:.2e}")
+        if check_kernel:
+            out_k = ops.flash_attention(q, k, v, causal=True, interpret=True)
+            err_k = float(jnp.abs(f_ref(q, k, v) - out_k).max())
+            line += f", pallas(interp) |err| {err_k:.2e}"
+        print("  " + line)
+        print(f"csv:attention,{B},{S},{H},{K},{D},{t_ref*1e6:.0f},{t_chk*1e6:.0f},{err:.2e}")
+
+
+def bench_ssd(check_kernel: bool):
+    print("\n== SSD chunked scan ==")
+    rng = np.random.default_rng(0)
+    for (B, S, H, P, N, chunk) in [(1, 1024, 8, 64, 64, 128),
+                                   (4, 512, 8, 64, 128, 128)]:
+        x = jnp.asarray(rng.normal(size=(B, S, H, P)), jnp.float32)
+        dt = jnp.asarray(rng.uniform(0.01, 0.1, size=(B, S, H)), jnp.float32)
+        A = jnp.asarray(-rng.uniform(0.5, 1.5, size=(H,)), jnp.float32)
+        Bm = jnp.asarray(rng.normal(size=(B, S, N)), jnp.float32)
+        Cm = jnp.asarray(rng.normal(size=(B, S, N)), jnp.float32)
+        f = jax.jit(lambda *a: ref.ssd_ref(*a, chunk=chunk))
+        t = _time(f, x, dt, A, Bm, Cm)
+        line = f"B{B} S{S} H{H} P{P} N{N} chunk{chunk}: ref {t*1e3:7.1f} ms"
+        if check_kernel:
+            out_k = ops.ssd_scan(x, dt, A, Bm, Cm, chunk=chunk, interpret=True)
+            err_k = float(jnp.abs(f(x, dt, A, Bm, Cm) - out_k).max())
+            line += f", pallas(interp) |err| {err_k:.2e}"
+        print("  " + line)
+        print(f"csv:ssd,{B},{S},{H},{P},{N},{t*1e6:.0f}")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--check-kernel", action="store_true",
+                    help="also run the Pallas kernels in interpret mode")
+    args = ap.parse_args(argv)
+    bench_attention(args.check_kernel)
+    bench_ssd(args.check_kernel)
+
+
+if __name__ == "__main__":
+    main()

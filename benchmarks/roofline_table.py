@@ -1,0 +1,77 @@
+"""Aggregate the dry-run JSON records into the EXPERIMENTS.md roofline table.
+
+Reads experiments/dryrun/*.json (produced by ``repro.launch.dryrun --all``)
+and prints the per-cell three-term roofline, bottleneck, useful-FLOPs ratio
+and roofline fraction; optionally as a markdown table.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load(dirname: str, tag: str = None):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if tag and rec.get("tag") != tag:
+            continue
+        recs.append(rec)
+    return recs
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    return f"{x*1e3:.1f}ms"
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--tag", default=None)
+    ap.add_argument("--markdown", action="store_true")
+    ap.add_argument("--mesh", default=None, help="filter: 16x16 / 2x16x16")
+    args = ap.parse_args(argv)
+
+    recs = load(args.dir, args.tag)
+    if args.mesh:
+        recs = [r for r in recs if r["mesh"] == args.mesh]
+    if not recs:
+        print(f"no dry-run records in {args.dir} (run repro.launch.dryrun)")
+        return
+
+    sep = "|" if args.markdown else " "
+    hdr = ["arch", "shape", "mesh", "t_comp", "t_mem", "t_coll", "t_step",
+           "bound", "useful", "roofline%", "GiB/dev"]
+    if args.markdown:
+        print("| " + " | ".join(hdr) + " |")
+        print("|" + "---|" * len(hdr))
+    else:
+        print(f"{'arch':26s} {'shape':12s} {'mesh':8s} {'t_comp':>8s} "
+              f"{'t_mem':>8s} {'t_coll':>8s} {'t_step':>8s} {'bound':>10s} "
+              f"{'useful':>7s} {'roofl%':>7s} {'GiB/dev':>8s}")
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        rl = r["roofline"]
+        peak = r["memory"]["peak_bytes_per_device"] / 2**30
+        cells = [
+            r["arch"], r["shape"], r["mesh"],
+            fmt_s(rl["t_compute_s"]), fmt_s(rl["t_memory_s"]),
+            fmt_s(rl["t_collective_s"]), fmt_s(rl["t_step_s"]),
+            rl["bottleneck"], f"{rl['useful_flops_ratio']:.2f}",
+            f"{rl['roofline_fraction']*100:.1f}%", f"{peak:.2f}",
+        ]
+        if args.markdown:
+            print("| " + " | ".join(str(c) for c in cells) + " |")
+        else:
+            print(f"{cells[0]:26s} {cells[1]:12s} {cells[2]:8s} "
+                  f"{cells[3]:>8s} {cells[4]:>8s} {cells[5]:>8s} "
+                  f"{cells[6]:>8s} {cells[7]:>10s} {cells[8]:>7s} "
+                  f"{cells[9]:>7s} {cells[10]:>8s}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Benchmark driver: one section per paper table/figure + system benches.
+
+  PYTHONPATH=src python -m benchmarks.run            # everything fast
+  PYTHONPATH=src python -m benchmarks.run --section fig5 --ablate
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks import (
+    fig4_convergence,
+    fig5_speedup,
+    kernel_bench,
+    roofline_table,
+    transfer_ablation,
+)
+
+SECTIONS = {
+    "fig4": lambda args: fig4_convergence.main([]),
+    "fig5": lambda args: fig5_speedup.main(
+        ["--ablate"] if args.ablate else []
+    ),
+    "transfer": lambda args: transfer_ablation.main([]),
+    "kernels": lambda args: kernel_bench.main(
+        ["--check-kernel"] if args.check_kernel else []
+    ),
+    "roofline": lambda args: roofline_table.main([]),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--section", choices=list(SECTIONS), default=None)
+    ap.add_argument("--ablate", action="store_true")
+    ap.add_argument("--check-kernel", action="store_true")
+    args = ap.parse_args()
+
+    picks = [args.section] if args.section else list(SECTIONS)
+    t0 = time.time()
+    for name in picks:
+        print(f"\n{'='*72}\n== benchmark section: {name}\n{'='*72}")
+        sys.stdout.flush()
+        SECTIONS[name](args)
+    print(f"\n[benchmarks] all sections done in {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Checkpoint retention + restart policy on top of ``Checkpointer``.
+
+- keep the last ``keep_last`` checkpoints and every ``keep_every`` steps
+  (permanent archive points), delete the rest after each save;
+- ``restore_latest`` walks backward past torn/corrupt directories — the
+  node-failure recovery path.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from typing import Any, Dict, Optional, Tuple
+
+from repro.checkpoint.checkpointer import Checkpointer
+
+
+class CheckpointManager:
+    def __init__(
+        self,
+        root: str,
+        save_every: int = 100,
+        keep_last: int = 3,
+        keep_every: int = 1000,
+        async_save: bool = True,
+    ):
+        self.ckpt = Checkpointer(root)
+        self.save_every = save_every
+        self.keep_last = keep_last
+        self.keep_every = keep_every
+        self.async_save = async_save
+
+    def should_save(self, step: int) -> bool:
+        return step > 0 and step % self.save_every == 0
+
+    def save(self, step: int, state: Any, metadata: Optional[Dict] = None):
+        if self.async_save:
+            self.ckpt.save_async(step, state, metadata)
+        else:
+            self.ckpt.save(step, state, metadata)
+        self._gc(at_step=step)
+
+    def finalize(self):
+        self.ckpt.wait()
+
+    def _gc(self, at_step: int):
+        steps = self.ckpt.steps()
+        keep = set(steps[-self.keep_last :])
+        keep |= {s for s in steps if self.keep_every and s % self.keep_every == 0}
+        for s in steps:
+            if s not in keep and s != at_step:
+                shutil.rmtree(
+                    os.path.join(self.ckpt.root, f"step_{s:08d}"),
+                    ignore_errors=True,
+                )
+
+    def restore_latest(
+        self, target: Any, shardings: Any = None
+    ) -> Tuple[Optional[int], Any]:
+        """Walk backward over available checkpoints until one restores."""
+        self.ckpt.wait()
+        for step in reversed(self.ckpt.steps()):
+            try:
+                state = self.ckpt.restore(step, target, shardings)
+                return step, state
+            except (KeyError, ValueError, OSError, json.JSONDecodeError):
+                continue
+        return None, target

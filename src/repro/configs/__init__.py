@@ -1,0 +1,23 @@
+from repro.configs.base import (
+    ALL_SHAPES,
+    ARCH_IDS,
+    ArchConfig,
+    MoEConfig,
+    ShapeConfig,
+    SSMConfig,
+    all_cells,
+    get_arch,
+    get_shape,
+)
+
+__all__ = [
+    "ALL_SHAPES",
+    "ARCH_IDS",
+    "ArchConfig",
+    "MoEConfig",
+    "ShapeConfig",
+    "SSMConfig",
+    "all_cells",
+    "get_arch",
+    "get_shape",
+]

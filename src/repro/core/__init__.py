@@ -1,0 +1,17 @@
+"""Core: the paper's automatic offloading technology, generalized.
+
+- loopir / miniapps: the applications' loop statements as an IR
+- analysis: directive assignment (the pgcc loop classification analogue)
+- genome / ga: the evolutionary search (fitness t^-1/2, roulette+elitism)
+- transfer: CPU-accelerator transfer reduction (bulk / present / temp-area)
+- evaluator: verification-environment scoring (analytic / measured / compiled)
+- pcast: final result-difference check
+- plan: ExecutionPlan — the genome's phenotype at the framework level
+"""
+from repro.core import analysis, evaluator, ga, genome, loopir, miniapps
+from repro.core import pcast, plan, transfer
+
+__all__ = [
+    "analysis", "evaluator", "ga", "genome", "loopir", "miniapps",
+    "pcast", "plan", "transfer",
+]

@@ -1,0 +1,83 @@
+"""Binary genome operators for the offload GA (paper [32] §GA setup).
+
+Gene value 1 = insert the offload directive on that loop/unit; 0 = leave it
+on the CPU path. Operators are pure functions over numpy Generators so the
+GA is reproducible and hypothesis-testable.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+Genes = Tuple[int, ...]
+
+
+def random_genome(rng: np.random.Generator, length: int) -> Genes:
+    return tuple(int(b) for b in rng.integers(0, 2, size=length))
+
+
+def initial_population(
+    rng: np.random.Generator, length: int, size: int
+) -> List[Genes]:
+    """Random 0/1 assignment; duplicates re-drawn (bounded) to keep the
+    initial search wide, as the paper's implementation does."""
+    pop: List[Genes] = []
+    seen = set()
+    attempts = 0
+    while len(pop) < size:
+        g = random_genome(rng, length)
+        attempts += 1
+        if g in seen and attempts < 20 * size and length > 1:
+            continue
+        seen.add(g)
+        pop.append(g)
+    return pop
+
+
+def crossover(
+    rng: np.random.Generator, a: Genes, b: Genes, rate: float
+) -> Tuple[Genes, Genes]:
+    """Single-point crossover with probability ``rate`` (Pc=0.9)."""
+    assert len(a) == len(b)
+    if len(a) < 2 or rng.random() >= rate:
+        return a, b
+    point = int(rng.integers(1, len(a)))
+    return a[:point] + b[point:], b[:point] + a[point:]
+
+
+def uniform_crossover(
+    rng: np.random.Generator, a: Genes, b: Genes, rate: float
+) -> Tuple[Genes, Genes]:
+    """Uniform crossover with probability ``rate``: each gene swaps sides
+    with p=0.5 — better building-block mixing on long genomes."""
+    assert len(a) == len(b)
+    if rng.random() >= rate:
+        return a, b
+    mask = rng.integers(0, 2, size=len(a))
+    ca = tuple(x if m else y for x, y, m in zip(a, b, mask))
+    cb = tuple(y if m else x for x, y, m in zip(a, b, mask))
+    return ca, cb
+
+
+def mutate(rng: np.random.Generator, g: Genes, rate: float) -> Genes:
+    """Independent per-bit flips (Pm=0.05)."""
+    flips = rng.random(len(g)) < rate
+    return tuple(int(b) ^ int(f) for b, f in zip(g, flips))
+
+
+def roulette_pick(
+    rng: np.random.Generator, population: Sequence[Genes],
+    fitness: Sequence[float],
+) -> Genes:
+    """Fitness-proportional (roulette) selection."""
+    total = float(sum(fitness))
+    if total <= 0.0:
+        return population[int(rng.integers(0, len(population)))]
+    r = rng.random() * total
+    acc = 0.0
+    for g, f in zip(population, fitness):
+        acc += f
+        if acc >= r:
+            return g
+    return population[-1]

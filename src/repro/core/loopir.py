@@ -1,0 +1,154 @@
+"""Loop-program IR: the paper's "application loop statements" made explicit.
+
+The paper's pipeline parses a C/C++ application with Clang, finds its ``for``
+statements, records the variables each loop reads/writes, and lets pgcc
+classify every loop (kernels-able / parallel-able / vectorizable-only /
+not offloadable). This module is that parse result as a first-class IR:
+
+- ``Var``     — one array/scalar with size, definition site and init info
+                (the fields the paper's transfer analysis keys on: global vs
+                local, initialized where, defined in which file).
+- ``Loop``    — one loop statement with nest structure, trip counts,
+                read/write sets, arithmetic cost, and the pgcc-style
+                classification flags.
+- ``LoopProgram`` — the whole application: ordered loops + vars + the
+                enclosing "time-step" iteration structure.
+
+``core.analysis_loops`` classifies loops into directives, ``core.transfer``
+builds the CPU-GPU transfer schedule for a genome, and ``core.evaluator``
+turns (genome, schedule) into a predicted wall time. ``core.miniapps``
+instantiates Himeno and NAS.FT as LoopPrograms with the paper's gene lengths
+(13 and 65).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Dict, FrozenSet, List, Optional, Sequence, Tuple
+
+
+class LoopClass(str, enum.Enum):
+    """pgcc-style loop classification (paper §3.3 / §4)."""
+
+    TIGHT = "tight"  # single / tightly-nested -> `acc kernels`
+    NON_TIGHT = "non_tight"  # non-tightly-nested -> `acc parallel loop`
+    VECTOR_ONLY = "vector_only"  # not parallelizable, vectorizable -> `acc parallel loop vector`
+    NOT_OFFLOADABLE = "not_offloadable"  # pgcc compile error -> excluded from GA
+
+
+@dataclasses.dataclass(frozen=True)
+class Var:
+    """One program variable (array or scalar)."""
+
+    name: str
+    nbytes: int
+    file: str = "main.c"
+    is_global: bool = False
+    # True when the compiler cannot prove the init site (other function /
+    # other file): PGI then inserts conservative auto-transfers around every
+    # kernel using it unless the temp-area staging blocks them (paper fig. 2).
+    init_external: bool = False
+
+    def __post_init__(self):
+        assert self.nbytes >= 0
+
+
+@dataclasses.dataclass(frozen=True)
+class Loop:
+    """One loop statement (outermost loop of a nest, or a nest level)."""
+
+    name: str
+    klass: LoopClass
+    trip: int  # iterations of THIS loop level
+    inner_trip: int  # product of inner-loop iterations (work per trip)
+    flops_per_iter: float  # arithmetic per innermost iteration
+    reads: FrozenSet[str]
+    writes: FrozenSet[str]
+    file: str = "main.c"
+    # name of the enclosing *sequential* iteration construct (e.g. the Jacobi
+    # time-step loop). Transfers hoisted only to nest level re-run once per
+    # enclosing iteration; bulk transfers can cross it when dataflow allows.
+    parent_seq: Optional[str] = None
+    # innermost-dim contiguity: vectorizable-only loops run at lane (VPU)
+    # rather than MXU rates on the accelerator
+    sequential_carry: bool = False
+
+    @property
+    def total_flops(self) -> float:
+        return self.flops_per_iter * self.trip * self.inner_trip
+
+    @property
+    def offloadable(self) -> bool:
+        return self.klass != LoopClass.NOT_OFFLOADABLE
+
+    def touched(self) -> FrozenSet[str]:
+        return self.reads | self.writes
+
+
+@dataclasses.dataclass(frozen=True)
+class SeqRegion:
+    """A sequential enclosing iteration (time-step loop): loops listed inside
+    it execute ``trip`` times per program run."""
+
+    name: str
+    trip: int
+
+
+@dataclasses.dataclass(frozen=True)
+class LoopProgram:
+    name: str
+    loops: Tuple[Loop, ...]
+    vars: Tuple[Var, ...]
+    seq_regions: Tuple[SeqRegion, ...] = ()
+    description: str = ""
+
+    def __post_init__(self):
+        names = [l.name for l in self.loops]
+        assert len(set(names)) == len(names), "duplicate loop names"
+        vnames = {v.name for v in self.vars}
+        for l in self.loops:
+            missing = (l.reads | l.writes) - vnames
+            assert not missing, f"{l.name} touches undeclared vars {missing}"
+        region_names = {r.name for r in self.seq_regions}
+        for l in self.loops:
+            assert l.parent_seq is None or l.parent_seq in region_names
+
+    # -- gene mapping (paper: gene length = number of offloadable loops) ----
+    @property
+    def offloadable_loops(self) -> Tuple[Loop, ...]:
+        return tuple(l for l in self.loops if l.offloadable)
+
+    @property
+    def gene_length(self) -> int:
+        return len(self.offloadable_loops)
+
+    def var(self, name: str) -> Var:
+        return {v.name: v for v in self.vars}[name]
+
+    def region_trip(self, name: Optional[str]) -> int:
+        if name is None:
+            return 1
+        return {r.name: r.trip for r in self.seq_regions}[name]
+
+    def genes_to_offloads(self, genes: Sequence[int]) -> Dict[str, bool]:
+        """Map a genome onto {loop name: offloaded?} (non-offloadable: False)."""
+        assert len(genes) == self.gene_length, (len(genes), self.gene_length)
+        out = {l.name: False for l in self.loops}
+        for g, l in zip(genes, self.offloadable_loops):
+            out[l.name] = bool(g)
+        return out
+
+    def total_flops(self) -> float:
+        return sum(
+            l.total_flops * self.region_trip(l.parent_seq) for l in self.loops
+        )
+
+    def describe(self) -> str:
+        rows = [f"LoopProgram {self.name}: {len(self.loops)} loops "
+                f"({self.gene_length} offloadable = gene length)"]
+        for l in self.loops:
+            rows.append(
+                f"  {l.name:24s} {l.klass.value:16s} trip={l.trip}x{l.inner_trip} "
+                f"flops={l.total_flops:.3g} R={sorted(l.reads)} W={sorted(l.writes)}"
+            )
+        return "\n".join(rows)

@@ -1,0 +1,117 @@
+"""Result-difference check (the paper's PCAST / acc_compare analogue).
+
+The paper's final step samples the offloaded program and the CPU-only
+program on test inputs and shows the numerical differences to the user
+(PGI PCAST, ``acc_compare``). Here: compare two pytrees of arrays
+(reference path vs offloaded/plan path) with dtype-aware tolerances and
+produce a per-leaf report the caller can print or assert on.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+# IEEE-754-aware defaults per compute dtype (the paper checks against an
+# IEEE 754 tolerance spec via PCAST options)
+DEFAULT_TOLS: Dict[str, Tuple[float, float]] = {
+    "float64": (1e-12, 1e-12),
+    "float32": (3e-5, 3e-5),
+    "bfloat16": (2e-2, 2e-2),
+    "float16": (5e-3, 5e-3),
+    "complex64": (3e-5, 3e-5),
+}
+
+
+@dataclasses.dataclass
+class LeafDiff:
+    path: str
+    dtype: str
+    shape: Tuple[int, ...]
+    max_abs: float
+    max_rel: float
+    rel_tol: float
+    abs_tol: float
+    n_mismatch: int
+    n_total: int
+
+    @property
+    def ok(self) -> bool:
+        return self.n_mismatch == 0
+
+    def row(self) -> str:
+        flag = "OK  " if self.ok else "DIFF"
+        return (
+            f"{flag} {self.path:40s} {self.dtype:9s} {str(self.shape):18s} "
+            f"max_abs={self.max_abs:.3e} max_rel={self.max_rel:.3e} "
+            f"mismatch={self.n_mismatch}/{self.n_total}"
+        )
+
+
+@dataclasses.dataclass
+class PcastReport:
+    leaves: List[LeafDiff]
+
+    @property
+    def ok(self) -> bool:
+        return all(l.ok for l in self.leaves)
+
+    @property
+    def max_rel(self) -> float:
+        return max((l.max_rel for l in self.leaves), default=0.0)
+
+    def describe(self) -> str:
+        head = (
+            f"PCAST result-difference check: "
+            f"{'PASS' if self.ok else 'FAIL'} "
+            f"({len(self.leaves)} tensors, max_rel={self.max_rel:.3e})"
+        )
+        return "\n".join([head] + ["  " + l.row() for l in self.leaves])
+
+
+def _leaf_path(kp) -> str:
+    return jax.tree_util.keystr(kp)
+
+
+def compare(
+    reference: Any,
+    offloaded: Any,
+    rel_tol: Optional[float] = None,
+    abs_tol: Optional[float] = None,
+) -> PcastReport:
+    """Compare two pytrees leaf-by-leaf (shapes must match exactly)."""
+    ref_leaves = jax.tree_util.tree_leaves_with_path(reference)
+    off_leaves = jax.tree_util.tree_leaves_with_path(offloaded)
+    assert len(ref_leaves) == len(off_leaves), "pytree structures differ"
+
+    out: List[LeafDiff] = []
+    for (kp, r), (_, o) in zip(ref_leaves, off_leaves):
+        r = np.asarray(r)
+        o = np.asarray(o)
+        assert r.shape == o.shape, f"{_leaf_path(kp)}: {r.shape} vs {o.shape}"
+        dt = str(o.dtype)
+        d_rel, d_abs = DEFAULT_TOLS.get(dt, (1e-5, 1e-5))
+        rt = rel_tol if rel_tol is not None else d_rel
+        at = abs_tol if abs_tol is not None else d_abs
+        rf = r.astype(np.float64) if not np.iscomplexobj(r) else r.astype(np.complex128)
+        of = o.astype(np.float64) if not np.iscomplexobj(o) else o.astype(np.complex128)
+        adiff = np.abs(rf - of)
+        denom = np.maximum(np.abs(rf), np.abs(of))
+        rel = np.where(denom > 0, adiff / np.maximum(denom, 1e-300), 0.0)
+        bad = adiff > (at + rt * denom)
+        out.append(
+            LeafDiff(
+                path=_leaf_path(kp),
+                dtype=dt,
+                shape=tuple(r.shape),
+                max_abs=float(adiff.max()) if adiff.size else 0.0,
+                max_rel=float(np.real(rel).max()) if rel.size else 0.0,
+                rel_tol=rt,
+                abs_tol=at,
+                n_mismatch=int(bad.sum()),
+                n_total=int(r.size),
+            )
+        )
+    return PcastReport(out)

@@ -1,0 +1,152 @@
+"""Flash attention Pallas TPU kernel (online softmax, GQA, masks, softcap).
+
+TPU-native design notes (HW adaptation of the paper's `kernels` directive):
+- grid = (batch, q_heads, Sq/block_q, Sk/block_k); the LAST grid dim is
+  sequential on TPU, so the online-softmax running stats (m, l, acc) live in
+  VMEM scratch and are carried across k-blocks.
+- BlockSpec tiles: q (1, 1, block_q, D), k/v (1, 1, block_k, D) — D is padded
+  to a lane multiple (128) by ``ops.flash_attention``; block_q/block_k default
+  to 512 so q,k,v tiles + f32 acc fit comfortably in ~16 MB VMEM while keeping
+  MXU dims at 128 multiples (512x128 tiles, 512x512 score blocks).
+- GQA is expressed in the k/v index_map (q-head h reads kv-head h // group) —
+  no KV replication in HBM.
+- causal/local masking uses block-level iota compares; fully masked blocks
+  still run (TPU grids are static), the mask makes them no-ops.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref,  # (1, 1, block_q, D)
+    k_ref,  # (1, 1, block_k, D)
+    v_ref,  # (1, 1, block_k, D)
+    o_ref,  # (1, 1, block_q, D)
+    m_scr,  # (block_q, 128) f32
+    l_scr,  # (block_q, 128) f32
+    acc_scr,  # (block_q, D) f32
+    *,
+    scale: float,
+    causal: bool,
+    local_window: int,
+    logit_softcap: float,
+    block_q: int,
+    block_k: int,
+    num_k_blocks: int,
+    kv_len: int,
+):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale
+    k = k_ref[0, 0].astype(jnp.float32)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (block_q, block_k)
+
+    if logit_softcap > 0.0:
+        s = logit_softcap * jnp.tanh(s / logit_softcap)
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    ok = k_pos < kv_len  # KV padding mask
+    if causal:
+        ok &= q_pos >= k_pos
+    if local_window > 0:
+        ok &= (q_pos - k_pos) < local_window
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_scr[:, 0]
+    m_cur = jnp.maximum(m_prev, s.max(axis=-1))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur[:, None])
+    l_cur = l_scr[:, 0] * alpha + p.sum(axis=-1)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+        p,
+        v_ref[0, 0].astype(jnp.float32),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m_scr[:, 0] = m_cur
+    l_scr[:, 0] = l_cur
+
+    @pl.when(ki == num_k_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[:, 0], 1e-37)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jnp.ndarray,  # (B, H, Sq, D) — D must be a 128 multiple (ops pads)
+    k: jnp.ndarray,  # (B, K, Sk, D)
+    v: jnp.ndarray,  # (B, K, Sk, D)
+    *,
+    causal: bool = True,
+    local_window: int = 0,
+    logit_softcap: float = 0.0,
+    scale: Optional[float] = None,
+    block_q: int = 512,
+    block_k: int = 512,
+    kv_len: Optional[int] = None,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    B, H, Sq, D = q.shape
+    _, K, Sk, _ = k.shape
+    assert H % K == 0
+    group = H // K
+    scale = (1.0 / D**0.5) if scale is None else scale
+    kv_len = Sk if kv_len is None else kv_len
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    assert Sq % block_q == 0 and Sk % block_k == 0, (Sq, block_q, Sk, block_k)
+    nq, nk = Sq // block_q, Sk // block_k
+
+    kernel = functools.partial(
+        _flash_kernel,
+        scale=scale,
+        causal=causal,
+        local_window=local_window,
+        logit_softcap=logit_softcap,
+        block_q=block_q,
+        block_k=block_k,
+        num_k_blocks=nk,
+        kv_len=kv_len,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec(
+                (1, 1, block_k, D), lambda b, h, qi, ki: (b, h // group, ki, 0)
+            ),
+            pl.BlockSpec(
+                (1, 1, block_k, D), lambda b, h, qi, ki: (b, h // group, ki, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, block_q, D), lambda b, h, qi, ki: (b, h, qi, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 128), jnp.float32),
+            pltpu.VMEM((block_q, 128), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

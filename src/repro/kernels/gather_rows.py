@@ -1,0 +1,68 @@
+"""Row-gather Pallas TPU kernel (the MoE dispatch/combine primitive).
+
+``gather_rows(src (N, d), idx (M,)) -> (M, d)`` where ``idx[i] == -1``
+yields a zero row. This one primitive implements all four MoE data
+movements (each is a permutation-with-drops because capacity slots are
+unique):
+
+  dispatch fwd    buf[slot]   = x[src_tok]          gather(x, src_row)
+  dispatch bwd    dx[t]       = sum_k dbuf[slot]    gather(dbuf, tok_slots) + sum
+  combine  fwd    y[t]        = sum_k g yb[slot]    gather(yb, tok_slots) * g + sum
+  combine  bwd    dyb[slot]   = g dy[src_tok]       gather(dy, src_row) * g
+
+TPU-native design: the row index array rides in scalar-prefetch (SMEM) so
+each grid step can issue a dynamic-slice DMA from the source (kept in
+ANY/HBM memory space) into its VMEM output block — the canonical TPU
+sparse-row-copy pattern (same shape as embedding gathers / megablocks
+dispatch). The MXU is not involved; the kernel is a DMA engine, which is
+exactly why the XLA scatter/gather lowering (and its f32-promoted
+scatter-add transpose) is worth replacing on the target.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gather_kernel(idx_ref, src_ref, out_ref, *, block_rows: int):
+    """One grid step copies ``block_rows`` source rows into the out block."""
+    base = pl.program_id(0) * block_rows
+    for i in range(block_rows):  # static unroll; rows fetched by dynamic ds
+        r = idx_ref[base + i]
+        safe = jnp.maximum(r, 0)
+        row = src_ref[pl.ds(safe, 1), :]
+        out_ref[pl.ds(i, 1), :] = jnp.where(r >= 0, row, 0).astype(
+            out_ref.dtype
+        )
+
+
+def gather_rows_pallas(
+    src: jnp.ndarray,  # (N, d)
+    idx: jnp.ndarray,  # (M,) int32, -1 -> zero row
+    *,
+    block_rows: int = 8,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    N, d = src.shape
+    (M,) = idx.shape
+    pad = (-M) % block_rows
+    idx_p = jnp.pad(idx, (0, pad), constant_values=-1)
+    grid = (idx_p.shape[0] // block_rows,)
+    out = pl.pallas_call(
+        functools.partial(_gather_kernel, block_rows=block_rows),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,  # idx rides in SMEM
+            grid=grid,
+            in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)],  # src in HBM
+            out_specs=pl.BlockSpec(
+                (block_rows, d), lambda i, idx_ref: (i, 0)
+            ),
+        ),
+        out_shape=jax.ShapeDtypeStruct((idx_p.shape[0], d), src.dtype),
+        interpret=interpret,
+    )(idx_p, src)
+    return out[:M]

@@ -1,0 +1,229 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+``attention_ref`` / ``ssd_ref`` are the ground truth used by the kernel
+allclose tests. ``attention_chunked`` is a mathematically identical
+online-softmax formulation built on ``lax.scan`` — it is the non-TPU dispatch
+target of ``ops.flash_attention`` (same FLOPs, no S x S materialization), so
+dry-run roofline terms match the kernel path.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+NEG_INF = -1e30
+
+
+def _mask_bias(
+    q_pos: jnp.ndarray,
+    k_pos: jnp.ndarray,
+    causal: bool,
+    local_window: int,
+) -> jnp.ndarray:
+    """Additive mask bias (q_len, k_len) from position vectors."""
+    ok = jnp.ones((q_pos.shape[0], k_pos.shape[0]), dtype=bool)
+    if causal:
+        ok &= q_pos[:, None] >= k_pos[None, :]
+    if local_window > 0:
+        ok &= (q_pos[:, None] - k_pos[None, :]) < local_window
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+def attention_ref(
+    q: jnp.ndarray,  # (B, Sq, H, D)
+    k: jnp.ndarray,  # (B, Sk, K, D)
+    v: jnp.ndarray,  # (B, Sk, K, D)
+    *,
+    causal: bool = True,
+    local_window: int = 0,
+    logit_softcap: float = 0.0,
+    scale: Optional[float] = None,
+    q_offset: int = 0,
+) -> jnp.ndarray:
+    """Naive GQA attention (materializes scores). Oracle only."""
+    B, Sq, H, D = q.shape
+    _, Sk, K, _ = k.shape
+    assert H % K == 0, (H, K)
+    G = H // K
+    scale = (1.0 / D**0.5) if scale is None else scale
+    qq = q.reshape(B, Sq, K, G, D).astype(jnp.float32)
+    kk = k.astype(jnp.float32)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qq, kk) * scale
+    if logit_softcap > 0.0:
+        scores = logit_softcap * jnp.tanh(scores / logit_softcap)
+    q_pos = jnp.arange(Sq) + q_offset
+    k_pos = jnp.arange(Sk)
+    scores = scores + _mask_bias(q_pos, k_pos, causal, local_window)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+def attention_chunked(
+    q: jnp.ndarray,  # (B, Sq, H, D)
+    k: jnp.ndarray,  # (B, Sk, K, D)
+    v: jnp.ndarray,  # (B, Sk, K, D)
+    *,
+    causal: bool = True,
+    local_window: int = 0,
+    logit_softcap: float = 0.0,
+    scale: Optional[float] = None,
+    q_offset: int = 0,
+    chunk: int = 512,
+) -> jnp.ndarray:
+    """Online-softmax attention: lax.scan over key chunks, O(S*chunk) memory.
+
+    This is the flash-attention recurrence expressed in pure jnp; it is the
+    compile target on non-TPU backends and the shape-agnostic fallback.
+    """
+    B, Sq, H, D = q.shape
+    _, Sk, K, _ = k.shape
+    G = H // K
+    scale = (1.0 / D**0.5) if scale is None else scale
+    if Sk <= chunk:
+        return attention_ref(
+            q, k, v, causal=causal, local_window=local_window,
+            logit_softcap=logit_softcap, scale=scale, q_offset=q_offset,
+        )
+    n = Sk // chunk
+    rem = Sk - n * chunk
+    qq = (q.reshape(B, Sq, K, G, D) * scale).astype(jnp.float32)
+    q_pos = jnp.arange(Sq) + q_offset
+
+    def step(carry, inputs):
+        m, l, acc = carry
+        kc, vc, k0 = inputs  # (B, c, K, D), (B, c, K, D), scalar chunk start
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qq, kc.astype(jnp.float32))
+        if logit_softcap > 0.0:
+            s = logit_softcap * jnp.tanh(s / logit_softcap)
+        k_pos = k0 + jnp.arange(kc.shape[1])
+        ok = jnp.ones((Sq, kc.shape[1]), dtype=bool)
+        if causal:
+            ok &= q_pos[:, None] >= k_pos[None, :]
+        if local_window > 0:
+            ok &= (q_pos[:, None] - k_pos[None, :]) < local_window
+        s = s + jnp.where(ok, 0.0, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bkgqs,bskd->bkgqd", p, vc.astype(jnp.float32)
+        )
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, K, G, Sq), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((B, K, G, Sq), dtype=jnp.float32)
+    a0 = jnp.zeros((B, K, G, Sq, D), dtype=jnp.float32)
+    ks = k[:, : n * chunk].reshape(B, n, chunk, K, D).swapaxes(0, 1)
+    vs = v[:, : n * chunk].reshape(B, n, chunk, K, D).swapaxes(0, 1)
+    starts = jnp.arange(n) * chunk
+    (m, l, acc), _ = lax.scan(step, (m0, l0, a0), (ks, vs, starts))
+    if rem:
+        (m, l, acc), _ = step(
+            (m, l, acc), (k[:, n * chunk :], v[:, n * chunk :], n * chunk)
+        )
+    out = acc / jnp.maximum(l, 1e-37)[..., None]  # (B, K, G, Sq, D)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, D)
+    return out.astype(q.dtype)
+
+
+def _segsum(x: jnp.ndarray) -> jnp.ndarray:
+    """Lower-triangular pairwise sums: out[..., i, j] = sum_{j<k<=i} x[..., k]."""
+    T = x.shape[-1]
+    c = jnp.cumsum(x, axis=-1)
+    out = c[..., :, None] - c[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), dtype=bool), 0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_ref(
+    x: jnp.ndarray,  # (B, S, H, P)
+    dt: jnp.ndarray,  # (B, S, H)      (post-softplus, positive)
+    A: jnp.ndarray,  # (H,)            (negative)
+    Bm: jnp.ndarray,  # (B, S, N)      (single group)
+    Cm: jnp.ndarray,  # (B, S, N)
+    *,
+    chunk: int = 64,
+    initial_state: Optional[jnp.ndarray] = None,  # (B, H, P, N)
+    return_state: bool = False,
+):
+    """Mamba-2 SSD (state-space duality) chunked scan, pure jnp oracle.
+
+    Follows ssd_minimal_discrete from the Mamba-2 paper: intra-chunk
+    quadratic term + inter-chunk recurrent state carry.
+    """
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    f32 = jnp.float32
+    xb = (x * dt[..., None]).astype(f32)  # dt-weighted input
+    dA = (dt * A[None, None, :]).astype(f32)  # (B, S, H) log-decay increments
+
+    # chunked views: (B, nc, cs, ...)
+    xc = xb.reshape(B, nc, chunk, H, P)
+    dAc = dA.reshape(B, nc, chunk, H)
+    Bc = Bm.reshape(B, nc, chunk, N).astype(f32)
+    Cc = Cm.reshape(B, nc, chunk, N).astype(f32)
+
+    # 1. intra-chunk (diagonal blocks): Y = (C B^T * L) X
+    L = jnp.exp(_segsum(dAc.transpose(0, 1, 3, 2)))  # (B, nc, H, cs, cs)
+    scores = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)  # (B, nc, cs, cs)
+    y_diag = jnp.einsum("bcij,bchij,bcjhp->bcihp", scores, L, xc)
+
+    # 2. per-chunk final states: sum_i exp(cum[-1]-cum[i]) * x_i B_i^T
+    cum = jnp.cumsum(dAc, axis=2)  # (B, nc, cs, H)
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)  # (B, nc, cs, H)
+    chunk_states = jnp.einsum("bcihp,bcih,bcin->bchpn", xc, decay_to_end, Bc)
+
+    # 3. inter-chunk recurrence over chunk index
+    chunk_decay = jnp.exp(cum[:, :, -1, :])  # (B, nc, H)
+    s0 = (
+        initial_state.astype(f32)
+        if initial_state is not None
+        else jnp.zeros((B, H, P, N), f32)
+    )
+
+    def scan_fn(state, inp):
+        cs_, cd_ = inp  # (B,H,P,N), (B,H)
+        prev = state
+        state = state * cd_[..., None, None] + cs_
+        return state, prev
+
+    cs_seq = chunk_states.swapaxes(0, 1)  # (nc, B, H, P, N)
+    cd_seq = chunk_decay.swapaxes(0, 1)  # (nc, B, H)
+    final_state, prev_states = lax.scan(scan_fn, s0, (cs_seq, cd_seq))
+    prev_states = prev_states.swapaxes(0, 1)  # (B, nc, H, P, N)
+
+    # 4. inter-chunk output: C_i decayed against incoming state
+    state_decay = jnp.exp(cum)  # (B, nc, cs, H)
+    y_off = jnp.einsum("bcin,bchpn,bcih->bcihp", Cc, prev_states, state_decay)
+
+    y = (y_diag + y_off).reshape(B, S, H, P).astype(x.dtype)
+    if return_state:
+        return y, final_state.astype(f32)
+    return y
+
+
+def ssd_decode_ref(
+    x: jnp.ndarray,  # (B, H, P) single token
+    dt: jnp.ndarray,  # (B, H)
+    A: jnp.ndarray,  # (H,)
+    Bm: jnp.ndarray,  # (B, N)
+    Cm: jnp.ndarray,  # (B, N)
+    state: jnp.ndarray,  # (B, H, P, N)
+):
+    """Single-token SSD recurrence: state' = e^{dtA} state + dt x B^T."""
+    f32 = jnp.float32
+    dA = jnp.exp((dt * A[None, :]).astype(f32))  # (B, H)
+    upd = jnp.einsum(
+        "bhp,bn->bhpn", (x * dt[..., None]).astype(f32), Bm.astype(f32)
+    )
+    new_state = state * dA[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", new_state, Cm.astype(f32))
+    return y.astype(x.dtype), new_state

@@ -1,0 +1,123 @@
+"""Mamba-2 SSD (state-space duality) chunked-scan Pallas TPU kernel.
+
+TPU-native design (HW adaptation): the GPU SSD kernel in the Mamba-2 paper
+leans on warp-level shuffles for the intra-chunk scan; on TPU we instead
+express the intra-chunk term as two MXU matmuls (C B^T masked by the decay
+matrix L, then @ X) and carry the inter-chunk recurrent state (P x N, f32) in
+VMEM scratch across the sequential chunk grid dimension — the TPU grid's
+last-dim sequential guarantee replaces the GPU's inter-block atomics.
+
+grid = (B, H, S/chunk); chunk dim sequential.
+BlockSpec tiles per step: x (1, chunk, 1, P), dt (1, chunk, 1),
+B/C (1, chunk, N) — with chunk=256, P=64..128, N=64..128 everything
+(inputs + L matrix (chunk x chunk f32) + state scratch) is « 1 MB VMEM.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(
+    x_ref,  # (1, chunk, 1, P)  — dt-weighted input block
+    dt_ref,  # (1, chunk, 1)
+    a_ref,  # (1, 1)            — A value for this head (SMEM)
+    b_ref,  # (1, chunk, N)
+    c_ref,  # (1, chunk, N)
+    y_ref,  # (1, chunk, 1, P)
+    state_scr,  # (P, N) f32 VMEM scratch — inter-chunk recurrent state
+    *,
+    chunk: int,
+):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)  # (cs, P) — already dt-weighted
+    dt = dt_ref[0, :, 0].astype(jnp.float32)  # (cs,)
+    a = a_ref[0, 0]
+    bm = b_ref[0].astype(jnp.float32)  # (cs, N)
+    cm = c_ref[0].astype(jnp.float32)  # (cs, N)
+
+    dA = dt * a  # (cs,) log-decay increments (negative)
+    cum = jnp.cumsum(dA)  # (cs,)
+
+    # intra-chunk: L[i,j] = exp(cum_i - cum_j) for j <= i
+    li = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    lj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    seg = cum[:, None] - cum[None, :]
+    L = jnp.where(li >= lj, jnp.exp(seg), 0.0)  # (cs, cs)
+    scores = jax.lax.dot_general(
+        cm, bm, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (cs, cs) = C B^T
+    y_intra = jax.lax.dot_general(
+        scores * L, x, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (cs, P)
+
+    # inter-chunk: contribution of carried state
+    state_decay = jnp.exp(cum)  # (cs,)
+    y_inter = (
+        jax.lax.dot_general(
+            cm, state_scr[...], (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        * state_decay[:, None]
+    )  # (cs, P)
+
+    y_ref[0, :, 0, :] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    # state update: state' = e^{sum dA} state + X^T (B * decay_to_end)
+    total = cum[chunk - 1]
+    decay_to_end = jnp.exp(total - cum)  # (cs,)
+    upd = jax.lax.dot_general(
+        x, bm * decay_to_end[:, None], (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (P, N)
+    state_scr[...] = state_scr[...] * jnp.exp(total) + upd
+
+
+def ssd_pallas(
+    x: jnp.ndarray,  # (B, S, H, P)
+    dt: jnp.ndarray,  # (B, S, H) post-softplus
+    A: jnp.ndarray,  # (H,) negative
+    Bm: jnp.ndarray,  # (B, S, N)
+    Cm: jnp.ndarray,  # (B, S, N)
+    *,
+    chunk: int = 256,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+
+    xw = (x * dt[..., None]).astype(x.dtype)  # dt-weighted input
+    a2d = A.reshape(H, 1).astype(jnp.float32)
+
+    kernel = functools.partial(_ssd_kernel, chunk=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda b, h, c: (b, c, h)),
+            pl.BlockSpec(
+                (1, 1), lambda b, h, c: (h, 0), memory_space=pltpu.SMEM
+            ),
+            pl.BlockSpec((1, chunk, N), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, h, c: (b, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, 1, P), lambda b, h, c: (b, c, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, S, H, P), x.dtype),
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(xw, dt, a2d, Bm, Cm)

@@ -1,0 +1,250 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("REPRO_DRYRUN_XLA_FLAGS")
+    or "--xla_force_host_platform_device_count=512"
+)
+# ^ MUST run before any other import: jax locks device count on first init.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this AOT-compiles the real step function (train_step for
+training shapes, prefill/decode for serving shapes) against ShapeDtypeStruct
+inputs on the production mesh, then records:
+- memory_analysis()  (fits-per-device evidence)
+- cost_analysis()    (FLOPs / bytes for the roofline)
+- the parsed collective schedule (bytes, op counts, trip-count aware)
+
+Usage:
+  python -m repro.launch.dryrun --arch stablelm-3b --shape train_4k [--multi-pod]
+  python -m repro.launch.dryrun --all [--multi-pod] [--out experiments/dryrun]
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_arch, get_shape
+from repro.core import analysis
+from repro.launch import inputs as inp
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import (
+    Roofline,
+    kernel_hbm_bytes,
+    model_flops,
+    parse_hlo_costs,
+)
+from repro.models.model import Model
+from repro.models.sharding import MeshCtx, shaped_params
+from repro.optim.adamw import adafactor, adamw, cosine_schedule
+from repro.train import train_step as ts
+
+ADAFACTOR_THRESHOLD = 100e9  # params above this use the factored optimizer
+
+
+def pick_optimizer(cfg):
+    if cfg.n_params() > ADAFACTOR_THRESHOLD:
+        return adafactor(cosine_schedule(1e-3, 100, 10000))
+    return adamw(cosine_schedule(3e-4, 100, 10000))
+
+
+def build_cell(arch_id: str, shape_name: str, mesh, plan=None,
+               n_groups: int = analysis.DEFAULT_GROUPS,
+               opt: bool = False, tokens_budget: int = 8192,
+               remat: str = "full"):
+    """Returns (jitted fn, arg structs tuple, model, plan)."""
+    cfg = get_arch(arch_id)
+    shape = get_shape(shape_name)
+    mctx = MeshCtx(mesh)
+    if plan is None:
+        if opt and tokens_budget == 8192:
+            tokens_budget = 32768  # opt default; explicit values win
+        mb = (
+            ts.pick_microbatches(shape.global_batch, shape.seq_len,
+                                 mctx.dp_size, tokens_budget)
+            if shape.kind == "train"
+            else 1
+        )
+        plan = analysis.build_plan(
+            cfg, mesh, n_groups=n_groups, microbatches=mb, optimized=opt,
+            bulk_gather=(None if opt else True), remat=remat,
+        )
+    model = Model(cfg, plan, mesh=mesh)
+    pshapes = jax.eval_shape(model.init, jax.random.key(0))
+    pstructs = shaped_params(pshapes, model.param_specs(), mctx)
+
+    if shape.kind == "train":
+        opt = pick_optimizer(cfg)
+        step = ts.make_train_step(model, opt)
+        oshapes = jax.eval_shape(opt.init, pstructs)
+        ostructs = shaped_params(
+            oshapes, opt.state_specs(model.param_specs()), mctx
+        )
+        batch = inp.batch_specs(cfg, shape, mesh, with_targets=True)
+        fn = jax.jit(step, donate_argnums=(0, 1))
+        return fn, (pstructs, ostructs, batch), model, plan
+    if shape.kind == "prefill":
+        step = ts.make_prefill_step(model)
+        batch = inp.batch_specs(cfg, shape, mesh, with_targets=False)
+        fn = jax.jit(step)
+        return fn, (pstructs, batch), model, plan
+    # decode
+    step = ts.make_decode_step(model)
+    tokens, positions, cache = inp.decode_specs(cfg, shape, mesh, model)
+    fn = jax.jit(step, donate_argnums=(1,))
+    return fn, (pstructs, cache, tokens, positions), model, plan
+
+
+def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
+             out_dir: Optional[str] = None, plan=None, tag: str = "default",
+             verbose: bool = True, mesh=None, opt: bool = False,
+             tokens_budget: int = 8192, remat: str = "full"):
+    if mesh is None:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    cfg = get_arch(arch_id)
+    shape = get_shape(shape_name)
+    t0 = time.time()
+    fn, args, model, plan = build_cell(
+        arch_id, shape_name, mesh, plan=plan, opt=opt,
+        tokens_budget=tokens_budget, remat=remat,
+    )
+    lowered = fn.lower(*args)
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    costs = parse_hlo_costs(compiled.as_text())
+    n_dev = mesh.devices.size
+    mesh_name = (
+        "x".join(str(s) for s in mesh.devices.shape)
+        if mesh.devices.shape not in ((16, 16), (2, 16, 16))
+        else ("2x16x16" if multi_pod else "16x16")
+    )
+    mctx = MeshCtx(mesh)
+    kbytes = kernel_hbm_bytes(
+        cfg, shape, mctx.model_size, mctx.dp_size, plan.microbatches,
+        remat_full=any(u.remat == "full" for u in plan.units),
+    )
+    rl = Roofline(
+        flops_per_dev=costs.flops,
+        bytes_per_dev=costs.bytes_accessed + kbytes,
+        collective_bytes_per_dev=costs.collective_bytes,
+        collective_count=costs.collective_count,
+        n_devices=n_dev,
+        model_flops=model_flops(cfg, shape),
+        overlap=0.0,
+    )
+    rec = {
+        "arch": arch_id,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "tag": tag,
+        "n_devices": n_dev,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_bytes_per_device": mem.argument_size_in_bytes
+            + mem.output_size_in_bytes
+            + mem.temp_size_in_bytes
+            - mem.alias_size_in_bytes,
+        },
+        "cost_analysis_raw": {
+            k: float(v) for k, v in ca.items()
+            if isinstance(v, (int, float)) and k in ("flops", "bytes accessed")
+        },
+        "hlo_costs": {
+            "flops_per_dev": costs.flops,
+            "bytes_per_dev": costs.bytes_accessed,
+            "kernel_ref_bytes_excluded": costs.kernel_ref_bytes,
+            "kernel_hbm_bytes_added": kbytes,
+        },
+        "collectives": {
+            "bytes_by_op": costs.coll_bytes,
+            "count_by_op": costs.coll_count,
+            "total_bytes": costs.collective_bytes,
+            "schedule": costs.describe_collectives(),
+        },
+        "roofline": rl.row(),
+        "model_flops": rl.model_flops,
+        "plan": plan.describe(),
+    }
+    if verbose:
+        peak = rec["memory"]["peak_bytes_per_device"] / 2**30
+        print(
+            f"[dryrun] {arch_id} x {shape_name} x {rec['mesh']} ({tag}): "
+            f"compile {t_compile:.0f}s, peak {peak:.2f} GiB/dev, "
+            f"t_step {rl.t_step*1e3:.2f} ms, bottleneck {rl.bottleneck}, "
+            f"roofline {rl.roofline_fraction:.2%}"
+        )
+        print(f"  memory_analysis: {mem}")
+        print(f"  collective schedule: {costs.describe_collectives()}")
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        fname = f"{arch_id}_{shape_name}_{rec['mesh']}_{tag}.json"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--tag", default="default")
+    ap.add_argument("--archs", help="comma-separated subset for --all")
+    ap.add_argument("--opt", action="store_true",
+                    help="beyond-paper optimized profile (§Perf)")
+    ap.add_argument("--tokens-budget", type=int, default=8192)
+    ap.add_argument("--remat", default="full",
+                    choices=["none", "dots", "full"])
+    ap.add_argument("--mesh-shape", default=None,
+                    help="custom logical mesh over the same chips, e.g. 64x4")
+    args = ap.parse_args()
+    mesh = None
+    if args.mesh_shape:
+        from repro.launch.mesh import make_mesh_shape
+
+        mesh = make_mesh_shape(args.mesh_shape)
+
+    if args.all:
+        failures = []
+        arch_list = args.archs.split(",") if args.archs else list(ARCH_IDS)
+        meshes = [False, True] if args.both_meshes else [args.multi_pod]
+        for aid in arch_list:
+            cfg = get_arch(aid)
+            for shape in cfg.shapes():
+                for mp in meshes:
+                    try:
+                        run_cell(aid, shape.name, mp, out_dir=args.out,
+                                 tag=args.tag, opt=args.opt,
+                                 tokens_budget=args.tokens_budget,
+                                 remat=args.remat, mesh=mesh)
+                    except Exception as e:  # noqa: BLE001
+                        failures.append((aid, shape.name, mp, repr(e)))
+                        traceback.print_exc()
+        if failures:
+            print(f"FAILED cells: {failures}")
+            raise SystemExit(1)
+        print("all cells passed")
+        return
+    run_cell(args.arch, args.shape, args.multi_pod, out_dir=args.out,
+             tag=args.tag, opt=args.opt, tokens_budget=args.tokens_budget,
+             remat=args.remat, mesh=mesh)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every model input.
+
+Weak-type-correct, shardable, no device allocation — the AOT dry-run lowers
+against these. Frontend stubs per assignment: [audio] provides frame
+embeddings, [vlm] provides patch embeddings.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models.model import Model
+from repro.models.sharding import MeshCtx
+
+
+def _sds(mctx: MeshCtx, shape, dtype, spec: P):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=mctx.sharding(spec))
+
+
+def batch_specs(
+    cfg: ArchConfig, shape: ShapeConfig, mesh, *, with_targets: bool
+) -> Dict[str, Any]:
+    mctx = MeshCtx(mesh)
+    B, S = shape.global_batch, shape.seq_len
+    b = mctx.batch_entry(B)
+    out: Dict[str, Any] = {}
+    if cfg.family == "encoder":
+        out["frames"] = _sds(
+            mctx, (B, S, cfg.d_model), jnp.bfloat16, P(b, None, None)
+        )
+    elif cfg.family == "vlm":
+        pv = cfg.frontend_positions
+        out["tokens"] = _sds(mctx, (B, S - pv), jnp.int32, P(b, None))
+        out["vision"] = _sds(
+            mctx, (B, pv, cfg.d_model), jnp.bfloat16, P(b, None, None)
+        )
+    else:
+        out["tokens"] = _sds(mctx, (B, S), jnp.int32, P(b, None))
+    if with_targets:
+        tgt_len = S - cfg.frontend_positions if cfg.family == "vlm" else S
+        out["targets"] = _sds(mctx, (B, tgt_len), jnp.int32, P(b, None))
+    return out
+
+
+def decode_specs(cfg: ArchConfig, shape: ShapeConfig, mesh, model: Model):
+    """(tokens, positions, cache) structs for one decode step vs a full
+    seq_len context."""
+    mctx = MeshCtx(mesh)
+    B, S = shape.global_batch, shape.seq_len
+    b = mctx.batch_entry(B)
+    tokens = _sds(mctx, (B, 1), jnp.int32, P(b, None))
+    positions = _sds(mctx, (B, 1), jnp.int32, P(b, None))
+    cache = model.cache_shape_structs(B, S)
+    return tokens, positions, cache

@@ -1,0 +1,174 @@
+import os
+
+os.environ.setdefault(
+    "XLA_FLAGS", "--xla_force_host_platform_device_count=512"
+)
+
+"""Dry-run profiler: rank a compiled cell's HLO ops by trip-weighted bytes.
+
+This is the container's stand-in for a TPU trace: it shows WHERE the
+roofline's memory/collective terms come from, per op kind and per source
+line, so §Perf hypotheses target the real dominators.
+
+  PYTHONPATH=src python -m repro.launch.profile_cell \
+      --arch stablelm-3b --shape train_4k [--opt] [--top 30]
+"""
+import argparse
+import collections
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+from repro.launch.roofline import (
+    _CONST_RE,
+    _DEF_RE,
+    _ELEMENTWISE,
+    _OPND_RE,
+    _WHILE_RE,
+    _dims,
+    _nbytes,
+)
+
+_METADATA_RE = re.compile(r'op_name="([^"]*)"')
+
+
+@dataclasses.dataclass
+class OpCost:
+    kind: str
+    name: str
+    bytes: float
+    trips: float
+    op_name: str = ""
+
+    @property
+    def total(self) -> float:
+        return self.bytes * self.trips
+
+
+def profile_text(hlo_text: str, top: int = 30):
+    lines = hlo_text.splitlines()
+    symbols: Dict[str, Tuple[str, Tuple[int, ...]]] = {}
+    for ln in lines:
+        m = _DEF_RE.match(ln)
+        if m:
+            symbols[m.group(1)] = (m.group(2), _dims(m.group(3)))
+
+    comps: Dict[str, List[str]] = {}
+    entry: Optional[str] = None
+    cur: Optional[str] = None
+    for ln in lines:
+        s = ln.rstrip()
+        if cur is None:
+            if s.endswith("{") and ("->" in s or s.startswith("ENTRY")):
+                name = s.split("(")[0].strip().lstrip("ENTRY ").strip().lstrip("%")
+                cur = name
+                comps[cur] = []
+                if s.startswith("ENTRY"):
+                    entry = cur
+        else:
+            if s.strip() == "}":
+                cur = None
+            else:
+                comps[cur].append(s.strip())
+
+    # computation -> trip multiplier, resolved from the while nest
+    trip_of: Dict[str, float] = {c: 0.0 for c in comps}
+    whiles: Dict[str, List[Tuple[str, str]]] = {
+        c: [_WHILE_RE.search(l).groups() for l in body if _WHILE_RE.search(l)]
+        for c, body in comps.items()
+    }
+
+    def cond_trip(cond: str) -> int:
+        consts = []
+        for ln in comps.get(cond, []):
+            consts += [int(x) for x in _CONST_RE.findall(ln)]
+        return max(consts) if consts else 1
+
+    def walk(name: str, mult: float, depth=0):
+        if depth > 24:
+            return
+        trip_of[name] = trip_of.get(name, 0.0) + mult
+        for cond, body in whiles.get(name, []):
+            walk(body, mult * cond_trip(cond), depth + 1)
+
+    if entry:
+        walk(entry, 1.0)
+
+    ops: List[OpCost] = []
+    for cname, body in comps.items():
+        mult = trip_of.get(cname, 0.0)
+        if mult <= 0:
+            continue
+        for ln in body:
+            md = _DEF_RE.match(ln)
+            if not md:
+                continue
+            if any(f" {t}(" in ln for t in (
+                "tuple", "get-tuple-element", "parameter", "bitcast",
+                "constant")):
+                continue
+            out_bytes = _nbytes(md.group(2), _dims(md.group(3)))
+            kind = ln.split("=", 1)[1].strip().split("(")[0].split()[-1]
+            if kind in ("dynamic-update-slice", "scatter"):
+                argpart = ln.split("(", 1)[1] if "(" in ln else ""
+                opnds = _OPND_RE.findall(argpart)
+                b = sum(
+                    _nbytes(*symbols[o]) for o in opnds[1:2] if o in symbols
+                )
+            elif kind in _ELEMENTWISE:
+                b = out_bytes
+            else:
+                b = out_bytes
+                argpart = ln.split("(", 1)[1] if "(" in ln else ""
+                for o in _OPND_RE.findall(argpart)[:8]:
+                    if o in symbols:
+                        b += _nbytes(*symbols[o])
+            mm = _METADATA_RE.search(ln)
+            kernel_ref = "KERNEL_" in ln
+            shape = f"{md.group(2)}[{md.group(3)}]"
+            name = (mm.group(1) if mm else "") or ""
+            ops.append(OpCost(
+                "KERNEL_ref/" + kind if kernel_ref else kind,
+                md.group(1), b, mult, f"{shape} {name}",
+            ))
+
+    by_kind = collections.Counter()
+    for o in ops:
+        by_kind[o.kind] += o.total
+    return ops, by_kind
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--opt", action="store_true")
+    ap.add_argument("--remat", default="full")
+    ap.add_argument("--tokens-budget", type=int, default=8192)
+    ap.add_argument("--top", type=int, default=30)
+    args = ap.parse_args()
+
+    from repro.launch import dryrun
+    from repro.launch.mesh import make_production_mesh
+
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    fn, fargs, model, plan = dryrun.build_cell(
+        args.arch, args.shape, mesh, opt=args.opt, remat=args.remat,
+        tokens_budget=args.tokens_budget,
+    )
+    compiled = fn.lower(*fargs).compile()
+    ops, by_kind = profile_text(compiled.as_text(), args.top)
+
+    print(f"== bytes by op kind ({args.arch} x {args.shape}"
+          f"{' opt' if args.opt else ''}) ==")
+    for kind, b in by_kind.most_common(20):
+        print(f"  {kind:28s} {b/2**30:10.2f} GiB")
+    print(f"\n== top {args.top} ops by trip-weighted bytes ==")
+    for o in sorted(ops, key=lambda o: -o.total)[: args.top]:
+        tag = ".." + o.op_name[-88:] if len(o.op_name) > 90 else o.op_name
+        print(f"  {o.total/2**30:9.2f} GiB  x{o.trips:<5.0f} {o.kind:22s} {tag}")
+
+
+if __name__ == "__main__":
+    main()

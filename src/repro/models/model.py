@@ -1,0 +1,677 @@
+"""Model assembly: groups of scanned layers driven by an ExecutionPlan.
+
+One ``Model`` serves every assigned architecture family:
+- dense / vlm / encoder: [attn + mlp] layer groups
+- moe:                   [attn + moe] layer groups
+- ssm:                   [ssd] layer groups
+- hybrid:                [ssd] groups + a SHARED attn+mlp block applied
+                         between groups (Zamba2-style, weights reused)
+- gemma2 local/global:   layers scanned as (local, global) PAIRS so the
+                         local layers can keep windowed KV caches
+
+Layers inside a group are stacked and executed with ``lax.scan`` (compile
+time independent of depth); the plan's remat policy wraps the scan body.
+
+Modes: ``train`` (loss-ready logits), ``prefill`` (logits + assembled decode
+cache), ``decode`` (one token against the cache).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.core.plan import ExecutionPlan, UnitPlan
+from repro.models import layers as L
+from repro.models import mamba
+from repro.models import moe as moe_mod
+from repro.models.sharding import MODEL_AXIS, MeshCtx
+
+RING_SIZE = 128  # decode ring length for seq-sharded-main caches
+DECODE_MARGIN = 128  # extra slots past the prefilled context
+
+
+def padded_vocab(cfg: ArchConfig) -> int:
+    return -(-cfg.vocab // 512) * 512
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupDef:
+    name: str
+    kind: str  # "attn_mlp" | "attn_moe" | "ssd" | "pair_local_global"
+    n_layers: int  # layers (or layer-pairs) stacked in this group
+    unit_names: Tuple[str, ...]
+
+
+def make_groups(cfg: ArchConfig, plan: ExecutionPlan) -> List[GroupDef]:
+    """Derive group structure from the plan's unit names."""
+    names = [u.name for u in plan.units]
+    g_ids = sorted({int(n.split("/")[0][1:]) for n in names if n.startswith("g")})
+    G = len(g_ids)
+    groups: List[GroupDef] = []
+    if cfg.family in ("ssm", "hybrid"):
+        if cfg.family == "hybrid":
+            per = cfg.hybrid_attn_every
+            sizes = []
+            left = cfg.n_layers
+            while left > 0:
+                sizes.append(min(per, left))
+                left -= per
+            assert len(sizes) == G, (sizes, G)
+        else:
+            sizes = [
+                cfg.n_layers // G + (1 if i < cfg.n_layers % G else 0)
+                for i in range(G)
+            ]
+        for i, sz in enumerate(sizes):
+            groups.append(GroupDef(f"g{i}", "ssd", sz, (f"g{i}/ssd",)))
+        return groups
+
+    pairs = cfg.local_global_pattern
+    total = cfg.n_layers // 2 if pairs else cfg.n_layers
+    kind = (
+        "pair_local_global"
+        if pairs
+        else ("attn_moe" if cfg.moe is not None else "attn_mlp")
+    )
+    sizes = [total // G + (1 if i < total % G else 0) for i in range(G)]
+    ffn_tag = "moe" if cfg.moe is not None else "ffn"
+    for i, sz in enumerate(sizes):
+        groups.append(GroupDef(f"g{i}", kind, sz, (f"g{i}/attn", f"g{i}/{ffn_tag}")))
+    return groups
+
+
+class Model:
+    def __init__(
+        self,
+        cfg: ArchConfig,
+        plan: ExecutionPlan,
+        mesh=None,
+        interpret: bool = False,
+    ):
+        self.cfg = cfg
+        self.plan = plan
+        self.mctx = MeshCtx(mesh)
+        self.interpret = interpret
+        self.groups = make_groups(cfg, plan)
+        self.vp = padded_vocab(cfg)
+
+    def _units(self, g: GroupDef) -> Tuple[UnitPlan, UnitPlan]:
+        ua = self.plan.get(f"{g.name}/attn") or self.plan.get(f"{g.name}/ssd")
+        uf = self.plan.get(f"{g.name}/ffn") or self.plan.get(f"{g.name}/moe") or ua
+        return ua, uf
+
+    # ------------------------------------------------------------------
+    # parameter init / specs
+    # ------------------------------------------------------------------
+    def _layer_init(self, rng, kind: str):
+        cfg = self.cfg
+        if kind == "ssd":
+            return {"ssd": mamba.ssd_init(rng, cfg)}
+        k1, k2 = jax.random.split(rng, 2)
+        p: Dict[str, Any] = {
+            "norm_attn": L.norm_init(cfg.d_model),
+            "norm_ffn": L.norm_init(cfg.d_model),
+            "attn": L.attention_init(k1, cfg),
+        }
+        if cfg.sandwich_norms:
+            p["norm_attn_post"] = L.norm_init(cfg.d_model)
+            p["norm_ffn_post"] = L.norm_init(cfg.d_model)
+        if kind == "attn_moe":
+            p["moe"] = moe_mod.moe_init(k2, cfg)
+        else:
+            p["mlp"] = L.mlp_init(k2, cfg)
+        return p
+
+    def _layer_specs(self, kind: str, ua: UnitPlan, uf: UnitPlan):
+        cfg, mctx = self.cfg, self.mctx
+        if kind == "ssd":
+            return {"ssd": mamba.ssd_specs(cfg, mctx, ua)}
+        s: Dict[str, Any] = {
+            "norm_attn": L.norm_specs(),
+            "norm_ffn": L.norm_specs(),
+            "attn": L.attention_specs(cfg, mctx, ua),
+        }
+        if cfg.sandwich_norms:
+            s["norm_attn_post"] = L.norm_specs()
+            s["norm_ffn_post"] = L.norm_specs()
+        if kind == "attn_moe":
+            s["moe"] = moe_mod.moe_specs(cfg, mctx, uf)
+        else:
+            s["mlp"] = L.mlp_specs(cfg, mctx, uf)
+        return s
+
+    def init(self, rng) -> Dict[str, Any]:
+        cfg = self.cfg
+        keys = jax.random.split(rng, len(self.groups) + 4)
+        params: Dict[str, Any] = {}
+        if cfg.family != "encoder":
+            params["embed"] = {
+                "table": jax.random.normal(keys[-1], (self.vp, cfg.d_model), jnp.float32)
+                * cfg.d_model**-0.5
+            }
+        for gi, g in enumerate(self.groups):
+            n = g.n_layers
+            subs = (
+                [("local", "attn_mlp"), ("global", "attn_mlp")]
+                if g.kind == "pair_local_global"
+                else [("layers", g.kind)]
+            )
+            sub = {}
+            for which, kind in subs:
+                lrngs = jax.random.split(
+                    jax.random.fold_in(keys[gi], hash(which) % 2**31), n
+                )
+                sub[which] = jax.vmap(lambda r: self._layer_init(r, kind))(lrngs)
+            params[g.name] = sub
+        if cfg.family == "hybrid":
+            k1, k2 = jax.random.split(keys[-2])
+            params["shared"] = {
+                "norm_attn": L.norm_init(cfg.d_model),
+                "norm_ffn": L.norm_init(cfg.d_model),
+                "attn": L.attention_init(k1, cfg),
+                "mlp": L.mlp_init(k2, cfg),
+            }
+        params["final_norm"] = L.norm_init(cfg.d_model)
+        if cfg.family == "encoder" or not cfg.tie_embeddings:
+            params["unembed"] = {
+                "kernel": jax.random.normal(keys[-3], (cfg.d_model, self.vp), jnp.float32)
+                * cfg.d_model**-0.5
+            }
+        return params
+
+    def param_specs(self) -> Dict[str, Any]:
+        cfg, mctx = self.cfg, self.mctx
+        specs: Dict[str, Any] = {}
+        if cfg.family != "encoder":
+            specs["embed"] = {"table": P(mctx.model_entry(self.vp), None)}
+        for g in self.groups:
+            ua, uf = self._units(g)
+            kind = "attn_mlp" if g.kind == "pair_local_global" else g.kind
+            ls = self._layer_specs(kind, ua, uf)
+            stacked = jax.tree.map(lambda s: P(None, *s), ls)
+            if g.kind == "pair_local_global":
+                specs[g.name] = {"local": stacked, "global": stacked}
+            else:
+                specs[g.name] = {"layers": stacked}
+        if cfg.family == "hybrid":
+            ua = self.plan.unit("shared/attn")
+            uf = self.plan.unit("shared/ffn")
+            specs["shared"] = {
+                "norm_attn": L.norm_specs(),
+                "norm_ffn": L.norm_specs(),
+                "attn": L.attention_specs(cfg, mctx, ua),
+                "mlp": L.mlp_specs(cfg, mctx, uf),
+            }
+        specs["final_norm"] = L.norm_specs()
+        if cfg.family == "encoder" or not cfg.tie_embeddings:
+            ue = self.plan.get("unembed")
+            off = ue.offload if ue else True
+            specs["unembed"] = {
+                "kernel": P(None, mctx.model_entry(self.vp) if off else None)
+            }
+        return specs
+
+    # ------------------------------------------------------------------
+    # forward pieces
+    # ------------------------------------------------------------------
+    def _embed(self, params, batch):
+        cfg, mctx = self.cfg, self.mctx
+        if cfg.family == "encoder":
+            x = batch["frames"].astype(L.COMPUTE_DTYPE)
+        else:
+            table = params["embed"]["table"]
+            ue = self.plan.get("embed")
+            if ue is not None and not ue.offload:
+                table = mctx.wsc(table, None, None)
+            x = jnp.take(table, batch["tokens"], axis=0).astype(L.COMPUTE_DTYPE)
+            if cfg.family == "vlm" and "vision" in batch:
+                x = jnp.concatenate(
+                    [batch["vision"].astype(L.COMPUTE_DTYPE), x], axis=1
+                )
+        if cfg.scale_embed:
+            x = x * jnp.asarray(cfg.d_model**0.5, L.COMPUTE_DTYPE)
+        return x
+
+    def _logits(self, params, x):
+        cfg = self.cfg
+        if cfg.family != "encoder" and cfg.tie_embeddings:
+            w = params["embed"]["table"]
+            logits = jnp.einsum(
+                "bsd,vd->bsv", x, w.astype(L.COMPUTE_DTYPE),
+                preferred_element_type=jnp.float32,
+            )
+        else:
+            w = params["unembed"]["kernel"]
+            logits = jnp.einsum(
+                "bsd,dv->bsv", x, w.astype(L.COMPUTE_DTYPE),
+                preferred_element_type=jnp.float32,
+            )
+        if cfg.final_logit_softcap > 0:
+            c = cfg.final_logit_softcap
+            logits = c * jnp.tanh(logits / c)
+        if self.vp > cfg.vocab:
+            mask = jnp.arange(self.vp) < cfg.vocab
+            logits = jnp.where(mask[None, None, :], logits, -1e30)
+        b = self.mctx.batch_entry(x.shape[0])
+        ue = self.plan.get("unembed")
+        ve = self.mctx.model_entry(self.vp) if (ue is None or ue.offload) else None
+        return self.mctx.wsc(logits, b, None, ve)
+
+    def _res_entries(self, batch_size: int, seq: int):
+        """Residual stream constraint ('data present' analogue)."""
+        b = self.mctx.batch_entry(batch_size)
+        sharded = all(u.offload and u.keep_sharded for u in self.plan.units)
+        seq_e = MODEL_AXIS if (sharded and self.mctx.shardable(seq)) else None
+        return (b, seq_e, None)
+
+    def _apply_block(self, lp, x, ua, uf, positions, is_local, cache, kind, mode):
+        """One (attention + ffn) or ssd layer. Returns (x, new_cache, aux)."""
+        cfg, mctx = self.cfg, self.mctx
+        aux = jnp.zeros((), jnp.float32)
+        if kind == "ssd":
+            h, new_cache = mamba.ssd_apply(
+                lp["ssd"], x, cfg, mctx, ua, cache=cache,
+                return_cache=(mode == "prefill"), interpret=self.interpret,
+            )
+            return x + h, new_cache, aux
+        h = L.rms_norm(x, lp["norm_attn"]["scale"], cfg.norm_eps)
+        a, new_cache = L.attention_apply(
+            lp["attn"], h, cfg, mctx, ua, positions,
+            is_local=is_local, cache=cache,
+            return_kv=(mode == "prefill"), interpret=self.interpret,
+        )
+        if cfg.sandwich_norms:
+            a = L.rms_norm(a, lp["norm_attn_post"]["scale"], cfg.norm_eps)
+        x = x + a
+        h = L.rms_norm(x, lp["norm_ffn"]["scale"], cfg.norm_eps)
+        if kind == "attn_moe":
+            f, aux = moe_mod.moe_apply(lp["moe"], h, cfg, mctx, uf)
+        else:
+            f = L.mlp_apply(lp["mlp"], h, cfg, mctx, uf, act=cfg.act)
+        if cfg.sandwich_norms:
+            f = L.rms_norm(f, lp["norm_ffn_post"]["scale"], cfg.norm_eps)
+        return x + f, new_cache, aux
+
+    def _bulk_gather(self, gp, gspecs, ua: UnitPlan, uf: UnitPlan):
+        """Coalesced FSDP gather of a whole group's stacked weights
+        (multi-file bulk `data copy` analogue)."""
+        if self.mctx.mesh is None:
+            return gp
+
+        def gather(tree, specs, unit):
+            if not unit.bulk_gather:
+                return tree
+
+            def g(w, s):
+                if unit.offload:
+                    ent = [e if e == MODEL_AXIS else None for e in s]
+                else:
+                    ent = [None] * len(s)
+                # gather in compute dtype: halves the collective bytes
+                w = w.astype(L.COMPUTE_DTYPE) if w.dtype == jnp.float32 else w
+                return self.mctx.wsc(w, *ent)
+
+            return jax.tree.map(g, tree, specs)
+
+        out = {}
+        for key in gp:
+            unit = uf if key in ("mlp", "moe") else ua
+            out[key] = gather(gp[key], gspecs[key], unit)
+        return out
+
+    def gather_params(self, params):
+        """Hoisted bulk 'data copy' (§Perf): gather every offloaded group's
+        weights to compute dtype ONCE — called inside the differentiated
+        step but OUTSIDE the microbatch loop, so the FSDP all-gather runs
+        once per step and its transpose (the gradient reduce-scatter) also
+        runs once, instead of once per microbatch. The exact framework-level
+        analogue of the paper hoisting CPU-GPU copies out of inner loops."""
+        out = dict(params)
+        for g in self.groups:
+            ua, uf = self._units(g)
+            kind = "attn_mlp" if g.kind == "pair_local_global" else g.kind
+            gspecs = jax.tree.map(
+                lambda s: P(None, *s), self._layer_specs(kind, ua, uf)
+            )
+            if g.kind == "pair_local_global":
+                out[g.name] = {
+                    w: self._bulk_gather(params[g.name][w], gspecs, ua, uf)
+                    for w in ("local", "global")
+                }
+            else:
+                out[g.name] = {
+                    "layers": self._bulk_gather(
+                        params[g.name]["layers"], gspecs, ua, uf
+                    )
+                }
+        return out
+
+    def _run_group(self, g: GroupDef, params, x, positions, cache_g, mode):
+        ua, uf = self._units(g)
+        kind = "attn_mlp" if g.kind == "pair_local_global" else g.kind
+        gspecs = jax.tree.map(
+            lambda s: P(None, *s), self._layer_specs(kind, ua, uf)
+        )
+
+        def one(xc, lp, is_local, cache_l):
+            return self._apply_block(
+                lp, xc, ua, uf, positions, is_local, cache_l, kind, mode
+            )
+
+        remat = max(
+            (u.remat for u in (ua, uf)),
+            key=lambda r: ["none", "dots", "full"].index(r),
+        )
+
+        def wrap(fn):
+            if remat == "none" or mode != "train":
+                return fn
+            policy = (
+                jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                if remat == "dots"
+                else None
+            )
+            return jax.checkpoint(fn, policy=policy)
+
+        if g.kind == "pair_local_global":
+            loc_p = self._bulk_gather(params[g.name]["local"], gspecs, ua, uf)
+            glo_p = self._bulk_gather(params[g.name]["global"], gspecs, ua, uf)
+            if mode == "decode":
+
+                def body(xc, xs):
+                    lp_l, lp_g, c_l, c_g = xs
+                    x1, nc_l, a1 = one(xc, lp_l, True, c_l)
+                    x2, nc_g, a2 = one(x1, lp_g, False, c_g)
+                    return x2, ({"local": nc_l, "global": nc_g}, a1 + a2)
+
+                x, (nc, auxs) = jax.lax.scan(
+                    body, x, (loc_p, glo_p, cache_g["local"], cache_g["global"])
+                )
+                return x, nc, auxs.sum()
+
+            def body(xc, xs):
+                lp_l, lp_g = xs
+                x1, nc_l, a1 = one(xc, lp_l, True, None)
+                x2, nc_g, a2 = one(x1, lp_g, False, None)
+                kv = (
+                    {"local": nc_l, "global": nc_g}
+                    if mode == "prefill"
+                    else 0.0
+                )
+                return x2, (kv, a1 + a2)
+
+            x, (kvs, auxs) = jax.lax.scan(wrap(body), x, (loc_p, glo_p))
+            return x, (kvs if mode == "prefill" else None), auxs.sum()
+
+        gp = self._bulk_gather(params[g.name]["layers"], gspecs, ua, uf)
+
+        if mode == "decode":
+
+            def body(xc, xs):
+                lp, c_l = xs
+                x2, nc, a = one(xc, lp, False, c_l)
+                return x2, (nc, a)
+
+            x, (ncache, auxs) = jax.lax.scan(body, x, (gp, cache_g))
+            return x, ncache, auxs.sum()
+
+        def body(xc, lp):
+            x2, nc, a = one(xc, lp, False, None)
+            return x2, ((nc if mode == "prefill" else 0.0), a)
+
+        x, (kvs, auxs) = jax.lax.scan(wrap(body), x, gp)
+        return x, (kvs if mode == "prefill" else None), auxs.sum()
+
+    def _shared_block(self, params, x, positions, cache, mode):
+        """Hybrid (Zamba2) shared attention+MLP block; weights reused."""
+        cfg, mctx = self.cfg, self.mctx
+        ua = self.plan.unit("shared/attn")
+        uf = self.plan.unit("shared/ffn")
+        sp = params["shared"]
+        h = L.rms_norm(x, sp["norm_attn"]["scale"], cfg.norm_eps)
+        a, new_cache = L.attention_apply(
+            sp["attn"], h, cfg, mctx, ua, positions, cache=cache,
+            return_kv=(mode == "prefill"), interpret=self.interpret,
+        )
+        x = x + a
+        h = L.rms_norm(x, sp["norm_ffn"]["scale"], cfg.norm_eps)
+        x = x + L.mlp_apply(sp["mlp"], h, cfg, mctx, uf, act=cfg.act)
+        return x, new_cache
+
+    # ------------------------------------------------------------------
+    # public entry points
+    # ------------------------------------------------------------------
+    def forward(self, params, batch, cache=None, mode: str = "train"):
+        """Returns (logits, raw_caches, aux)."""
+        cfg = self.cfg
+        x = self._embed(params, batch)
+        B, S, _ = x.shape
+        if mode == "decode":
+            positions = batch["positions"]
+        else:
+            positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        res = self._res_entries(B, S)
+        x = self.mctx.wsc(x, *res)
+
+        aux_total = jnp.zeros((), jnp.float32)
+        caches: Dict[str, Any] = {}
+        shared_i = 0
+        for g in self.groups:
+            cg = cache.get(g.name) if cache is not None else None
+            x, ncg, aux = self._run_group(g, params, x, positions, cg, mode)
+            x = self.mctx.wsc(x, *res)
+            aux_total = aux_total + aux
+            if ncg is not None:
+                caches[g.name] = ncg
+            if cfg.family == "hybrid":
+                key = f"shared{shared_i}"
+                sc = cache.get(key) if cache is not None else None
+                x, nsc = self._shared_block(params, x, positions, sc, mode)
+                x = self.mctx.wsc(x, *res)
+                if nsc is not None:
+                    caches[key] = nsc
+                shared_i += 1
+        x = L.rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+        logits = self._logits(params, x)
+        return logits, caches, aux_total
+
+    def loss(self, params, batch):
+        cfg = self.cfg
+        logits, _, aux = self.forward(params, batch, mode="train")
+        targets = batch["targets"]
+        if cfg.family == "vlm" and cfg.frontend_positions:
+            pad = jnp.full(
+                (targets.shape[0], cfg.frontend_positions), -1, targets.dtype
+            )
+            targets = jnp.concatenate([pad, targets], axis=1)
+        mask = (targets >= 0).astype(jnp.float32)
+        tclip = jnp.maximum(targets, 0)
+        logits = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        # gather-free label pick: GSPMD-friendly on vocab-sharded logits
+        iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+        picked = jnp.sum(
+            jnp.where(iota == tclip[..., None], logits, 0.0), axis=-1
+        )
+        nll = (lse - picked) * mask
+        denom = jnp.maximum(mask.sum(), 1.0)
+        loss = nll.sum() / denom + 0.01 * aux
+        return loss, {"nll": nll.sum() / denom, "aux": aux}
+
+    def prefill(self, params, batch, ctx_len: Optional[int] = None):
+        """Full-context forward; returns (last_logits, assembled cache)."""
+        logits, raw, _ = self.forward(params, batch, mode="prefill")
+        S = logits.shape[1]
+        ctx_len = ctx_len or S
+        cache = self._assemble_cache(raw, ctx_len)
+        return logits[:, -1], cache
+
+    def decode_step(self, params, cache, tokens, positions):
+        """tokens (B,1), positions (B,1) -> (logits (B, vp), new cache)."""
+        batch = {"tokens": tokens, "positions": positions}
+        logits, ncache, _ = self.forward(params, batch, cache=cache, mode="decode")
+        return logits[:, -1], ncache
+
+    # ------------------------------------------------------------------
+    # caches
+    # ------------------------------------------------------------------
+    def _attn_cache_kind(self) -> str:
+        """direct | ring — the ring holds new tokens when kv heads cannot
+        shard over the model axis and the main cache is seq-sharded."""
+        if self.mctx.mesh is None or self.mctx.shardable(self.cfg.kv_heads):
+            return "direct"
+        return "ring"
+
+    def _attn_cache_template(self, n: int, batch: int, ctx_len: int, window: int):
+        cfg, mctx = self.cfg, self.mctx
+        K, hd = cfg.kv_heads, cfg.resolved_head_dim
+        b = mctx.batch_entry(batch)
+        lead = (n,) if n else ()
+        lp = (None,) if n else ()
+
+        def kv(slen, seq_entry, head_entry):
+            shape = lead + (batch, slen, K, hd)
+            return (shape, L.COMPUTE_DTYPE, P(*lp, b, seq_entry, head_entry, None))
+
+        he = mctx.model_entry(K)
+        if window > 0 and ctx_len >= window:
+            t = kv(window, None, he)  # rotating sliding-window cache
+            return {"k": t, "v": t}
+        if self._attn_cache_kind() == "direct":
+            t = kv(ctx_len + DECODE_MARGIN, None, he)
+            return {"k": t, "v": t}
+        main = kv(ctx_len, MODEL_AXIS if mctx.shardable(ctx_len) else None, None)
+        ring = kv(RING_SIZE, None, None)
+        return {"k": main, "v": main, "k_ring": ring, "v_ring": ring}
+
+    def cache_template(self, batch: int, ctx_len: int):
+        """Pytree of (shape, dtype, spec) leaves describing the decode cache."""
+        cfg, mctx = self.cfg, self.mctx
+        tmpl: Dict[str, Any] = {}
+        for g in self.groups:
+            if g.kind == "ssd":
+                shapes = mamba.ssd_cache_shapes(cfg, batch)
+                specs = mamba.ssd_cache_specs(cfg, mctx, batch)
+                tmpl[g.name] = {
+                    k: (
+                        (g.n_layers,) + shapes[k][0],
+                        shapes[k][1],
+                        P(None, *specs[k]),
+                    )
+                    for k in shapes
+                }
+            elif g.kind == "pair_local_global":
+                tmpl[g.name] = {
+                    "local": self._attn_cache_template(
+                        g.n_layers, batch, ctx_len, cfg.local_window
+                    ),
+                    "global": self._attn_cache_template(
+                        g.n_layers, batch, ctx_len, 0
+                    ),
+                }
+            else:
+                tmpl[g.name] = self._attn_cache_template(
+                    g.n_layers, batch, ctx_len, 0
+                )
+        if cfg.family == "hybrid":
+            for i in range(len(self.groups)):
+                tmpl[f"shared{i}"] = self._attn_cache_template(
+                    0, batch, ctx_len, 0
+                )
+        return tmpl
+
+    @staticmethod
+    def _is_tmpl_leaf(v):
+        return isinstance(v, tuple) and len(v) == 3 and isinstance(v[0], tuple)
+
+    def cache_specs(self, batch: int, ctx_len: int):
+        return jax.tree.map(
+            lambda leaf: leaf[2],
+            self.cache_template(batch, ctx_len),
+            is_leaf=self._is_tmpl_leaf,
+        )
+
+    def cache_shape_structs(self, batch: int, ctx_len: int):
+        def mk(leaf):
+            shape, dt, spec = leaf
+            return jax.ShapeDtypeStruct(shape, dt, sharding=self.mctx.sharding(spec))
+
+        return jax.tree.map(
+            mk, self.cache_template(batch, ctx_len), is_leaf=self._is_tmpl_leaf
+        )
+
+    def init_cache(self, batch: int, ctx_len: int):
+        def mk(leaf):
+            shape, dt, spec = leaf
+            return self.mctx.wsc(jnp.zeros(shape, dt), *tuple(spec))
+
+        return jax.tree.map(
+            mk, self.cache_template(batch, ctx_len), is_leaf=self._is_tmpl_leaf
+        )
+
+    def _assemble_attn_cache(self, kv, tmpl):
+        """kv: {"k","v"} stacked (n?, B, S, K, hd) from prefill; tmpl leaves."""
+
+        def fill(src, leaf):
+            shape, dt, spec = leaf
+            slen = shape[-3]
+            S = src.shape[-3]
+            if slen == S:
+                out = src
+            elif slen > S:
+                pad = [(0, 0)] * src.ndim
+                pad[-3] = (0, slen - S)
+                out = jnp.pad(src, pad)
+            else:  # sliding window: keep last `slen`, rotated to slot = pos % W
+                tail = jax.lax.slice_in_dim(src, S - slen, S, axis=src.ndim - 3)
+                slots = np.arange(S - slen, S) % slen
+                inv = np.argsort(slots)
+                out = jnp.take(tail, jnp.asarray(inv), axis=src.ndim - 3)
+            return self.mctx.wsc(out.astype(dt), *tuple(spec))
+
+        out = {}
+        for key in tmpl:
+            if key.endswith("_ring"):
+                shape, dt, spec = tmpl[key]
+                out[key] = self.mctx.wsc(jnp.zeros(shape, dt), *tuple(spec))
+            else:
+                out[key] = fill(kv[key], tmpl[key])
+        return out
+
+    def _assemble_cache(self, raw, ctx_len: int):
+        """Map prefill-collected kv/state trees into the decode cache layout."""
+        tmpl = self.cache_template(self._raw_batch(raw), ctx_len)
+        cache: Dict[str, Any] = {}
+        for g in self.groups:
+            rg = raw[g.name]
+            tg = tmpl[g.name]
+            if g.kind == "ssd":
+                cache[g.name] = {
+                    k: self.mctx.wsc(
+                        rg[k].astype(tg[k][1]), *tuple(tg[k][2])
+                    )
+                    for k in tg
+                }
+            elif g.kind == "pair_local_global":
+                cache[g.name] = {
+                    "local": self._assemble_attn_cache(rg["local"], tg["local"]),
+                    "global": self._assemble_attn_cache(rg["global"], tg["global"]),
+                }
+            else:
+                cache[g.name] = self._assemble_attn_cache(rg, tg)
+        for key in raw:
+            if key.startswith("shared"):
+                cache[key] = self._assemble_attn_cache(raw[key], tmpl[key])
+        return cache
+
+    def _raw_batch(self, raw) -> int:
+        leaves = jax.tree.leaves(raw)
+        g0 = self.groups[0]
+        # stacked leaves are (n, B, S, K, hd) or ssd (n, B, ...)
+        return leaves[0].shape[1]

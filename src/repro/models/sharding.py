@@ -1,0 +1,120 @@
+"""Mesh context, partition-spec construction, and sharding-constraint helpers.
+
+All sharding decisions flow through ``MeshCtx`` so that:
+- smoke tests run with ``mesh=None`` (every constraint is a no-op),
+- the dry-run runs the identical model code on the 256/512-chip meshes,
+- the plan's transfer flags (`bulk_gather`/`keep_sharded`/`staged`) decide
+  *where* constraints are placed, which is exactly how the paper's transfer
+  directives decide where CPU-GPU copies happen.
+
+Axis convention: ``model`` is the tensor/expert/sequence-parallel axis; every
+other mesh axis (``data``, and ``pod`` when present) is a data-parallel /
+FSDP axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+MODEL_AXIS = "model"
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshCtx:
+    mesh: Optional[jax.sharding.Mesh]
+
+    @property
+    def dp_axes(self) -> Tuple[str, ...]:
+        if self.mesh is None:
+            return ()
+        return tuple(a for a in self.mesh.axis_names if a != MODEL_AXIS)
+
+    @property
+    def model_size(self) -> int:
+        if self.mesh is None:
+            return 1
+        return self.mesh.shape[MODEL_AXIS]
+
+    @property
+    def dp_size(self) -> int:
+        if self.mesh is None:
+            return 1
+        n = 1
+        for a in self.dp_axes:
+            n *= self.mesh.shape[a]
+        return n
+
+    # -- spec builders -------------------------------------------------------
+    def fsdp(self) -> Tuple[str, ...]:
+        """The (possibly multi-axis) FSDP sharding entry for a weight dim."""
+        return self.dp_axes
+
+    def batch_entry(self, batch: int):
+        """DP sharding entry for a batch dim (None when not divisible)."""
+        if self.mesh is None or self.dp_size == 0:
+            return None
+        if batch % max(self.dp_size, 1) == 0 and self.dp_size > 1:
+            return self.dp_axes
+        return None
+
+    def model_entry(self, dim: int):
+        """Model-axis entry for a dim (None when not divisible)."""
+        if self.mesh is None:
+            return None
+        return MODEL_AXIS if dim % self.model_size == 0 else None
+
+    def shardable(self, dim: int) -> bool:
+        return self.mesh is not None and dim % self.model_size == 0
+
+    # -- constraint application ----------------------------------------------
+    def wsc(self, x, *entries, enabled: bool = True):
+        """with_sharding_constraint(x, P(*entries)) when a mesh is active."""
+        if self.mesh is None or not enabled:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P(*entries))
+        )
+
+    def sharding(self, spec: P) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, spec)
+
+
+def attn_tp_mode(n_heads: int, kv_heads: int, mctx: MeshCtx) -> str:
+    """Directive-applicability analysis for attention tensor parallelism.
+
+    Mirrors the paper's pgcc loop classification: try the strongest directive
+    first, fall back when the structure doesn't admit it.
+    - "heads":   q and kv heads both shard over the model axis
+    - "qheads":  only q heads shard; kv weights/cache replicated (small kv)
+    - "seq":     neither shards -> sequence-parallel attention
+    """
+    m = mctx.model_size
+    if m == 1:
+        return "heads"
+    if n_heads % m == 0 and kv_heads % m == 0:
+        return "heads"
+    if n_heads % m == 0:
+        return "qheads"
+    return "seq"
+
+
+def spec_tree_to_shardings(mctx: MeshCtx, spec_tree):
+    return jax.tree.map(lambda s: mctx.sharding(s), spec_tree)
+
+
+def shaped_params(shape_tree, spec_tree, mctx: MeshCtx):
+    """ShapeDtypeStructs with shardings attached (AOT lowering stand-ins).
+
+    PartitionSpec is a pytree leaf in jax>=0.4, so a plain two-tree map works.
+    """
+
+    def mk(sd, spec):
+        return jax.ShapeDtypeStruct(sd.shape, sd.dtype, sharding=mctx.sharding(spec))
+
+    return jax.tree.map(mk, shape_tree, spec_tree)

@@ -1,0 +1,187 @@
+"""Sharded optimizers: AdamW and Adafactor (factored, for 100B+ params).
+
+Functional optax-style API, but with a ``state_specs`` method so optimizer
+state inherits the parameter PartitionSpecs (ZeRO: states sharded like
+params). No optax dependency — everything is built here.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], Any]  # (grads, state, params) -> (new_params, new_state)
+    state_specs: Callable[[Any], Any]  # param_specs -> state_specs
+
+
+def _tree_zeros_like(params, dtype=None):
+    return jax.tree.map(
+        lambda p: jnp.zeros(p.shape, dtype or p.dtype), params
+    )
+
+
+def adamw(
+    lr: float | Callable[[jnp.ndarray], jnp.ndarray] = 1e-3,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    grad_clip: float = 1.0,
+    mu_dtype=jnp.float32,
+) -> Optimizer:
+    def init(params):
+        return {
+            "mu": _tree_zeros_like(params, mu_dtype),
+            "nu": _tree_zeros_like(params, jnp.float32),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        count = state["count"] + 1
+        lr_t = lr(count) if callable(lr) else jnp.asarray(lr, jnp.float32)
+        # global-norm clip
+        gnorm = jnp.sqrt(
+            sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
+        )
+        scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-9))
+
+        def upd(g, mu, nu, p):
+            g = g.astype(jnp.float32) * scale
+            mu_n = b1 * mu.astype(jnp.float32) + (1 - b1) * g
+            nu_n = b2 * nu + (1 - b2) * jnp.square(g)
+            mu_hat = mu_n / (1 - b1**count.astype(jnp.float32))
+            nu_hat = nu_n / (1 - b2**count.astype(jnp.float32))
+            step = mu_hat / (jnp.sqrt(nu_hat) + eps) + weight_decay * p.astype(jnp.float32)
+            return (
+                (p.astype(jnp.float32) - lr_t * step).astype(p.dtype),
+                mu_n.astype(mu_dtype),
+                nu_n,
+            )
+
+        out = jax.tree.map(upd, grads, state["mu"], state["nu"], params)
+        new_params = jax.tree.map(lambda o: o[0], out, is_leaf=lambda v: isinstance(v, tuple))
+        new_mu = jax.tree.map(lambda o: o[1], out, is_leaf=lambda v: isinstance(v, tuple))
+        new_nu = jax.tree.map(lambda o: o[2], out, is_leaf=lambda v: isinstance(v, tuple))
+        return new_params, {"mu": new_mu, "nu": new_nu, "count": count}
+
+    def state_specs(param_specs):
+        return {
+            "mu": param_specs,
+            "nu": param_specs,
+            "count": P(),
+        }
+
+    return Optimizer(init, update, state_specs)
+
+
+def adafactor(
+    lr: float | Callable[[jnp.ndarray], jnp.ndarray] = 1e-3,
+    decay: float = 0.99,
+    eps: float = 1e-30,
+    weight_decay: float = 0.0,
+    grad_clip: float = 1.0,
+    mu_dtype=jnp.bfloat16,
+) -> Optimizer:
+    """Factored second moment over the last two dims; bf16 first moment.
+    ~2.x bytes/param of optimizer state instead of AdamW's 8."""
+
+    def _factored(p) -> bool:
+        return p.ndim >= 2
+
+    def init(params):
+        def vr(p):
+            return (
+                jnp.zeros(p.shape[:-1], jnp.float32)
+                if _factored(p)
+                else jnp.zeros(p.shape, jnp.float32)
+            )
+
+        def vc(p):
+            return (
+                jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+                if _factored(p)
+                else jnp.zeros((1,), jnp.float32)
+            )
+
+        return {
+            "mu": _tree_zeros_like(params, mu_dtype),
+            "vr": jax.tree.map(vr, params),
+            "vc": jax.tree.map(vc, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        count = state["count"] + 1
+        lr_t = lr(count) if callable(lr) else jnp.asarray(lr, jnp.float32)
+        gnorm = jnp.sqrt(
+            sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
+        )
+        scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-9))
+
+        def upd(g, mu, vr, vc, p):
+            g = g.astype(jnp.float32) * scale
+            g2 = jnp.square(g) + eps
+            if _factored(p):
+                vr_n = decay * vr + (1 - decay) * g2.mean(axis=-1)
+                vc_n = decay * vc + (1 - decay) * g2.mean(axis=-2)
+                denom = jnp.sqrt(
+                    vr_n[..., None] * vc_n[..., None, :]
+                    / jnp.maximum(vr_n.mean(axis=-1, keepdims=True)[..., None], eps)
+                )
+            else:
+                vr_n = decay * vr + (1 - decay) * g2
+                vc_n = vc
+                denom = jnp.sqrt(vr_n)
+            u = g / jnp.maximum(denom, 1e-12)
+            mu_n = 0.9 * mu.astype(jnp.float32) + 0.1 * u
+            step = mu_n + weight_decay * p.astype(jnp.float32)
+            return (
+                (p.astype(jnp.float32) - lr_t * step).astype(p.dtype),
+                mu_n.astype(mu_dtype),
+                vr_n,
+                vc_n,
+            )
+
+        out = jax.tree.map(upd, grads, state["mu"], state["vr"], state["vc"], params)
+        pick = lambda i: jax.tree.map(
+            lambda o: o[i], out, is_leaf=lambda v: isinstance(v, tuple)
+        )
+        return pick(0), {
+            "mu": pick(1), "vr": pick(2), "vc": pick(3), "count": count,
+        }
+
+    def state_specs(param_specs):
+        def vr_spec(s):
+            ent = tuple(s)
+            return P(*ent[:-1]) if len(ent) >= 2 else s
+
+        def vc_spec(s):
+            ent = tuple(s)
+            return P(*(ent[:-2] + ent[-1:])) if len(ent) >= 2 else P(None)
+
+        return {
+            "mu": param_specs,
+            "vr": jax.tree.map(vr_spec, param_specs),
+            "vc": jax.tree.map(vc_spec, param_specs),
+            "count": P(),
+        }
+
+    return Optimizer(init, update, state_specs)
+
+
+def cosine_schedule(peak_lr: float, warmup: int, total: int, floor: float = 0.1):
+    def lr(count):
+        c = count.astype(jnp.float32)
+        warm = c / max(warmup, 1)
+        prog = jnp.clip((c - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return peak_lr * jnp.where(c < warmup, warm, cos)
+
+    return lr

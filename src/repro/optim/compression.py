@@ -1,0 +1,70 @@
+"""Gradient compression: int8 quantization with error feedback.
+
+Two pieces:
+- ``ef_compress_tree`` / error-feedback state: numerics-faithful int8
+  round-trip applied to gradients before the optimizer, with the residual
+  carried to the next step (Seide et al. 1-bit SGD generalization). This is
+  what training uses; on a real multi-host network the quantized tensor is
+  what crosses DCN.
+- ``compressed_psum_mean``: an explicit shard_map demonstration of the
+  4x-bytes-cheaper collective (int8 all-gather + local dequant-mean instead
+  of f32 all-reduce); used by the transfer-ablation benchmark to show the
+  HLO byte reduction.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def _quantize(x: jnp.ndarray):
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize(q: jnp.ndarray, scale: jnp.ndarray):
+    return q.astype(jnp.float32) * scale
+
+
+def ef_init(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def ef_compress_tree(grads, ef_state):
+    """Returns (compressed-dequantized grads, new error-feedback state)."""
+
+    def one(g, e):
+        x = g.astype(jnp.float32) + e
+        q, s = _quantize(x)
+        deq = _dequantize(q, s)
+        return deq, x - deq
+
+    out = jax.tree.map(one, grads, ef_state)
+    deq = jax.tree.map(lambda o: o[0], out, is_leaf=lambda v: isinstance(v, tuple))
+    new_ef = jax.tree.map(lambda o: o[1], out, is_leaf=lambda v: isinstance(v, tuple))
+    return deq, new_ef
+
+
+def compressed_psum_mean(x: jnp.ndarray, mesh, axis: str = "data"):
+    """Mean over a mesh axis moving int8 instead of f32 (4x byte cut).
+
+    shard_map over `axis`: quantize locally, all_gather int8 + scales,
+    dequantize and average locally.
+    """
+
+    def body(xs):
+        q, s = _quantize(xs)
+        qs = jax.lax.all_gather(q, axis)  # int8 — the cheap collective
+        ss = jax.lax.all_gather(s, axis)
+        return jnp.mean(
+            qs.astype(jnp.float32) * ss.reshape((-1,) + (1,) * xs.ndim), axis=0
+        )
+
+    rest = P(*([None] * x.ndim))
+    return jax.shard_map(
+        body, mesh=mesh, in_specs=rest, out_specs=rest, check_vma=False
+    )(x)

@@ -1,0 +1,244 @@
+"""Fault tolerance & elasticity runtime (simulated multi-host semantics).
+
+At 1000+ nodes the failure model is: hosts heartbeat to a coordinator; a
+missed deadline marks the host suspect, a second consecutive miss evicts
+it; the job rebuilds its mesh from survivors and restores the latest
+checkpoint. Stragglers (alive but slow) are detected from per-step time
+EWMA z-scores and mitigated by skip-and-rescale (bounded staleness: drop
+the straggler's microbatch from the global batch and rescale the gradient
+sum) rather than eviction.
+
+This container has one process, so hosts are simulated objects — the same
+state machine a multi-controller deployment would run. Everything is pure
+and unit-testable; ``launch.train`` wires it to the real loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import math
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+
+class HostState(str, enum.Enum):
+    HEALTHY = "healthy"
+    SUSPECT = "suspect"
+    EVICTED = "evicted"
+
+
+@dataclasses.dataclass
+class HostRecord:
+    host_id: int
+    state: HostState = HostState.HEALTHY
+    last_beat: float = 0.0
+    missed: int = 0
+
+
+class HeartbeatRegistry:
+    """Coordinator-side failure detector (deadline + consecutive misses)."""
+
+    def __init__(self, n_hosts: int, deadline_s: float = 10.0,
+                 max_missed: int = 2):
+        self.deadline_s = deadline_s
+        self.max_missed = max_missed
+        self.hosts = {h: HostRecord(h) for h in range(n_hosts)}
+
+    def beat(self, host_id: int, now: Optional[float] = None):
+        rec = self.hosts[host_id]
+        if rec.state == HostState.EVICTED:
+            return  # must rejoin via admit()
+        rec.last_beat = time.time() if now is None else now
+        rec.missed = 0
+        rec.state = HostState.HEALTHY
+
+    def sweep(self, now: Optional[float] = None) -> List[int]:
+        """Advance the detector; returns hosts evicted by this sweep."""
+        now = time.time() if now is None else now
+        evicted = []
+        for rec in self.hosts.values():
+            if rec.state == HostState.EVICTED:
+                continue
+            if now - rec.last_beat > self.deadline_s:
+                rec.missed += 1
+                rec.last_beat = now
+                if rec.missed >= self.max_missed:
+                    rec.state = HostState.EVICTED
+                    evicted.append(rec.host_id)
+                else:
+                    rec.state = HostState.SUSPECT
+        return evicted
+
+    def admit(self, host_id: int, now: Optional[float] = None):
+        """Re-admit a replaced/recovered host (elastic scale-up)."""
+        self.hosts[host_id] = HostRecord(
+            host_id, HostState.HEALTHY,
+            time.time() if now is None else now, 0,
+        )
+
+    def survivors(self) -> List[int]:
+        return [h for h, r in self.hosts.items()
+                if r.state != HostState.EVICTED]
+
+
+@dataclasses.dataclass
+class StragglerVerdict:
+    host_id: int
+    z_score: float
+    is_straggler: bool
+
+
+class StragglerDetector:
+    """Per-host step-time EWMA + EWcross-host z-score.
+
+    A host is a straggler when its step time exceeds the fleet mean by
+    ``z_threshold`` fleet standard deviations for ``patience`` consecutive
+    steps. Mitigation is the caller's choice; ``skip_and_rescale`` computes
+    the gradient rescale factor for deadline-skipped microbatches.
+    """
+
+    def __init__(self, n_hosts: int, alpha: float = 0.2,
+                 z_threshold: float = 3.0, patience: int = 2):
+        self.alpha = alpha
+        self.z_threshold = z_threshold
+        self.patience = patience
+        self.ewma = [0.0] * n_hosts
+        self.initialized = [False] * n_hosts
+        self.strikes = [0] * n_hosts
+
+    def observe(self, step_times: Sequence[float]) -> List[StragglerVerdict]:
+        for h, t in enumerate(step_times):
+            if not self.initialized[h]:
+                self.ewma[h] = t
+                self.initialized[h] = True
+            else:
+                self.ewma[h] = (1 - self.alpha) * self.ewma[h] + self.alpha * t
+        mean = sum(self.ewma) / len(self.ewma)
+        var = sum((e - mean) ** 2 for e in self.ewma) / max(len(self.ewma), 1)
+        sd = math.sqrt(var)
+        out = []
+        for h, e in enumerate(self.ewma):
+            z = (e - mean) / sd if sd > 1e-12 else 0.0
+            if z > self.z_threshold:
+                self.strikes[h] += 1
+            else:
+                self.strikes[h] = 0
+            out.append(
+                StragglerVerdict(h, z, self.strikes[h] >= self.patience)
+            )
+        return out
+
+
+def skip_and_rescale(n_total_microbatches: int, n_skipped: int) -> float:
+    """Gradient rescale when skipping straggler microbatches: the sum over
+    the surviving microbatches is an unbiased estimate of the full-batch
+    mean after scaling by total/survived."""
+    survived = n_total_microbatches - n_skipped
+    if survived <= 0:
+        raise ValueError("cannot skip every microbatch")
+    return n_total_microbatches / survived
+
+
+# ---------------------------------------------------------------------------
+# elastic mesh planning
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshPlan:
+    shape: Tuple[int, ...]
+    axes: Tuple[str, ...]
+    n_devices: int
+
+    def describe(self) -> str:
+        dims = "x".join(str(s) for s in self.shape)
+        return f"{dims} ({','.join(self.axes)}) = {self.n_devices} devices"
+
+
+def plan_elastic_mesh(
+    n_devices: int,
+    model_parallel: int,
+    axes: Tuple[str, str] = ("data", "model"),
+) -> MeshPlan:
+    """Largest (data, model) mesh from surviving devices: the model axis is
+    fixed by the plan (TP degree must divide heads/experts); leftover
+    devices idle until replacements arrive. data = floor(n / model)."""
+    if n_devices < model_parallel:
+        raise ValueError(
+            f"{n_devices} devices cannot host model_parallel={model_parallel}"
+        )
+    data = n_devices // model_parallel
+    return MeshPlan(
+        shape=(data, model_parallel),
+        axes=axes,
+        n_devices=data * model_parallel,
+    )
+
+
+@dataclasses.dataclass
+class RecoveryEvent:
+    step: int
+    evicted_hosts: List[int]
+    old_mesh: str
+    new_mesh: str
+    restored_step: Optional[int]
+
+
+class FaultCoordinator:
+    """Glue object: heartbeats -> eviction -> elastic replan -> restore.
+
+    ``on_step`` is called once per training step with the per-host step
+    times; when the registry evicts hosts it returns a RecoveryEvent the
+    trainer uses to rebuild (mesh, state). Simulation hooks (``fail_host``)
+    let tests inject failures deterministically.
+    """
+
+    def __init__(
+        self,
+        n_hosts: int,
+        devices_per_host: int,
+        model_parallel: int,
+        deadline_s: float = 10.0,
+    ):
+        self.registry = HeartbeatRegistry(n_hosts, deadline_s=deadline_s)
+        self.straggler = StragglerDetector(n_hosts)
+        self.devices_per_host = devices_per_host
+        self.model_parallel = model_parallel
+        self.events: List[RecoveryEvent] = []
+        now = time.time()
+        for h in range(n_hosts):
+            self.registry.beat(h, now)
+        self._last_plan = self.current_plan()
+
+    def current_plan(self) -> MeshPlan:
+        n = len(self.registry.survivors()) * self.devices_per_host
+        return plan_elastic_mesh(n, self.model_parallel)
+
+    def fail_host(self, host_id: int):
+        self.registry.hosts[host_id].state = HostState.EVICTED
+
+    def on_step(
+        self, step: int, host_step_times: Dict[int, float],
+        now: Optional[float] = None,
+    ) -> Optional[RecoveryEvent]:
+        old_plan = self._last_plan
+        for h, t in host_step_times.items():
+            self.registry.beat(h, now)
+        evicted = self.registry.sweep(now)
+        dead = [
+            h for h, r in self.registry.hosts.items()
+            if r.state == HostState.EVICTED
+        ]
+        new_plan = self.current_plan()
+        self._last_plan = new_plan
+        if evicted or old_plan.n_devices != new_plan.n_devices:
+            ev = RecoveryEvent(
+                step=step,
+                evicted_hosts=dead,
+                old_mesh=old_plan.describe(),
+                new_mesh=new_plan.describe(),
+                restored_step=None,
+            )
+            self.events.append(ev)
+            return ev
+        return None

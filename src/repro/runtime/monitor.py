@@ -1,0 +1,61 @@
+"""Lightweight training telemetry: step timing, tokens/s, loss EWMA,
+and a ring buffer the trainer/serving engine can export.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Deque, Dict, List, Optional
+
+
+@dataclasses.dataclass
+class StepRecord:
+    step: int
+    seconds: float
+    loss: Optional[float] = None
+    tokens: int = 0
+    extra: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+
+class Monitor:
+    def __init__(self, window: int = 200):
+        self.records: Deque[StepRecord] = collections.deque(maxlen=window)
+        self._t0: Optional[float] = None
+        self.loss_ewma: Optional[float] = None
+
+    def start_step(self):
+        self._t0 = time.perf_counter()
+
+    def end_step(self, step: int, loss: Optional[float] = None,
+                 tokens: int = 0, **extra) -> StepRecord:
+        dt = time.perf_counter() - (self._t0 or time.perf_counter())
+        rec = StepRecord(step, dt, loss, tokens, dict(extra))
+        self.records.append(rec)
+        if loss is not None:
+            self.loss_ewma = (
+                loss if self.loss_ewma is None
+                else 0.95 * self.loss_ewma + 0.05 * loss
+            )
+        return rec
+
+    @property
+    def tokens_per_second(self) -> float:
+        recs = [r for r in self.records if r.tokens]
+        if not recs:
+            return 0.0
+        return sum(r.tokens for r in recs) / max(
+            sum(r.seconds for r in recs), 1e-9
+        )
+
+    def summary(self) -> Dict[str, float]:
+        if not self.records:
+            return {}
+        times = [r.seconds for r in self.records]
+        return {
+            "steps": float(len(self.records)),
+            "mean_step_s": sum(times) / len(times),
+            "last_step_s": times[-1],
+            "tokens_per_s": self.tokens_per_second,
+            "loss_ewma": float(self.loss_ewma or 0.0),
+        }

@@ -1,0 +1,140 @@
+"""Batched serving engine: prefill + decode over the plan-aware Model.
+
+Continuous-batching-lite: a request queue is packed into fixed decode slots;
+finished sequences release their slot, the next prefill fills it. The KV
+cache is the Model's (ring- or direct-layout) cache; one jitted decode step
+serves the whole slot batch every tick.
+
+Ring-flush contract: for seq-sharded caches (kv heads not shardable), the
+decode ring holds the newest tokens; ``RING_SIZE`` decode steps per segment
+are guaranteed flush-free, matching the engine's segment length.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core.plan import ExecutionPlan
+from repro.models.model import Model
+
+
+@dataclasses.dataclass
+class Request:
+    request_id: int
+    prompt: np.ndarray  # (prompt_len,) int32
+    max_new_tokens: int = 16
+    # filled by the engine:
+    output: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    slots: int = 4  # concurrent decode slots
+    ctx_len: int = 256  # max context per slot
+    greedy: bool = True
+    seed: int = 0
+
+
+class Engine:
+    def __init__(
+        self,
+        cfg: ArchConfig,
+        plan: ExecutionPlan,
+        params: Any,
+        scfg: ServeConfig = ServeConfig(),
+        mesh=None,
+        interpret: bool = False,
+    ):
+        assert not cfg.encoder_only, "no autoregressive serving for encoders"
+        self.cfg = cfg
+        self.scfg = scfg
+        self.model = Model(cfg, plan, mesh=mesh, interpret=interpret)
+        self.params = params
+        self._decode = jax.jit(self.model.decode_step, donate_argnums=(1,))
+        self._prefill_cache: Dict[int, Any] = {}
+        self.cache = None
+        self.positions = np.zeros((scfg.slots,), np.int32)
+        self.last_token = np.zeros((scfg.slots,), np.int32)
+        self.slot_req: List[Optional[Request]] = [None] * scfg.slots
+        self.queue: List[Request] = []
+        self.finished: List[Request] = []
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _prefill_one(self, slot: int, req: Request):
+        """Single-sequence prefill into the slot's cache rows."""
+        prompt = req.prompt[None, :]  # (1, L)
+        batch = {"tokens": jnp.asarray(prompt)}
+        logits, cache1 = self.model.prefill(
+            self.params, batch, ctx_len=self.scfg.ctx_len
+        )
+        tok = int(jnp.argmax(logits[0, : self.cfg.vocab]))
+        if self.cache is None:
+            # first prefill defines the batched cache: tile slot-ways
+            self.cache = jax.tree.map(
+                lambda x: jnp.concatenate([x] * self.scfg.slots, axis=-4)
+                if x.ndim >= 4
+                else jnp.concatenate([x] * self.scfg.slots, axis=0),
+                cache1,
+            )
+
+        def write(slot_cache, full):
+            idx = [slice(None)] * full.ndim
+            axis = full.ndim - 4 if full.ndim >= 4 else 0
+            idx[axis] = slice(slot, slot + 1)
+            return full.at[tuple(idx)].set(slot_cache)
+
+        self.cache = jax.tree.map(write, cache1, self.cache)
+        self.slot_req[slot] = req
+        self.positions[slot] = len(req.prompt)
+        self.last_token[slot] = tok
+        req.output.append(tok)
+
+    def _fill_slots(self):
+        for slot in range(self.scfg.slots):
+            if self.slot_req[slot] is None and self.queue:
+                self._prefill_one(slot, self.queue.pop(0))
+
+    # ------------------------------------------------------------------
+    def step(self) -> int:
+        """One engine tick: fill free slots, run one batched decode step.
+        Returns number of active slots served."""
+        self._fill_slots()
+        active = [s for s in range(self.scfg.slots) if self.slot_req[s]]
+        if not active:
+            return 0
+        tokens = jnp.asarray(self.last_token[:, None])
+        positions = jnp.asarray(self.positions[:, None])
+        logits, self.cache = self._decode(
+            self.params, self.cache, tokens, positions
+        )
+        nxt = np.asarray(
+            jnp.argmax(logits[:, : self.cfg.vocab], axis=-1), np.int32
+        )
+        for s in active:
+            req = self.slot_req[s]
+            req.output.append(int(nxt[s]))
+            self.positions[s] += 1
+            self.last_token[s] = nxt[s]
+            hit_limit = len(req.output) >= req.max_new_tokens
+            full = self.positions[s] >= self.scfg.ctx_len - 1
+            if hit_limit or full:
+                req.done = True
+                self.finished.append(req)
+                self.slot_req[s] = None
+        return len(active)
+
+    def run_until_done(self, max_ticks: int = 10_000) -> List[Request]:
+        ticks = 0
+        while (self.queue or any(self.slot_req)) and ticks < max_ticks:
+            self.step()
+            ticks += 1
+        return self.finished

@@ -1,0 +1,163 @@
+"""Trainer: the end-to-end training loop over all substrate layers.
+
+Wires together: Model (plan-aware), optimizer, data pipeline, checkpoint
+manager (async, restartable), monitor, and the fault coordinator
+(heartbeat/straggler simulation hooks). Used by ``launch.train`` and the
+end-to-end example; small enough to read top to bottom.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Iterable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.core.plan import ExecutionPlan
+from repro.data.pipeline import DataConfig, Pipeline
+from repro.models.model import Model
+from repro.models.sharding import MeshCtx, spec_tree_to_shardings
+from repro.optim.adamw import Optimizer, adamw, cosine_schedule
+from repro.runtime.fault import FaultCoordinator
+from repro.runtime.monitor import Monitor
+from repro.train import train_step as ts
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 100
+    log_every: int = 10
+    ckpt_dir: Optional[str] = None
+    save_every: int = 50
+    compress_grads: bool = False
+    seed: int = 0
+    peak_lr: float = 3e-4
+    warmup: int = 10
+
+
+class Trainer:
+    def __init__(
+        self,
+        cfg: ArchConfig,
+        shape: ShapeConfig,
+        plan: ExecutionPlan,
+        mesh=None,
+        opt: Optional[Optimizer] = None,
+        tcfg: TrainConfig = TrainConfig(),
+        data: DataConfig = DataConfig(),
+        interpret: bool = False,
+    ):
+        self.cfg = cfg
+        self.shape = shape
+        self.tcfg = tcfg
+        self.mesh = mesh
+        self.mctx = MeshCtx(mesh)
+        self.model = Model(cfg, plan, mesh=mesh, interpret=interpret)
+        self.opt = opt or adamw(
+            cosine_schedule(tcfg.peak_lr, tcfg.warmup, tcfg.steps)
+        )
+        self.monitor = Monitor()
+        self.pipeline = Pipeline(cfg, shape, data)
+        self.manager = (
+            CheckpointManager(tcfg.ckpt_dir, save_every=tcfg.save_every)
+            if tcfg.ckpt_dir
+            else None
+        )
+        self.fault: Optional[FaultCoordinator] = None
+        self._step_fn = None
+        self.params = None
+        self.opt_state = None
+        self.step = 0
+
+    # ------------------------------------------------------------------
+    def initialize(self):
+        rng = jax.random.key(self.tcfg.seed)
+        if self.mesh is not None:
+            pspecs = self.model.param_specs()
+            shardings = spec_tree_to_shardings(self.mctx, pspecs)
+            init = jax.jit(self.model.init, out_shardings=shardings)
+            with self.mesh:
+                self.params = init(rng)
+        else:
+            self.params = jax.jit(self.model.init)(rng)
+        self.opt_state = ts.init_opt_state(
+            self.model, self.opt, self.params, self.tcfg.compress_grads
+        )
+        step_fn = ts.make_train_step(
+            self.model, self.opt, self.tcfg.compress_grads
+        )
+        self._step_fn = jax.jit(step_fn, donate_argnums=(0, 1))
+        # restart path: restore latest checkpoint if one exists
+        if self.manager is not None:
+            state = {"params": self.params, "opt": self.opt_state}
+            restored_step, restored = self.manager.restore_latest(state)
+            if restored_step is not None:
+                self.params = restored["params"]
+                self.opt_state = restored["opt"]
+                self.step = restored_step
+                self.pipeline.step = restored_step
+        return self
+
+    # ------------------------------------------------------------------
+    def _device_batch(self, batch: Dict[str, np.ndarray]):
+        out = {}
+        for k, v in batch.items():
+            arr = jnp.asarray(v)
+            if self.mesh is not None:
+                b = self.mctx.batch_entry(arr.shape[0])
+                from jax.sharding import NamedSharding, PartitionSpec as P
+
+                spec = P(b, *([None] * (arr.ndim - 1)))
+                arr = jax.device_put(arr, NamedSharding(self.mesh, spec))
+            out[k] = arr
+        return out
+
+    def run(self, data_iter: Optional[Iterable] = None) -> Dict[str, float]:
+        if self.params is None:
+            self.initialize()
+        it = iter(data_iter) if data_iter is not None else iter(self.pipeline)
+        ctx = self.mesh if self.mesh is not None else _NullCtx()
+        with ctx:
+            while self.step < self.tcfg.steps:
+                batch = self._device_batch(next(it))
+                self.monitor.start_step()
+                self.params, self.opt_state, metrics = self._step_fn(
+                    self.params, self.opt_state, batch
+                )
+                loss = float(metrics["loss"])
+                rec = self.monitor.end_step(
+                    self.step, loss,
+                    tokens=self.shape.global_batch * self.shape.seq_len,
+                )
+                self.step += 1
+                if self.fault is not None:
+                    self.fault.on_step(self.step, {0: rec.seconds})
+                if self.manager is not None and self.manager.should_save(
+                    self.step
+                ):
+                    self.manager.save(
+                        self.step,
+                        {"params": self.params, "opt": self.opt_state},
+                        metadata={"loss": loss},
+                    )
+                if self.step % self.tcfg.log_every == 0:
+                    s = self.monitor.summary()
+                    print(
+                        f"[train] step {self.step} loss {loss:.4f} "
+                        f"({s['tokens_per_s']:.0f} tok/s, "
+                        f"{s['mean_step_s']*1e3:.0f} ms/step)"
+                    )
+        if self.manager is not None:
+            self.manager.finalize()
+        return self.monitor.summary()
+
+
+class _NullCtx:
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *a):
+        return False

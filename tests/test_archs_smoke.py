@@ -1,0 +1,193 @@
+"""Per-architecture smoke tests: reduced same-family config, one forward +
+train step on CPU, asserting output shapes + finite values (assignment
+requirement), plus prefill/decode consistency for decoder archs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_arch
+from repro.configs.base import ALL_SHAPES
+from repro.core import analysis
+from repro.models.model import Model, padded_vocab
+from repro.optim.adamw import adamw
+from repro.train import train_step as ts
+
+
+def _batch(cfg, B=2, S=32):
+    rng = np.random.default_rng(0)
+    tgt = rng.integers(0, cfg.vocab, size=(B, S)).astype(np.int32)
+    if cfg.family == "encoder":
+        return {
+            "frames": jnp.asarray(
+                rng.standard_normal((B, S, cfg.d_model)), jnp.float32
+            ),
+            "targets": jnp.asarray(tgt),
+        }
+    if cfg.family == "vlm":
+        pv = cfg.frontend_positions
+        return {
+            "tokens": jnp.asarray(
+                rng.integers(0, cfg.vocab, size=(B, S - pv)).astype(np.int32)
+            ),
+            "vision": jnp.asarray(
+                rng.standard_normal((B, pv, cfg.d_model)), jnp.float32
+            ),
+            "targets": jnp.asarray(tgt[:, : S - pv]),
+        }
+    return {
+        "tokens": jnp.asarray(
+            rng.integers(0, cfg.vocab, size=(B, S)).astype(np.int32)
+        ),
+        "targets": jnp.asarray(tgt),
+    }
+
+
+@pytest.fixture(scope="module")
+def models():
+    cache = {}
+
+    def get(arch_id):
+        if arch_id not in cache:
+            cfg = get_arch(arch_id).reduced()
+            plan = analysis.build_plan(cfg, None, n_groups=2)
+            model = Model(cfg, plan)
+            params = jax.jit(model.init)(jax.random.key(0))
+            cache[arch_id] = (cfg, model, params)
+        return cache[arch_id]
+
+    return get
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_forward_shapes_and_finite(models, arch_id):
+    cfg, model, params = models(arch_id)
+    batch = _batch(cfg)
+    logits, caches, aux = model.forward(params, batch, mode="train")
+    B = 2
+    S = 32
+    assert logits.shape == (B, S, padded_vocab(cfg))
+    assert bool(jnp.isfinite(logits).all())
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_train_step_no_nans(models, arch_id):
+    cfg, model, params = models(arch_id)
+    opt = adamw(1e-3)
+    step = jax.jit(ts.make_train_step(model, opt))
+    state = opt.init(params)
+    batch = _batch(cfg)
+    new_params, new_state, metrics = step(params, state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    for leaf in jax.tree.leaves(new_params):
+        assert bool(jnp.isfinite(leaf).all())
+
+
+@pytest.mark.parametrize(
+    "arch_id",
+    [a for a in ARCH_IDS if not get_arch(a).encoder_only],
+)
+def test_prefill_then_decode_matches_full_forward(models, arch_id):
+    """Strong correctness check: prefill(S) + decode(token S) must equal the
+    full forward over S+1 tokens at the last position."""
+    cfg, model, params = models(arch_id)
+    B, S = 2, 16
+    rng = np.random.default_rng(1)
+    toks = rng.integers(0, cfg.vocab, size=(B, S + 1)).astype(np.int32)
+    batch_full = {"tokens": jnp.asarray(toks)}
+    if cfg.family == "vlm":
+        vision = jnp.asarray(
+            rng.standard_normal((B, cfg.frontend_positions, cfg.d_model)),
+            jnp.float32,
+        )
+        batch_full["vision"] = vision
+    logits_full, _, _ = model.forward(params, batch_full, mode="prefill")
+
+    batch_prefill = {"tokens": jnp.asarray(toks[:, :S])}
+    if cfg.family == "vlm":
+        batch_prefill["vision"] = vision
+    _, cache = model.prefill(params, batch_prefill, ctx_len=S + 8)
+    offset = cfg.frontend_positions if cfg.family == "vlm" else 0
+    pos = jnp.full((B, 1), S + offset, jnp.int32)
+    logits_dec, _ = model.decode_step(
+        params, cache, jnp.asarray(toks[:, S : S + 1]), pos
+    )
+    got = np.asarray(logits_dec, np.float32)
+    want = np.asarray(logits_full[:, -1], np.float32)
+    if cfg.moe is not None:
+        # top-k routing is discontinuous: near-tied router scores may flip
+        # an expert between the two compiled paths (bf16-ulp differences in
+        # the hidden state), changing that row's logits wholesale. Require
+        # the MAJORITY of rows to match; flipped rows are expected MoE
+        # behavior, not a cache bug.
+        row_mism = np.mean(
+            np.abs(got - want) > 3e-2 + 3e-2 * np.abs(want), axis=-1
+        )
+        assert np.mean(row_mism > 0.10) <= 0.5, f"row mismatch {row_mism}"
+    else:
+        np.testing.assert_allclose(got, want, atol=3e-2, rtol=3e-2)
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_decode_cache_shapes_match_templates(models, arch_id):
+    cfg, model, params = models(arch_id)
+    if cfg.encoder_only:
+        pytest.skip("no decode for encoders")
+    cache = model.init_cache(batch=2, ctx_len=32)
+    structs = model.cache_shape_structs(batch=2, ctx_len=32)
+    got = jax.tree.map(lambda x: (x.shape, str(x.dtype)), cache)
+    want = jax.tree.map(lambda s: (s.shape, str(s.dtype)), structs)
+    assert got == want
+
+
+def test_shape_applicability_rules():
+    """Assignment: encoder skips decode; long_500k only for sub-quadratic."""
+    names = {s.name for s in ALL_SHAPES}
+    assert names == {"train_4k", "prefill_32k", "decode_32k", "long_500k"}
+    hubert = get_arch("hubert-xlarge")
+    assert {s.name for s in hubert.shapes()} == {"train_4k", "prefill_32k"}
+    for aid in ("mamba2-1.3b", "zamba2-1.2b", "gemma2-27b"):
+        assert "long_500k" in {s.name for s in get_arch(aid).shapes()}, aid
+    for aid in ("glm4-9b", "stablelm-3b", "llama4-maverick-400b-a17b"):
+        assert "long_500k" not in {s.name for s in get_arch(aid).shapes()}
+
+
+def test_total_runnable_cells():
+    from repro.configs.base import all_cells
+
+    cells = all_cells()
+    assert len(cells) == 32  # 40 - 8 principled skips
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_assigned_config_values(arch_id):
+    """Exact assignment-sheet values survive in the full configs."""
+    cfg = get_arch(arch_id)
+    expect = {
+        "hubert-xlarge": (48, 1280, 16, 16, 5120, 504),
+        "internvl2-76b": (80, 8192, 64, 8, 28672, 128256),
+        "moonshot-v1-16b-a3b": (48, 2048, 16, 16, 1408, 163840),
+        "llama4-maverick-400b-a17b": (48, 5120, 40, 8, 8192, 202048),
+        "gemma2-27b": (46, 4608, 32, 16, 36864, 256000),
+        "glm4-9b": (40, 4096, 32, 2, 13696, 151552),
+        "chatglm3-6b": (28, 4096, 32, 2, 13696, 65024),
+        "stablelm-3b": (32, 2560, 32, 32, 6912, 50304),
+        "zamba2-1.2b": (38, 2048, 32, 32, 8192, 32000),
+        "mamba2-1.3b": (48, 2048, 0, 0, 0, 50280),
+    }[arch_id]
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.kv_heads, cfg.d_ff,
+           cfg.vocab)
+    assert got == expect
+
+
+def test_moe_configs():
+    moon = get_arch("moonshot-v1-16b-a3b")
+    assert (moon.moe.num_experts, moon.moe.top_k) == (64, 6)
+    llama = get_arch("llama4-maverick-400b-a17b")
+    assert (llama.moe.num_experts, llama.moe.top_k) == (128, 1)
+
+
+def test_ssm_configs():
+    assert get_arch("mamba2-1.3b").ssm.state_dim == 128
+    assert get_arch("zamba2-1.2b").ssm.state_dim == 64

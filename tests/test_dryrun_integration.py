@@ -1,0 +1,52 @@
+"""Dry-run integration: the full lower+compile+roofline path on a small
+host-device mesh in a subprocess (the 512-device production matrix runs via
+``python -m repro.launch.dryrun --all --both-meshes``; see EXPERIMENTS.md)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax
+from repro.launch import dryrun
+
+mesh = jax.make_mesh((2, 4), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+recs = []
+for arch, shape in [("stablelm-3b", "train_4k"),
+                    ("mamba2-1.3b", "decode_32k"),
+                    ("moonshot-v1-16b-a3b", "train_4k")]:
+    rec = dryrun.run_cell(arch, shape, multi_pod=False, mesh=mesh,
+                          verbose=False)
+    recs.append({k: rec[k] for k in ("arch", "shape", "mesh", "roofline")})
+print("JSON" + json.dumps(recs))
+"""
+
+
+@pytest.mark.slow
+def test_dryrun_small_mesh_cells():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env.pop("XLA_FLAGS", None)
+    env.pop("JAX_PLATFORMS", None)
+    out = subprocess.run(
+        [sys.executable, "-c", SCRIPT],
+        capture_output=True, text=True, env=env, timeout=1200,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    payload = [l for l in out.stdout.splitlines() if l.startswith("JSON")]
+    assert payload, out.stdout
+    recs = json.loads(payload[0][4:])
+    assert len(recs) == 3
+    for rec in recs:
+        rl = rec["roofline"]
+        assert rl["t_step_s"] > 0
+        assert rl["bottleneck"] in ("compute", "memory", "collective")
+        assert 0 < rl["useful_flops_ratio"] <= 1.5

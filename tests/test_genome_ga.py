@@ -1,0 +1,165 @@
+"""GA + genome invariants (unit + hypothesis property tests)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ga, genome as G
+
+
+# ---------------------------------------------------------------------------
+# genome operators
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(1, 200), st.integers(0, 2**31 - 1))
+def test_random_genome_shape_and_values(length, seed):
+    g = G.random_genome(np.random.default_rng(seed), length)
+    assert len(g) == length
+    assert set(g) <= {0, 1}
+
+
+@given(st.integers(2, 64), st.integers(0, 2**31 - 1))
+def test_single_point_crossover_preserves_columns(length, seed):
+    rng = np.random.default_rng(seed)
+    a = G.random_genome(rng, length)
+    b = G.random_genome(rng, length)
+    ca, cb = G.crossover(rng, a, b, rate=1.0)
+    for i in range(length):
+        assert {ca[i], cb[i]} == {a[i], b[i]}
+
+
+@given(st.integers(1, 64), st.integers(0, 2**31 - 1))
+def test_uniform_crossover_preserves_columns(length, seed):
+    rng = np.random.default_rng(seed)
+    a = G.random_genome(rng, length)
+    b = G.random_genome(rng, length)
+    ca, cb = G.uniform_crossover(rng, a, b, rate=1.0)
+    for i in range(length):
+        assert {ca[i], cb[i]} == {a[i], b[i]}
+
+
+@given(st.integers(1, 64), st.integers(0, 2**31 - 1))
+def test_crossover_rate_zero_is_identity(length, seed):
+    rng = np.random.default_rng(seed)
+    a = G.random_genome(rng, length)
+    b = G.random_genome(rng, length)
+    assert G.crossover(rng, a, b, rate=0.0) == (a, b)
+    assert G.uniform_crossover(rng, a, b, rate=0.0) == (a, b)
+
+
+@given(st.integers(1, 128), st.integers(0, 2**31 - 1))
+def test_mutate_zero_rate_identity_and_one_rate_flips_all(length, seed):
+    rng = np.random.default_rng(seed)
+    g = G.random_genome(rng, length)
+    assert G.mutate(rng, g, 0.0) == g
+    flipped = G.mutate(rng, g, 1.0)
+    assert all(x != y for x, y in zip(g, flipped))
+
+
+@given(st.integers(2, 32), st.integers(0, 2**31 - 1))
+def test_roulette_pick_returns_member(n, seed):
+    rng = np.random.default_rng(seed)
+    pop = [G.random_genome(rng, 8) for _ in range(n)]
+    fit = list(rng.random(n))
+    assert G.roulette_pick(rng, pop, fit) in pop
+
+
+def test_roulette_prefers_high_fitness():
+    rng = np.random.default_rng(0)
+    pop = [(0,), (1,)]
+    fit = [0.01, 0.99]
+    picks = [G.roulette_pick(rng, pop, fit) for _ in range(2000)]
+    assert picks.count((1,)) > 1700
+
+
+def test_initial_population_unique_when_space_allows():
+    rng = np.random.default_rng(0)
+    pop = G.initial_population(rng, 16, 12)
+    assert len(set(pop)) == 12
+
+
+# ---------------------------------------------------------------------------
+# GA engine
+# ---------------------------------------------------------------------------
+
+
+def _onemax_time(genes):
+    """More 1s -> faster. Optimum all-ones."""
+    return 10.0 - 9.0 * sum(genes) / len(genes)
+
+
+def test_ga_fitness_transform():
+    assert ga.fitness_of_time(4.0) == pytest.approx(0.5)
+    assert ga.fitness_of_time(100.0) == pytest.approx(0.1)
+
+
+def test_ga_finds_onemax_optimum():
+    p = ga.GAParams(population=12, generations=16, seed=0)
+    r = ga.run_ga(_onemax_time, 12, p)
+    assert sum(r.best_genes) >= 11  # ~optimal
+
+
+def test_ga_best_time_monotone_nonincreasing():
+    p = ga.GAParams(population=8, generations=10, seed=1)
+    r = ga.run_ga(_onemax_time, 10, p)
+    best = [h.best_time_s for h in r.history]
+    assert all(b2 <= b1 + 1e-12 for b1, b2 in zip(best, best[1:]))
+
+
+def test_ga_deterministic_per_seed():
+    p = ga.GAParams(population=8, generations=8, seed=42)
+    r1 = ga.run_ga(_onemax_time, 10, p)
+    r2 = ga.run_ga(_onemax_time, 10, p)
+    assert r1.best_genes == r2.best_genes
+    assert r1.best_time_s == r2.best_time_s
+
+
+def test_ga_timeout_penalty_applied():
+    calls = {}
+
+    def ev(genes):
+        calls[genes] = calls.get(genes, 0) + 1
+        return 500.0  # above timeout_s=180 -> penalized to 1000
+
+    p = ga.GAParams(population=4, generations=3, seed=0)
+    r = ga.run_ga(ev, 6, p)
+    assert r.best_time_s == p.penalty_time_s
+
+
+def test_ga_nonfinite_time_penalized():
+    def ev(genes):
+        return float("inf")
+
+    p = ga.GAParams(population=4, generations=2, seed=0)
+    r = ga.run_ga(ev, 4, p)
+    assert r.best_time_s == p.penalty_time_s
+
+
+def test_ga_cache_reuses_measurements():
+    evals = []
+
+    def ev(genes):
+        evals.append(genes)
+        return _onemax_time(genes)
+
+    p = ga.GAParams(population=10, generations=10, seed=0)
+    r = ga.run_ga(ev, 6, p)  # only 64 distinct genomes exist
+    assert len(evals) == len(set(evals))  # every evaluation is a new genome
+    assert r.cache_hits > 0
+
+
+def test_ga_params_paper_rule():
+    h = ga.GAParams.for_gene_length(13)
+    assert (h.population, h.generations) == (10, 10)
+    f = ga.GAParams.for_gene_length(65)
+    assert (f.population, f.generations) == (30, 20)
+    tiny = ga.GAParams.for_gene_length(4)
+    assert tiny.population <= 4 and tiny.generations <= 4
+
+
+def test_ga_paper_constants():
+    p = ga.GAParams(population=10, generations=10)
+    assert p.crossover_rate == 0.9
+    assert p.mutation_rate == 0.05
+    assert p.timeout_s == 180.0
+    assert p.penalty_time_s == 1000.0

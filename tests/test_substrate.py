@@ -1,0 +1,306 @@
+"""Substrate tests: checkpointing, fault tolerance, data pipeline, plans."""
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs import ARCH_IDS, get_arch
+from repro.configs.base import TRAIN_4K, ShapeConfig
+from repro.core import analysis
+from repro.core.plan import Directive, ExecutionPlan, UnitPlan
+from repro.data.pipeline import DataConfig, Pipeline, SyntheticLM
+from repro.runtime import fault
+from repro.runtime.monitor import Monitor
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+
+def _state(seed=0):
+    k = jax.random.key(seed)
+    return {
+        "params": {"w": jax.random.normal(k, (8, 4)), "b": jnp.zeros((4,))},
+        "opt": {"mu": jnp.ones((8, 4)), "count": jnp.asarray(7, jnp.int32)},
+    }
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    state = _state()
+    ck.save(10, state, metadata={"loss": 1.5})
+    restored = ck.restore(10, jax.tree.map(jnp.zeros_like, state))
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert ck.metadata(10)["loss"] == 1.5
+
+
+def test_checkpoint_async_equivalent(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    state = _state(1)
+    ck.save_async(20, state)
+    res = ck.wait()
+    assert res.step == 20
+    restored = ck.restore(20, jax.tree.map(jnp.zeros_like, state))
+    np.testing.assert_array_equal(
+        np.asarray(state["params"]["w"]), np.asarray(restored["params"]["w"])
+    )
+
+
+def test_checkpoint_async_snapshot_isolated_from_mutation(tmp_path):
+    """The async save must capture values at call time, not at write time."""
+    ck = Checkpointer(str(tmp_path))
+    state = {"x": jnp.ones((4,))}
+    ck.save_async(1, state)
+    state["x"] = state["x"] * 100  # mutate the pytree afterwards
+    ck.wait()
+    restored = ck.restore(1, {"x": jnp.zeros((4,))})
+    np.testing.assert_array_equal(np.asarray(restored["x"]), np.ones(4))
+
+
+def test_checkpoint_dtype_and_shape_validation(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, {"x": jnp.ones((4,))})
+    with pytest.raises(ValueError):
+        ck.restore(1, {"x": jnp.zeros((5,))})
+    with pytest.raises(KeyError):
+        ck.restore(1, {"y": jnp.zeros((4,))})
+
+
+def test_manager_retention_and_restore_latest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), save_every=10, keep_last=2,
+                            keep_every=40, async_save=False)
+    state = {"x": jnp.zeros((2,))}
+    for step in (10, 20, 30, 40, 50):
+        mgr.save(step, {"x": jnp.full((2,), float(step))})
+    steps = mgr.ckpt.steps()
+    assert 40 in steps and 50 in steps  # keep_last=2 + keep_every=40
+    assert 10 not in steps and 20 not in steps
+    restored_step, restored = mgr.restore_latest(state)
+    assert restored_step == 50
+    np.testing.assert_array_equal(np.asarray(restored["x"]), [50.0, 50.0])
+
+
+def test_manager_skips_corrupt_checkpoint(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), save_every=10, async_save=False)
+    state = {"x": jnp.zeros((2,))}
+    mgr.save(10, {"x": jnp.ones((2,))})
+    mgr.save(20, {"x": jnp.full((2,), 2.0)})
+    # corrupt the latest
+    idx = os.path.join(str(tmp_path), "step_00000020", "index.json")
+    with open(idx, "w") as f:
+        f.write("{broken")
+    restored_step, restored = mgr.restore_latest(state)
+    assert restored_step == 10
+    np.testing.assert_array_equal(np.asarray(restored["x"]), [1.0, 1.0])
+
+
+# ---------------------------------------------------------------------------
+# fault tolerance
+# ---------------------------------------------------------------------------
+
+
+def test_heartbeat_eviction_after_two_misses():
+    reg = fault.HeartbeatRegistry(3, deadline_s=1.0, max_missed=2)
+    t = 100.0
+    for h in range(3):
+        reg.beat(h, t)
+    assert reg.sweep(t + 0.5) == []
+    reg.beat(0, t + 1.2)
+    reg.beat(1, t + 1.2)
+    assert reg.sweep(t + 1.5) == []  # host 2 suspect (1 miss)
+    assert reg.hosts[2].state == fault.HostState.SUSPECT
+    evicted = reg.sweep(t + 3.0)
+    assert evicted == [2]
+    assert reg.survivors() == [0, 1]
+
+
+def test_heartbeat_suspect_recovers():
+    reg = fault.HeartbeatRegistry(2, deadline_s=1.0, max_missed=2)
+    reg.beat(0, 0.0)
+    reg.beat(1, 0.0)
+    reg.sweep(1.5)  # both suspect
+    reg.beat(1, 1.6)
+    assert reg.hosts[1].state == fault.HostState.HEALTHY
+    assert reg.hosts[1].missed == 0
+
+
+def test_evicted_host_needs_admit():
+    reg = fault.HeartbeatRegistry(1, deadline_s=1.0, max_missed=1)
+    reg.beat(0, 0.0)
+    reg.sweep(10.0)
+    assert reg.survivors() == []
+    reg.beat(0, 11.0)  # beats from evicted hosts ignored
+    assert reg.survivors() == []
+    reg.admit(0, 12.0)
+    assert reg.survivors() == [0]
+
+
+def test_straggler_detection_ewma():
+    det = fault.StragglerDetector(4, z_threshold=1.5, patience=2)
+    for _ in range(6):
+        verdicts = det.observe([1.0, 1.0, 1.0, 3.0])
+    assert verdicts[3].is_straggler
+    assert not any(v.is_straggler for v in verdicts[:3])
+
+
+def test_skip_and_rescale():
+    assert fault.skip_and_rescale(8, 2) == pytest.approx(8 / 6)
+    with pytest.raises(ValueError):
+        fault.skip_and_rescale(4, 4)
+
+
+def test_elastic_mesh_plan():
+    p = fault.plan_elastic_mesh(512, 16)
+    assert p.shape == (32, 16)
+    p2 = fault.plan_elastic_mesh(500, 16)  # 12 devices idle
+    assert p2.shape == (31, 16)
+    assert p2.n_devices == 496
+    with pytest.raises(ValueError):
+        fault.plan_elastic_mesh(8, 16)
+
+
+def test_fault_coordinator_recovery_event():
+    fc = fault.FaultCoordinator(n_hosts=4, devices_per_host=4,
+                                model_parallel=4)
+    assert fc.current_plan().shape == (4, 4)
+    ev = fc.on_step(1, {0: 0.1, 1: 0.1, 2: 0.1, 3: 0.1})
+    assert ev is None
+    fc.fail_host(3)
+    ev = fc.on_step(2, {0: 0.1, 1: 0.1, 2: 0.1})
+    assert ev is not None
+    assert 3 in ev.evicted_hosts
+    assert fc.current_plan().shape == (3, 4)
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+
+def test_synthetic_deterministic_per_step_host():
+    src = SyntheticLM(100, seed=5)
+    a = src.batch(3, 0, (4, 16))
+    b = src.batch(3, 0, (4, 16))
+    c = src.batch(4, 0, (4, 16))
+    d = src.batch(3, 1, (4, 16))
+    np.testing.assert_array_equal(a, b)
+    assert not np.array_equal(a, c)
+    assert not np.array_equal(a, d)
+
+
+def test_pipeline_resume_replays_same_stream():
+    cfg = get_arch("stablelm-3b").reduced()
+    import dataclasses
+    shape = dataclasses.replace(TRAIN_4K, seq_len=16, global_batch=4)
+    p1 = Pipeline(cfg, shape, DataConfig(seed=9), start_step=5)
+    p2 = Pipeline(cfg, shape, DataConfig(seed=9), start_step=5)
+    b1 = next(iter(p1))
+    b2 = next(iter(p2))
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+
+
+def test_pipeline_prefetch_matches_sync():
+    cfg = get_arch("stablelm-3b").reduced()
+    import dataclasses
+    shape = dataclasses.replace(TRAIN_4K, seq_len=16, global_batch=4)
+    sync = Pipeline(cfg, shape, DataConfig(seed=3))
+    pre = Pipeline(cfg, shape, DataConfig(seed=3)).start()
+    it_s, it_p = iter(sync), iter(pre)
+    try:
+        for _ in range(3):
+            bs, bp = next(it_s), next(it_p)
+            np.testing.assert_array_equal(bs["tokens"], bp["tokens"])
+    finally:
+        pre.stop()
+
+
+def test_pipeline_host_sharding_splits_batch():
+    cfg = get_arch("stablelm-3b").reduced()
+    import dataclasses
+    shape = dataclasses.replace(TRAIN_4K, seq_len=16, global_batch=8)
+    p = Pipeline(cfg, shape, DataConfig(seed=3), host_index=1, n_hosts=4)
+    b = next(iter(p))
+    assert b["tokens"].shape[0] == 2
+
+
+def test_synthetic_has_learnable_structure():
+    src = SyntheticLM(50, seed=1)
+    toks = src.batch(0, 0, (64, 32))
+    nxt_pred = (5 * toks[:, :-1] + 7) % 50
+    agree = (toks[:, 1:] == nxt_pred).mean()
+    assert agree > 0.4  # planted bigram signal present
+
+
+# ---------------------------------------------------------------------------
+# plans + analysis (directive assignment)
+# ---------------------------------------------------------------------------
+
+
+def test_plan_genes_roundtrip():
+    plan = analysis.build_plan(get_arch("stablelm-3b"), None)
+    genes = plan.genes()
+    flipped = tuple(1 - g for g in genes)
+    plan2 = plan.with_genes(flipped)
+    assert plan2.genes() == flipped
+    assert plan.genes() == genes  # frozen
+
+
+def test_plan_rejects_duplicate_units():
+    u = UnitPlan("a", Directive.KERNELS)
+    with pytest.raises(ValueError):
+        ExecutionPlan(units=(u, u))
+
+
+def test_previous_method_plan_offloads_only_kernels_units():
+    plan = analysis.previous_method_plan(get_arch("gemma2-27b"), None)
+    for unit in plan.units:
+        if unit.directive != Directive.KERNELS:
+            assert not unit.offload
+        assert not unit.bulk_gather and not unit.keep_sharded
+        assert not unit.staged
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_build_units_covers_model_groups(arch_id):
+    cfg = get_arch(arch_id)
+    units = analysis.build_units(cfg, None)
+    names = {u.name for u in units}
+    if cfg.family in ("ssm", "hybrid"):
+        assert any(n.endswith("/ssd") for n in names)
+    if cfg.moe is not None:
+        assert any(n.endswith("/moe") for n in names)
+    if cfg.family != "encoder":
+        assert "embed" in names
+    assert "unembed" in names
+
+
+def test_applicability_notes_mention_family_constraints():
+    notes_ssm = analysis.applicability_notes(get_arch("mamba2-1.3b"))
+    assert any("attention-free" in n for n in notes_ssm)
+    notes_enc = analysis.applicability_notes(get_arch("hubert-xlarge"))
+    assert any("encoder-only" in n for n in notes_enc)
+
+
+# ---------------------------------------------------------------------------
+# monitor
+# ---------------------------------------------------------------------------
+
+
+def test_monitor_summary():
+    m = Monitor()
+    for i in range(3):
+        m.start_step()
+        time.sleep(0.001)
+        m.end_step(i, loss=1.0, tokens=100)
+    s = m.summary()
+    assert s["steps"] == 3
+    assert s["tokens_per_s"] > 0
+    assert s["loss_ewma"] == pytest.approx(1.0)

@@ -1,0 +1,191 @@
+"""Transfer-scheduling invariants (paper §3.3), incl. hypothesis tests over
+randomly generated loop programs."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import transfer as tr
+from repro.core.loopir import Loop, LoopClass, LoopProgram, SeqRegion, Var
+
+
+def _mk_prog(n_loops, n_vars, region_trip, edges, classes, globals_mask):
+    vars_ = [
+        Var(f"v{i}", nbytes=(i + 1) * 1000, is_global=bool(globals_mask[i]),
+            init_external=bool(globals_mask[i]))
+        for i in range(n_vars)
+    ]
+    loops = []
+    for i in range(n_loops):
+        reads = frozenset(f"v{j}" for j in edges[i][0])
+        writes = frozenset(f"v{j}" for j in edges[i][1])
+        loops.append(
+            Loop(
+                name=f"l{i}",
+                klass=classes[i],
+                trip=4,
+                inner_trip=8,
+                flops_per_iter=2.0,
+                reads=reads,
+                writes=writes,
+                parent_seq="r" if i % 2 == 0 and region_trip > 1 else None,
+            )
+        )
+    # keep region loops contiguous (the IR executes regions as blocks)
+    loops.sort(key=lambda l: (l.parent_seq is None, l.name))
+    return LoopProgram(
+        name="synth",
+        loops=tuple(loops),
+        vars=tuple(vars_),
+        seq_regions=(SeqRegion("r", region_trip),) if region_trip > 1 else (),
+    )
+
+
+@st.composite
+def programs(draw):
+    n_loops = draw(st.integers(1, 8))
+    n_vars = draw(st.integers(1, 5))
+    region_trip = draw(st.sampled_from([1, 3, 10]))
+    edges = []
+    for _ in range(n_loops):
+        reads = draw(st.sets(st.integers(0, n_vars - 1), max_size=3))
+        writes = draw(st.sets(st.integers(0, n_vars - 1), max_size=2))
+        edges.append((reads, writes))
+    classes = [
+        draw(st.sampled_from([LoopClass.TIGHT, LoopClass.NON_TIGHT,
+                              LoopClass.VECTOR_ONLY]))
+        for _ in range(n_loops)
+    ]
+    globals_mask = [draw(st.booleans()) for _ in range(n_vars)]
+    return _mk_prog(n_loops, n_vars, region_trip, edges, classes, globals_mask)
+
+
+@st.composite
+def program_and_genes(draw):
+    prog = draw(programs())
+    genes = tuple(
+        draw(st.integers(0, 1)) for _ in range(prog.gene_length)
+    )
+    return prog, genes
+
+
+@given(program_and_genes())
+@settings(max_examples=120, deadline=None)
+def test_all_zero_genes_no_transfers(pg):
+    prog, _ = pg
+    sched = tr.build_schedule(prog, (0,) * prog.gene_length, tr.TransferMode.BULK)
+    assert sched.total_bytes == 0
+    assert sched.h2d_count == 0 and sched.d2h_count == 0
+
+
+@given(program_and_genes())
+@settings(max_examples=120, deadline=None)
+def test_bulk_never_more_bytes_than_nest(pg):
+    """The paper's claim: program-wide residency only removes transfers."""
+    prog, genes = pg
+    bulk = tr.build_schedule(prog, genes, tr.TransferMode.BULK, staged=True)
+    nest = tr.build_schedule(prog, genes, tr.TransferMode.NEST, staged=True)
+    assert bulk.h2d_bytes <= nest.h2d_bytes + 1e-9
+    assert bulk.d2h_bytes <= nest.d2h_bytes + 1e-9
+
+
+@given(program_and_genes())
+@settings(max_examples=120, deadline=None)
+def test_nest_never_more_explicit_bytes_than_naive(pg):
+    prog, genes = pg
+    nest = tr.build_schedule(prog, genes, tr.TransferMode.NEST, staged=True)
+    naive = tr.build_schedule(prog, genes, tr.TransferMode.NAIVE, staged=True)
+    assert nest.h2d_bytes <= naive.h2d_bytes + 1e-9
+    assert nest.d2h_bytes <= naive.d2h_bytes + 1e-9
+
+
+@given(program_and_genes())
+@settings(max_examples=120, deadline=None)
+def test_staged_removes_auto_sync(pg):
+    prog, genes = pg
+    for mode in tr.TransferMode:
+        s_on = tr.build_schedule(prog, genes, mode, staged=True)
+        s_off = tr.build_schedule(prog, genes, mode, staged=False)
+        assert s_on.auto_sync_bytes == 0
+        assert s_off.auto_sync_bytes >= 0
+        # staging changes ONLY the auto-sync component
+        assert s_on.h2d_bytes == s_off.h2d_bytes
+        assert s_on.d2h_bytes == s_off.d2h_bytes
+
+
+@given(program_and_genes())
+@settings(max_examples=80, deadline=None)
+def test_gpu_written_live_data_returns_to_host(pg):
+    """Every var written ONLY on the accelerator must be copied back at
+    least once under BULK (end-of-program flush)."""
+    prog, genes = pg
+    offload = prog.genes_to_offloads(genes)
+    sched = tr.build_schedule(prog, genes, tr.TransferMode.BULK)
+    gpu_written = set()
+    cpu_touch_after = set()
+    for loop in prog.loops:
+        if offload[loop.name]:
+            gpu_written |= loop.writes
+        else:
+            cpu_touch_after |= loop.reads | loop.writes
+    final_gpu_only = gpu_written - cpu_touch_after
+    if final_gpu_only:
+        assert sched.d2h_bytes > 0
+
+
+def test_present_elision_two_consecutive_gpu_reads():
+    """A var read by two consecutive offloaded loops crosses once (BULK)."""
+    v = Var("x", 1000)
+    l1 = Loop("a", LoopClass.TIGHT, 2, 2, 1.0, frozenset({"x"}), frozenset())
+    l2 = Loop("b", LoopClass.TIGHT, 2, 2, 1.0, frozenset({"x"}), frozenset())
+    prog = LoopProgram("p", (l1, l2), (v,))
+    bulk = tr.build_schedule(prog, (1, 1), tr.TransferMode.BULK)
+    assert bulk.h2d_count == 1
+    nest = tr.build_schedule(prog, (1, 1), tr.TransferMode.NAIVE)
+    assert nest.h2d_count == 2
+
+
+def test_cpu_write_invalidates_device_copy():
+    v = Var("x", 1000)
+    g1 = Loop("a", LoopClass.TIGHT, 2, 2, 1.0, frozenset({"x"}), frozenset())
+    c = Loop("c", LoopClass.NOT_OFFLOADABLE, 2, 2, 1.0, frozenset(),
+             frozenset({"x"}))
+    g2 = Loop("b", LoopClass.TIGHT, 2, 2, 1.0, frozenset({"x"}), frozenset())
+    prog = LoopProgram("p", (g1, c, g2), (v,))
+    bulk = tr.build_schedule(prog, (1, 1), tr.TransferMode.BULK)
+    assert bulk.h2d_count == 2  # re-transferred after the CPU write
+
+
+def test_nest_mode_flushes_region_written_vars_every_iteration():
+    """The Jacobi ping-pong: p written on GPU inside the region re-syncs
+    per iteration under NEST but stays resident under BULK."""
+    p = Var("p", 1_000_000)
+    stencil = Loop("st", LoopClass.TIGHT, 4, 4, 1.0, frozenset({"p"}),
+                   frozenset({"p"}), parent_seq="it")
+    prog = LoopProgram("h", (stencil,), (p,), (SeqRegion("it", 50),))
+    nest = tr.build_schedule(prog, (1,), tr.TransferMode.NEST)
+    bulk = tr.build_schedule(prog, (1,), tr.TransferMode.BULK)
+    assert nest.d2h_count == 50  # one flush per iteration
+    assert nest.h2d_count == 50  # re-validated per iteration
+    assert bulk.h2d_count == 1  # in once
+    assert bulk.d2h_count == 1  # final result back once
+
+
+def test_nest_mode_hoists_readonly_arrays():
+    """[33] hoists read-only coefficient arrays out of the region."""
+    a = Var("a", 500_000)
+    stencil = Loop("st", LoopClass.TIGHT, 4, 4, 1.0, frozenset({"a"}),
+                   frozenset(), parent_seq="it")
+    prog = LoopProgram("h", (stencil,), (a,), (SeqRegion("it", 50),))
+    nest = tr.build_schedule(prog, (1,), tr.TransferMode.NEST)
+    assert nest.h2d_count == 1  # transferred once, stays resident
+    assert nest.d2h_count == 0
+
+
+def test_auto_sync_small_unsafe_vars_only():
+    big = Var("big", 100 << 20, is_global=True, init_external=True)
+    small = Var("small", 1024, is_global=True, init_external=True)
+    l = Loop("a", LoopClass.TIGHT, 2, 2, 1.0, frozenset({"big", "small"}),
+             frozenset())
+    prog = LoopProgram("p", (l,), (big, small))
+    s = tr.build_schedule(prog, (1,), tr.TransferMode.NEST, staged=False)
+    assert s.auto_sync_bytes == 2 * 1024  # only the small parameter leaks
