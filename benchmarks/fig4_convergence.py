@@ -11,11 +11,12 @@ from __future__ import annotations
 import argparse
 
 from repro.core import evaluator as ev
+from repro.core import evalpool as ep
 from repro.core import ga, miniapps
 from repro.core import transfer as tr
 
 
-def convergence(app: str, method: str, seed: int = 0):
+def convergence(app: str, method: str, seed: int = 0, workers: int = 1):
     prog = miniapps.MINIAPPS[app]()
     n = prog.gene_length
     cpu = ev.predict_time(prog, (0,) * n).total_s
@@ -26,7 +27,8 @@ def convergence(app: str, method: str, seed: int = 0):
     else:
         e = ev.MiniappEvaluator(prog, tr.TransferMode.BULK, staged=True)
     params = ga.GAParams.for_gene_length(n, seed=seed)
-    result = ga.run_ga(e, n, params)
+    with ep.EvalPool(e, workers=workers) as pool:
+        result = ga.run_ga(None, n, params, pool=pool)
     return cpu, result
 
 
@@ -43,22 +45,24 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--app", default="nasft", choices=list(miniapps.MINIAPPS))
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--workers", type=int, default=1)
     args = ap.parse_args(argv)
 
     print(f"== fig4: GA convergence, {args.app} ==")
     for method in ("previous", "proposed"):
-        cpu, res = convergence(args.app, method, args.seed)
+        cpu, res = convergence(args.app, method, args.seed, args.workers)
         rows = [
             (h.generation, cpu / h.best_time_s) for h in res.history
         ]
+        dedup = max((h.dedup_ratio for h in res.history), default=0.0)
         print(f"\n[{method}] CPU-only {cpu:.1f}s; "
               f"final {res.best_time_s:.2f}s = {cpu/res.best_time_s:.1f}x "
               f"({res.evaluations} evals, {res.cache_hits} cache hits, "
-              f"search wall {res.wall_s:.1f}s)")
+              f"peak dedup {dedup:.0%}, search wall {res.wall_s:.1f}s)")
         print(ascii_plot(rows))
-        print("csv:generation,speedup")
-        for g, s in rows:
-            print(f"csv:{g},{s:.3f}")
+        print("csv:generation,speedup,gen_wall_s,hit_rate")
+        for (g, s), h in zip(rows, res.history):
+            print(f"csv:{g},{s:.3f},{h.gen_wall_s:.4f},{h.hit_rate:.3f}")
 
 
 if __name__ == "__main__":

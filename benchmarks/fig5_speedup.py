@@ -16,6 +16,7 @@ import argparse
 from typing import Dict, Tuple
 
 from repro.core import evaluator as ev
+from repro.core import evalpool as ep
 from repro.core import ga, miniapps
 from repro.core import transfer as tr
 
@@ -45,7 +46,8 @@ CONFIGS: Dict[str, dict] = {
 }
 
 
-def run(app: str, config: str, seed: int = 0) -> Tuple[float, float]:
+def run(app: str, config: str, seed: int = 0, workers: int = 1,
+        cache_path: str = None) -> Tuple[float, float]:
     prog = miniapps.MINIAPPS[app]()
     n = prog.gene_length
     cpu = ev.predict_time(prog, (0,) * n).total_s
@@ -53,8 +55,11 @@ def run(app: str, config: str, seed: int = 0) -> Tuple[float, float]:
     e = ev.MiniappEvaluator(
         prog, kw["mode"], staged=kw["staged"], kernels_only=kw["kernels_only"]
     )
+    cache = ep.FitnessCache(cache_path, fingerprint=e.fingerprint()) \
+        if cache_path else None
     params = ga.GAParams.for_gene_length(n, seed=seed)
-    res = ga.run_ga(e, n, params)
+    with ep.EvalPool(e, workers=workers, cache=cache) as pool:
+        res = ga.run_ga(None, n, params, pool=pool)
     return cpu, cpu / res.best_time_s
 
 
@@ -62,6 +67,10 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--ablate", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--workers", type=int, default=1)
+    ap.add_argument("--cache", default=None, metavar="PATH",
+                    help="persistent fitness cache (JSONL, shared by all "
+                         "app/config pairs; fingerprints keep them apart)")
     args = ap.parse_args(argv)
 
     configs = (
@@ -74,7 +83,7 @@ def main(argv=None):
     print(f"{'app':10s} {'config':20s} {'speedup':>8s} {'paper':>7s}")
     for app in miniapps.MINIAPPS:
         for config in configs:
-            cpu, sp = run(app, config, args.seed)
+            cpu, sp = run(app, config, args.seed, args.workers, args.cache)
             paper = PAPER.get((app, config))
             ptxt = f"{paper:.1f}x" if paper else "-"
             print(f"{app:10s} {config:20s} {sp:7.1f}x {ptxt:>7s}")

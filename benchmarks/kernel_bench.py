@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.evalpool import parallel_map
 from repro.kernels import ops, ref
 
 
@@ -30,9 +31,12 @@ def _time(fn, *args, repeats=3):
     return best
 
 
-def bench_attention(check_kernel: bool):
+def bench_attention(check_kernel: bool, workers: int = 1):
     print("\n== flash attention ==")
     rng = np.random.default_rng(0)
+    cases = []
+    # wall-clock timings run serially (parallel timing is meaningless);
+    # only the interpret-mode correctness checks below fan out
     for (B, S, H, K, D) in [(1, 512, 8, 8, 64), (1, 1024, 8, 2, 64),
                             (4, 512, 16, 2, 128)]:
         q = jnp.asarray(rng.normal(size=(B, S, H, D)), jnp.float32)
@@ -47,19 +51,27 @@ def bench_attention(check_kernel: bool):
         err = float(
             jnp.abs(f_ref(q, k, v) - f_chk(q, k, v)).max()
         )
+        cases.append(((B, S, H, K, D), (q, k, v), f_ref, t_ref, t_chk, err))
+
+    def check(case):
+        (_, (q, k, v), f_ref, *_rest) = case
+        out_k = ops.flash_attention(q, k, v, causal=True, interpret=True)
+        return float(jnp.abs(f_ref(q, k, v) - out_k).max())
+
+    errs_k = parallel_map(check, cases, workers) if check_kernel else None
+    for i, ((B, S, H, K, D), _, _, t_ref, t_chk, err) in enumerate(cases):
         line = (f"B{B} S{S} H{H}/K{K} D{D}: dense {t_ref*1e3:7.1f} ms, "
                 f"chunked {t_chk*1e3:7.1f} ms, |err| {err:.2e}")
-        if check_kernel:
-            out_k = ops.flash_attention(q, k, v, causal=True, interpret=True)
-            err_k = float(jnp.abs(f_ref(q, k, v) - out_k).max())
-            line += f", pallas(interp) |err| {err_k:.2e}"
+        if errs_k is not None:
+            line += f", pallas(interp) |err| {errs_k[i]:.2e}"
         print("  " + line)
         print(f"csv:attention,{B},{S},{H},{K},{D},{t_ref*1e6:.0f},{t_chk*1e6:.0f},{err:.2e}")
 
 
-def bench_ssd(check_kernel: bool):
+def bench_ssd(check_kernel: bool, workers: int = 1):
     print("\n== SSD chunked scan ==")
     rng = np.random.default_rng(0)
+    cases = []
     for (B, S, H, P, N, chunk) in [(1, 1024, 8, 64, 64, 128),
                                    (4, 512, 8, 64, 128, 128)]:
         x = jnp.asarray(rng.normal(size=(B, S, H, P)), jnp.float32)
@@ -69,11 +81,18 @@ def bench_ssd(check_kernel: bool):
         Cm = jnp.asarray(rng.normal(size=(B, S, N)), jnp.float32)
         f = jax.jit(lambda *a: ref.ssd_ref(*a, chunk=chunk))
         t = _time(f, x, dt, A, Bm, Cm)
+        cases.append(((B, S, H, P, N, chunk), (x, dt, A, Bm, Cm), f, t))
+
+    def check(case):
+        ((_, _, _, _, _, chunk), args_, f, _) = case
+        out_k = ops.ssd_scan(*args_, chunk=chunk, interpret=True)
+        return float(jnp.abs(f(*args_) - out_k).max())
+
+    errs_k = parallel_map(check, cases, workers) if check_kernel else None
+    for i, ((B, S, H, P, N, chunk), _, _, t) in enumerate(cases):
         line = f"B{B} S{S} H{H} P{P} N{N} chunk{chunk}: ref {t*1e3:7.1f} ms"
-        if check_kernel:
-            out_k = ops.ssd_scan(x, dt, A, Bm, Cm, chunk=chunk, interpret=True)
-            err_k = float(jnp.abs(f(x, dt, A, Bm, Cm) - out_k).max())
-            line += f", pallas(interp) |err| {err_k:.2e}"
+        if errs_k is not None:
+            line += f", pallas(interp) |err| {errs_k[i]:.2e}"
         print("  " + line)
         print(f"csv:ssd,{B},{S},{H},{P},{N},{t*1e6:.0f}")
 
@@ -82,9 +101,11 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--check-kernel", action="store_true",
                     help="also run the Pallas kernels in interpret mode")
+    ap.add_argument("--workers", type=int, default=1,
+                    help="concurrent interpret-mode kernel checks")
     args = ap.parse_args(argv)
-    bench_attention(args.check_kernel)
-    bench_ssd(args.check_kernel)
+    bench_attention(args.check_kernel, args.workers)
+    bench_ssd(args.check_kernel, args.workers)
 
 
 if __name__ == "__main__":

@@ -2,6 +2,7 @@
 
   PYTHONPATH=src python -m benchmarks.run            # everything fast
   PYTHONPATH=src python -m benchmarks.run --section fig5 --ablate
+  PYTHONPATH=src python -m benchmarks.run --section evalpool --workers 8
 """
 from __future__ import annotations
 
@@ -17,16 +18,59 @@ from benchmarks import (
     transfer_ablation,
 )
 
+
+def _evalpool_section(args) -> None:
+    """Pooled vs serial generation wall-clock on a latency-instrumented
+    evaluator: the analytic miniapp model with a fixed sleep injected per
+    measurement (standing in for a verification-environment deploy+run)."""
+    from repro.core import evalpool as ep
+    from repro.core import evaluator as ev
+    from repro.core import ga, miniapps
+    from repro.core import transfer as tr
+
+    delay_s = 0.02
+    prog = miniapps.himeno_program()
+    base = ev.MiniappEvaluator(prog, tr.TransferMode.BULK, staged=True)
+
+    def slow_eval(genes):
+        time.sleep(delay_s)
+        return base(genes)
+
+    n = prog.gene_length
+    params = ga.GAParams.for_gene_length(n, seed=0)
+    print(f"\n== evalpool: {params.population}x{params.generations} GA, "
+          f"{delay_s*1e3:.0f} ms per measurement ==")
+    print("csv:workers,wall_s,evals,cache_hits,hit_rate,best_time_s")
+    serial_wall = None
+    for workers in (1, args.workers) if args.workers > 1 else (1, 4):
+        with ep.EvalPool(slow_eval, workers=workers) as pool:
+            r = ga.run_ga(None, n, params, pool=pool)
+            tot = pool.totals()
+        if serial_wall is None:
+            serial_wall = r.wall_s
+        print(f"  workers={workers}: wall {r.wall_s:6.2f}s "
+              f"({serial_wall / r.wall_s:4.1f}x vs serial), "
+              f"{tot.evaluated} measurements, {tot.cache_hits} cache hits "
+              f"(hit-rate {tot.hit_rate:.0%}), best {r.best_time_s:.3f}s")
+        print(f"csv:{workers},{r.wall_s:.3f},{tot.evaluated},"
+              f"{tot.cache_hits},{tot.hit_rate:.3f},{r.best_time_s:.4f}")
+
+
 SECTIONS = {
-    "fig4": lambda args: fig4_convergence.main([]),
+    "fig4": lambda args: fig4_convergence.main(
+        ["--workers", str(args.workers)]
+    ),
     "fig5": lambda args: fig5_speedup.main(
-        ["--ablate"] if args.ablate else []
+        (["--ablate"] if args.ablate else [])
+        + ["--workers", str(args.workers)]
     ),
     "transfer": lambda args: transfer_ablation.main([]),
     "kernels": lambda args: kernel_bench.main(
-        ["--check-kernel"] if args.check_kernel else []
+        (["--check-kernel"] if args.check_kernel else [])
+        + ["--workers", str(args.workers)]
     ),
     "roofline": lambda args: roofline_table.main([]),
+    "evalpool": _evalpool_section,
 }
 
 
@@ -35,6 +79,9 @@ def main() -> None:
     ap.add_argument("--section", choices=list(SECTIONS), default=None)
     ap.add_argument("--ablate", action="store_true")
     ap.add_argument("--check-kernel", action="store_true")
+    ap.add_argument("--workers", type=int, default=1,
+                    help="evaluation-pool size for the GA sections and the "
+                         "kernel-check fan-out")
     args = ap.parse_args()
 
     picks = [args.section] if args.section else list(SECTIONS)

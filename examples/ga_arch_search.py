@@ -25,6 +25,11 @@ def main():
     ap.add_argument("--compiled", action="store_true")
     ap.add_argument("--generations", type=int, default=0,
                     help="override GA generations")
+    ap.add_argument("--workers", type=int, default=1,
+                    help="concurrent fitness measurements per generation")
+    ap.add_argument("--cache", default=None, metavar="PATH",
+                    help="persistent fitness cache (JSONL); lets a killed "
+                         "search resume without re-measuring")
     args = ap.parse_args()
 
     if args.compiled and "XLA_FLAGS" not in os.environ:
@@ -32,6 +37,8 @@ def main():
 
     from repro.configs import get_arch
     from repro.core import analysis, ga
+    from repro.core.evalpool import EvalPool, FitnessCache, \
+        evaluator_fingerprint
     from repro.core.evaluator import CompiledEvaluator
 
     cfg = get_arch(args.arch)
@@ -55,7 +62,10 @@ def main():
             )
             return rec["roofline"]["t_step_s"]
 
-        evaluator = CompiledEvaluator(build_and_score, verbose=True)
+        evaluator = CompiledEvaluator(
+            build_and_score, verbose=True, compile_workers=args.workers,
+            tag=f"{args.arch}:train_4k:16x16",
+        )
         gens = args.generations or 4
         params = ga.GAParams(population=min(n, 6), generations=gens,
                              seed=0, timeout_s=1e6)
@@ -80,6 +90,9 @@ def main():
                     t += 2 * cfg.d_model * 4096 * 2 / 50e9 / 1e3  # reshard
             return t
 
+        # cache key: the closure's qualname alone would collide across
+        # --arch values, silently sharing measurements between models
+        analytic_time.fingerprint = lambda: f"analytic-plan:{args.arch}"
         evaluator = analytic_time
         params = ga.GAParams(
             population=min(n, 10),
@@ -87,13 +100,27 @@ def main():
             seed=0, timeout_s=1e6,
         )
 
+    cache = FitnessCache(args.cache,
+                         fingerprint=evaluator_fingerprint(evaluator)) \
+        if args.cache else None
+    if cache is not None and len(cache):
+        print(f"resumed fitness cache: {len(cache)} measurements "
+              f"({args.cache})")
+    pool = EvalPool(evaluator, workers=args.workers, cache=cache)
     result = ga.run_ga(
-        evaluator, n, params,
+        None, n, params, pool=pool,
         on_generation=lambda s: print(
-            f"  gen {s.generation}: best {s.best_time_s*1e3:.2f} ms"
+            f"  gen {s.generation}: best {s.best_time_s*1e3:.2f} ms "
+            f"(wall {s.gen_wall_s:.2f}s, dedup {s.dedup_ratio:.0%}, "
+            f"hit-rate {s.hit_rate:.0%})"
         ),
     )
-    print(f"\nbest genes: {result.best_genes}")
+    tot = pool.totals()
+    pool.close()
+    print(f"\nsearch: {tot.evaluated} measurements for "
+          f"{tot.submitted} individuals "
+          f"({tot.cache_hits} cache hits, {tot.timeouts} timeouts)")
+    print(f"best genes: {result.best_genes}")
     best_plan = analysis.build_plan(cfg, None, genes=result.best_genes)
     print(best_plan.describe())
 

@@ -10,17 +10,25 @@ ratios). Each candidate is scored by running the REAL GA (fixed seed) for
 both apps and both methods — the same pipeline the benchmarks use — and
 minimizing the sum of squared log-errors to the four targets.
 
-Run: PYTHONPATH=src python scripts/calibrate_miniapps.py
+Run: PYTHONPATH=src python scripts/calibrate_miniapps.py [--workers N]
 Prints the best constants; they are then frozen into core/evaluator.py.
+
+Each candidate's four GA runs go through an EvalPool: --workers measures
+individuals concurrently, and --cache-dir persists every (hardware
+fingerprint, genome) measurement so an interrupted sweep resumes warm —
+re-scored grid points are answered entirely from cache.
 """
+import argparse
 import dataclasses
 import itertools
 import math
+import os
 import sys
 
 import numpy as np
 
 from repro.core import evaluator as ev
+from repro.core import evalpool as ep
 from repro.core import ga
 from repro.core import miniapps
 from repro.core import transfer as tr
@@ -32,8 +40,11 @@ PROGS = {"himeno": miniapps.himeno_program(), "nasft": miniapps.nasft_program()}
 
 
 def make_hw(cpu_f, cpu_bw, acc_f, acc_bw, link):
+    # the name keys the fitness cache (via MiniappEvaluator.fingerprint),
+    # so it must identify this candidate's constants uniquely
     return ev.HardwareModel(
-        name="cand",
+        name=f"cand-{cpu_f:.4g}-{cpu_bw:.4g}-{acc_f:.4g}-{acc_bw:.4g}"
+             f"-{link:.4g}",
         cpu_flops=cpu_f,
         cpu_membw=cpu_bw,
         accel_flops_kernels=acc_f,
@@ -46,7 +57,7 @@ def make_hw(cpu_f, cpu_bw, acc_f, acc_bw, link):
     )
 
 
-def speedups(hw):
+def speedups(hw, workers: int = 1, cache_dir: str = None):
     out = {}
     for name, prog in PROGS.items():
         n = prog.gene_length
@@ -57,8 +68,20 @@ def speedups(hw):
             ("prop", ev.MiniappEvaluator(prog, tr.TransferMode.BULK,
                                           staged=True, hw=hw)),
         ]:
+            cache = None
+            if cache_dir:
+                # one file PER candidate (hw.name encodes the constants):
+                # a shared file would be re-parsed in full by every new
+                # candidate only to discard foreign-fingerprint lines —
+                # O(candidates^2) JSON work by sweep end
+                cache = ep.FitnessCache(
+                    os.path.join(cache_dir,
+                                 f"{name}-{method}-{hw.name}.jsonl"),
+                    fingerprint=evaluator.fingerprint(),
+                )
             p = ga.GAParams.for_gene_length(n, seed=0)
-            r = ga.run_ga(evaluator, n, p)
+            with ep.EvalPool(evaluator, workers=workers, cache=cache) as pool:
+                r = ga.run_ga(None, n, p, pool=pool)
             out[(name, method)] = cpu / r.best_time_s
     return out
 
@@ -68,6 +91,19 @@ def score(sp):
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workers", type=int, default=1,
+                    help="concurrent measurements per GA generation")
+    ap.add_argument("--cache-dir", default=None,
+                    help="persist fitness measurements (JSONL per "
+                         "app/method); an interrupted sweep resumes warm")
+    args = ap.parse_args()
+    if args.cache_dir:
+        os.makedirs(args.cache_dir, exist_ok=True)
+
+    def run_speedups(hw):
+        return speedups(hw, workers=args.workers, cache_dir=args.cache_dir)
+
     grid = {
         "cpu_f": [2.0e9, 3.0e9, 4.5e9],
         "cpu_bw": [6.0e9, 9.0e9, 13e9],
@@ -78,7 +114,7 @@ def main():
     best = None
     for vals in itertools.product(*grid.values()):
         hw = make_hw(*vals)
-        sp = speedups(hw)
+        sp = run_speedups(hw)
         s = score(sp)
         if best is None or s < best[0]:
             best = (s, vals, sp)
@@ -92,7 +128,7 @@ def main():
     cur_s = s0
     for it in range(60):
         cand = cur * np.exp(rng.normal(0, 0.15, size=cur.shape))
-        sp = speedups(make_hw(*cand))
+        sp = run_speedups(make_hw(*cand))
         s = score(sp)
         if s < cur_s:
             cur, cur_s = cand, s
@@ -101,7 +137,7 @@ def main():
             print("  " + " ".join(f"{k[0]}/{k[1]}={v:.1f}x" for k, v in sp.items()))
             sys.stdout.flush()
     print("\nFINAL:", " ".join(f"{v:.4g}" for v in cur), "score", cur_s)
-    print(speedups(make_hw(*cur)))
+    print(run_speedups(make_hw(*cur)))
 
 
 if __name__ == "__main__":

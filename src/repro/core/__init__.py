@@ -5,13 +5,14 @@
 - genome / ga: the evolutionary search (fitness t^-1/2, roulette+elitism)
 - transfer: CPU-accelerator transfer reduction (bulk / present / temp-area)
 - evaluator: verification-environment scoring (analytic / measured / compiled)
+- evalpool: generation-level evaluation (dedup / persistent cache / workers)
 - pcast: final result-difference check
 - plan: ExecutionPlan — the genome's phenotype at the framework level
 """
-from repro.core import analysis, evaluator, ga, genome, loopir, miniapps
-from repro.core import pcast, plan, transfer
+from repro.core import analysis, evaluator, evalpool, ga, genome, loopir
+from repro.core import miniapps, pcast, plan, transfer
 
 __all__ = [
-    "analysis", "evaluator", "ga", "genome", "loopir", "miniapps",
-    "pcast", "plan", "transfer",
+    "analysis", "evaluator", "evalpool", "ga", "genome", "loopir",
+    "miniapps", "pcast", "plan", "transfer",
 ]

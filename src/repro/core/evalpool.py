@@ -1,0 +1,459 @@
+"""Evaluation pool: decouples the GA loop from fitness measurement.
+
+The paper's search cost is dominated by verification-environment
+measurements (§5.2: caching fitness for recurring gene patterns is what
+made the 7-hour budget feasible), and the mixed-destination follow-up
+(arXiv:2011.12431) searches several backends at once, multiplying the
+measurements per generation. This module scales that bottleneck three
+ways, without changing GA semantics:
+
+- **dedup** — identical gene patterns inside one generation are measured
+  once (roulette selection re-picks strong parents, so duplicates are
+  common in late generations);
+- **persistent fitness cache** — measurements are appended to an on-disk
+  JSONL file keyed by (evaluator fingerprint, genome), so a killed search
+  resumes without re-measuring anything it already paid for, and repeated
+  calibration sweeps share measurements across processes;
+- **concurrent evaluation** — the unique, uncached individuals of a
+  generation run on a thread (or process) pool with the paper's
+  per-individual timeout -> penalty semantics preserved, or through an
+  evaluator-provided ``evaluate_batch`` (the ``CompiledEvaluator``'s
+  batched AOT-compile path).
+
+Determinism: the GA's RNG stream never depends on evaluation order or
+worker count, and results are reduced back into population order, so a
+fixed seed produces the same best individual at pool size 1 and N.
+
+Cache file format (JSONL, one record per line, append-only)::
+
+    {"v": 1, "fp": "<evaluator fingerprint>", "genes": "0110...",
+     "t": <measured seconds, float>, "penalized": <bool>}
+
+- ``v``        format version (this module writes 1, skips others);
+- ``fp``       evaluator fingerprint — configuration string such as
+               ``miniapp:himeno:bulk:staged:quadro-p4000``; entries whose
+               fingerprint differs from the pool's are ignored, so one
+               file can serve many searches;
+- ``genes``    the genome as a 0/1 string (gene i = character i);
+- ``t``        the time fed back to the GA (post-penalty, seconds);
+- ``penalized`` whether ``t`` is the timeout/failure penalty rather than
+               a real measurement. Penalized records are written (for
+               telemetry/audit) but NOT replayed by ``load``: a timeout
+               may be transient and the penalty constant may differ
+               between runs, so resumed searches re-measure those
+               genomes instead of inheriting a poisoned value.
+
+Truncated/corrupt trailing lines (a killed writer) are skipped on load.
+The file is opened in append mode and flushed per record, so concurrent
+readers see a prefix of the log and a resumed search re-reads its own
+history. Use :meth:`FitnessCache.load` / :meth:`FitnessCache.flush_sync`
+for explicit control.
+"""
+from __future__ import annotations
+
+import concurrent.futures as cf
+import dataclasses
+import json
+import os
+import threading
+import time
+from typing import Callable, Dict, IO, List, Optional, Sequence, Tuple
+
+Genes = Tuple[int, ...]
+
+_CACHE_VERSION = 1
+
+
+def genes_key(genes: Sequence[int]) -> str:
+    """Genome -> stable string key ('0110...')."""
+    return "".join(str(int(g)) for g in genes)
+
+
+def evaluator_fingerprint(evaluate: Callable) -> str:
+    """Best-effort configuration fingerprint for an evaluator callable.
+
+    Evaluators may provide ``fingerprint()`` (the three core evaluators
+    do); plain functions fall back to their qualified name. The
+    fingerprint keys the persistent cache, so two differently-configured
+    evaluators never share measurements.
+    """
+    fp = getattr(evaluate, "fingerprint", None)
+    if callable(fp):
+        return str(fp())
+    name = getattr(evaluate, "__qualname__", None) or type(evaluate).__name__
+    mod = getattr(evaluate, "__module__", "")
+    return f"fn:{mod}.{name}"
+
+
+class FitnessCache:
+    """Genome -> measured seconds, optionally persisted as JSONL.
+
+    With ``path=None`` this is a plain in-memory dict (the GA's original
+    §5.2 cache). With a path, every ``put`` appends one JSON line and the
+    constructor replays the file, so a killed search resumes warm.
+    """
+
+    def __init__(self, path: Optional[str] = None, fingerprint: str = ""):
+        self.path = path
+        self.fingerprint = fingerprint
+        self._mem: Dict[str, float] = {}
+        self._lock = threading.Lock()
+        self._fh: Optional[IO[str]] = None
+        self.loaded = 0  # records replayed from disk at construction
+        if path:
+            self.load()
+            d = os.path.dirname(os.path.abspath(path))
+            os.makedirs(d, exist_ok=True)
+            self._fh = open(path, "a", encoding="utf-8")
+
+    def load(self) -> int:
+        """(Re)read the JSONL file; skips foreign-fingerprint, foreign-
+        version, and corrupt lines. Returns records absorbed."""
+        if not self.path or not os.path.exists(self.path):
+            return 0
+        n = 0
+        with open(self.path, "r", encoding="utf-8") as fh:
+            for line in fh:
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    rec = json.loads(line)
+                except (json.JSONDecodeError, ValueError):
+                    continue  # truncated trailing write from a killed run
+                if not isinstance(rec, dict):
+                    continue
+                if rec.get("v") != _CACHE_VERSION:
+                    continue
+                if rec.get("fp") != self.fingerprint:
+                    continue
+                if rec.get("penalized"):
+                    continue  # transient/param-dependent; re-measure
+                genes, t = rec.get("genes"), rec.get("t")
+                if not isinstance(genes, str) or not isinstance(
+                    t, (int, float)
+                ):
+                    continue
+                self._mem[genes] = float(t)
+                n += 1
+        self.loaded += n
+        return n
+
+    def __len__(self) -> int:
+        return len(self._mem)
+
+    def __contains__(self, genes: Sequence[int]) -> bool:
+        return genes_key(genes) in self._mem
+
+    def get(self, genes: Sequence[int]) -> Optional[float]:
+        return self._mem.get(genes_key(genes))
+
+    def put(
+        self, genes: Sequence[int], t: float, penalized: bool = False
+    ) -> None:
+        key = genes_key(genes)
+        with self._lock:
+            self._mem[key] = float(t)
+            if self._fh is not None:
+                rec = {
+                    "v": _CACHE_VERSION,
+                    "fp": self.fingerprint,
+                    "genes": key,
+                    "t": float(t),
+                    "penalized": bool(penalized),
+                }
+                self._fh.write(json.dumps(rec) + "\n")
+                self._fh.flush()
+
+    def flush_sync(self) -> None:
+        if self._fh is not None:
+            self._fh.flush()
+            os.fsync(self._fh.fileno())
+
+    def close(self) -> None:
+        if self._fh is not None:
+            self._fh.close()
+            self._fh = None
+
+    def __enter__(self) -> "FitnessCache":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+@dataclasses.dataclass
+class GenTelemetry:
+    """Per-generation search telemetry (emitted by evaluate_generation)."""
+
+    submitted: int = 0  # individuals handed to the pool
+    unique: int = 0  # distinct genomes after in-generation dedup
+    cache_hits: int = 0  # dedup repeats + persistent/memory cache serves
+    evaluated: int = 0  # fresh measurements actually run
+    timeouts: int = 0  # measurements scored as the penalty
+    wall_s: float = 0.0  # generation wall-clock (submit -> all reduced)
+
+    @property
+    def dedup_ratio(self) -> float:
+        """Fraction of submissions that were in-generation repeats of
+        another individual (a strict subset of what hit_rate counts)."""
+        if self.submitted == 0:
+            return 0.0
+        return (self.submitted - self.unique) / self.submitted
+
+    @property
+    def hit_rate(self) -> float:
+        """Fraction of submissions answered without a fresh measurement
+        (in-generation repeats + memory/persistent cache serves)."""
+        if self.submitted == 0:
+            return 0.0
+        return self.cache_hits / self.submitted
+
+    def row(self) -> Dict[str, float]:
+        return {
+            "submitted": self.submitted,
+            "unique": self.unique,
+            "cache_hits": self.cache_hits,
+            "evaluated": self.evaluated,
+            "timeouts": self.timeouts,
+            "wall_s": round(self.wall_s, 4),
+            "dedup_ratio": round(self.dedup_ratio, 4),
+            "hit_rate": round(self.hit_rate, 4),
+        }
+
+
+def _run_with_executor(
+    executor_kind: str,
+    workers: int,
+    evaluate: Callable[[Genes], float],
+    genes_list: List[Genes],
+    timeout_s: float,
+) -> List[Tuple[float, bool]]:
+    """Measure each genome; returns (raw seconds, timed_out) per genome.
+
+    Thread pools cannot kill a hung measurement, but a future that misses
+    its deadline is *scored* as a timeout immediately (the straggler
+    finishes in the background, exactly like the paper's verification
+    machine finishing a run after the 3-minute cutoff already penalized
+    it). Process pools get the same deadline semantics.
+    """
+    cls = (
+        cf.ProcessPoolExecutor
+        if executor_kind == "process"
+        else cf.ThreadPoolExecutor
+    )
+    out: List[Tuple[float, bool]] = [(float("inf"), True)] * len(genes_list)
+    ex = cls(max_workers=max(1, workers))
+    try:
+        t0 = time.monotonic()
+        futs = {ex.submit(evaluate, g): i for i, g in enumerate(genes_list)}
+        # every individual gets its full timeout; with w workers the batch
+        # runs in ceil(n/w) waves, so the generation deadline is that many
+        # timeouts out
+        deadline = t0 + timeout_s * max(
+            1, (len(genes_list) + workers - 1) // max(1, workers)
+        )
+        requeue: List[int] = []
+        for fut in list(futs):
+            i = futs[fut]
+            try:
+                remaining = max(0.0, deadline - time.monotonic())
+                out[i] = (float(fut.result(timeout=remaining)), False)
+            except cf.TimeoutError:
+                if fut.cancel():
+                    # never started (earlier hangs held every worker):
+                    # it used none of its budget, so it gets re-measured
+                    # below instead of being penalized unmeasured
+                    requeue.append(i)
+                else:
+                    out[i] = (float("inf"), True)
+            except Exception:  # measurement crash == compile error == penalty
+                out[i] = (float("inf"), True)
+    finally:
+        # don't block on hung stragglers mid-search: they are already
+        # scored as penalties and their results discarded while the GA
+        # moves on. LIMITATION: a worker that never returns still blocks
+        # interpreter exit (concurrent.futures joins surviving workers
+        # atexit), so an evaluator that can deadlock outright should
+        # enforce its own hard timeout (subprocess + kill), as a real
+        # verification harness does.
+        ex.shutdown(wait=False, cancel_futures=True)
+    if requeue:
+        # fresh executor, fresh deadline — each requeued individual still
+        # runs under timeout enforcement (never unbounded inline). Hangs
+        # shrink the set every round, so this terminates.
+        sub = _run_with_executor(
+            executor_kind, workers, evaluate,
+            [genes_list[i] for i in requeue], timeout_s,
+        )
+        for i, r in zip(requeue, sub):
+            out[i] = r
+    return out
+
+
+class EvalPool:
+    """Evaluates whole GA generations: dedup -> cache -> concurrent misses.
+
+    Parameters
+    ----------
+    evaluate:
+        ``genes -> seconds`` callable (any of the three core evaluators).
+        If it exposes ``evaluate_batch(list_of_genes) -> list_of_seconds``
+        and ``batch=True``, cache misses go through it in one call (the
+        ``CompiledEvaluator`` uses this for its batched AOT-compile path).
+    workers:
+        Concurrent measurements for the executor path. 1 = serial
+        in-line execution (no executor; byte-identical to the pre-pool GA
+        loop, and what ``run_ga`` builds when no pool is passed).
+    executor:
+        "thread" (default) or "process". Threads suit the analytic and
+        compiled evaluators (numpy/XLA release the GIL); processes suit
+        CPU-bound Python ``run_fn``s fed to ``MeasuredEvaluator`` —
+        but require picklable evaluators.
+    cache:
+        A :class:`FitnessCache`. Defaults to a fresh in-memory cache.
+    """
+
+    def __init__(
+        self,
+        evaluate: Callable[[Genes], float],
+        workers: int = 1,
+        executor: str = "thread",
+        cache: Optional[FitnessCache] = None,
+        batch: bool = True,
+    ):
+        if executor not in ("thread", "process"):
+            raise ValueError(f"executor must be thread|process: {executor!r}")
+        self.evaluate = evaluate
+        self.workers = max(1, int(workers))
+        self.executor = executor
+        self.cache = cache if cache is not None else FitnessCache()
+        self.batch = batch
+        self.history: List[GenTelemetry] = []
+
+    # -- single-genome path (kept for spot queries / penalty application) --
+
+    def _penalize(
+        self, t: float, timeout_s: float, penalty_time_s: float
+    ) -> Tuple[float, bool]:
+        ok = (
+            t == t  # not NaN
+            and t >= 0.0
+            and t != float("inf")
+            and t < timeout_s
+        )
+        return (t, False) if ok else (penalty_time_s, True)
+
+    def evaluate_generation(
+        self,
+        population: Sequence[Genes],
+        timeout_s: float,
+        penalty_time_s: float,
+    ) -> Tuple[List[float], GenTelemetry]:
+        """Times for every individual, in population order, plus telemetry.
+
+        Every returned time is post-penalty (the GA consumes it as-is).
+        """
+        t0 = time.monotonic()
+        tel = GenTelemetry(submitted=len(population))
+        pop = [tuple(int(g) for g in ind) for ind in population]
+
+        # in-generation dedup + cache lookup
+        unique: List[Genes] = []
+        seen: Dict[Genes, None] = {}
+        for ind in pop:
+            if ind not in seen:
+                seen[ind] = None
+                unique.append(ind)
+        tel.unique = len(unique)
+
+        times: Dict[Genes, float] = {}
+        misses: List[Genes] = []
+        for ind in unique:
+            hit = self.cache.get(ind)
+            if hit is not None:
+                # re-validate against THIS run's params: a resumed search
+                # may use a tighter timeout than the run that measured
+                # the value, in which case the stored time must score as
+                # the penalty now (the cache record itself is untouched)
+                times[ind] = self._penalize(hit, timeout_s, penalty_time_s)[0]
+            else:
+                misses.append(ind)
+        # dedup repeats + cache serves both avoid a fresh measurement
+        tel.cache_hits = (len(pop) - len(unique)) + (len(unique) - len(misses))
+        tel.evaluated = len(misses)
+
+        if misses:
+            raw = self._measure(misses, timeout_s)
+            for ind, (t, timed_out) in zip(misses, raw):
+                t, penalized = self._penalize(t, timeout_s, penalty_time_s)
+                penalized = penalized or timed_out
+                if penalized:
+                    t = penalty_time_s
+                    tel.timeouts += 1
+                times[ind] = t
+                self.cache.put(ind, t, penalized=penalized)
+
+        tel.wall_s = time.monotonic() - t0
+        self.history.append(tel)
+        return [times[ind] for ind in pop], tel
+
+    def _measure(
+        self, misses: List[Genes], timeout_s: float
+    ) -> List[Tuple[float, bool]]:
+        # NOTE: the batch path trusts the evaluator to bound its own time
+        # (CompiledEvaluator treats a failed compile as inf itself); only
+        # the executor path below enforces the wall-clock deadline. Pass
+        # batch=False to force deadline enforcement for a batch-capable
+        # evaluator.
+        batch_fn = getattr(self.evaluate, "evaluate_batch", None)
+        if self.batch and callable(batch_fn):
+            try:
+                return [(float(t), False) for t in batch_fn(misses)]
+            except Exception:
+                pass  # batch path degraded; fall through to point-wise
+        if self.workers == 1:
+            out: List[Tuple[float, bool]] = []
+            for g in misses:
+                try:
+                    out.append((float(self.evaluate(g)), False))
+                except Exception:
+                    out.append((float("inf"), True))
+            return out
+        return _run_with_executor(
+            self.executor, self.workers, self.evaluate, misses, timeout_s
+        )
+
+    # -- aggregate telemetry ------------------------------------------------
+
+    def totals(self) -> GenTelemetry:
+        tot = GenTelemetry()
+        for t in self.history:
+            tot.submitted += t.submitted
+            tot.unique += t.unique
+            tot.cache_hits += t.cache_hits
+            tot.evaluated += t.evaluated
+            tot.timeouts += t.timeouts
+            tot.wall_s += t.wall_s
+        return tot
+
+    def close(self) -> None:
+        self.cache.close()
+
+    def __enter__(self) -> "EvalPool":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+def parallel_map(
+    fn: Callable, items: Sequence, workers: int = 1
+) -> List:
+    """Order-preserving concurrent map on a thread pool (workers<=1 is a
+    plain loop). Shared by benchmark drivers for independent, GIL-releasing
+    work such as interpret-mode kernel checks."""
+    if workers <= 1 or len(items) <= 1:
+        return [fn(x) for x in items]
+    with cf.ThreadPoolExecutor(max_workers=workers) as ex:
+        return list(ex.map(fn, items))

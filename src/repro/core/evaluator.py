@@ -183,6 +183,15 @@ class MiniappEvaluator:
             self.prog, self.admissible(genes), self.mode, self.staged, self.hw
         ).total_s
 
+    def fingerprint(self) -> str:
+        """Configuration key for the persistent fitness cache (evalpool):
+        two evaluators share measurements iff their fingerprints match."""
+        return (
+            f"miniapp:{self.prog.name}:{self.mode.value}"
+            f":{'staged' if self.staged else 'unstaged'}:{self.hw.name}"
+            f"{':kernels-only' if self.kernels_only else ''}"
+        )
+
     def cpu_only_time(self) -> float:
         return predict_time(
             self.prog, (0,) * self.prog.gene_length, self.mode, True, self.hw
@@ -198,9 +207,13 @@ class MeasuredEvaluator:
     """Wall-clocks ``run_fn(genes)``; the GA applies the timeout penalty."""
 
     def __init__(self, run_fn: Callable[[Sequence[int]], None],
-                 repeats: int = 1):
+                 repeats: int = 1, tag: str = "default"):
         self.run_fn = run_fn
         self.repeats = repeats
+        # qualnames don't distinguish lambdas/partials/closures that differ
+        # only in captured state; set tag to the app/config identity when
+        # sharing a persistent fitness cache
+        self.tag = tag
 
     def __call__(self, genes: Sequence[int]) -> float:
         best = float("inf")
@@ -209,6 +222,12 @@ class MeasuredEvaluator:
             self.run_fn(genes)
             best = min(best, time.perf_counter() - t0)
         return best
+
+    def fingerprint(self) -> str:
+        name = getattr(self.run_fn, "__qualname__", None) \
+            or type(self.run_fn).__name__
+        mod = getattr(self.run_fn, "__module__", "")
+        return f"measured:{mod}.{name}:r{self.repeats}:{self.tag}"
 
 
 # ---------------------------------------------------------------------------
@@ -224,15 +243,24 @@ class CompiledEvaluator:
     ``launch.dryrun``) to keep core/ free of launch-time imports. Compile
     errors are the pgcc-compile-error analogue -> penalty (returned as inf,
     which the GA maps to the penalty time).
+
+    ``evaluate_batch`` is the evalpool's batched AOT-compile path: a whole
+    generation's unique, uncached genomes are compiled with up to
+    ``compile_workers`` concurrent lower+compile pipelines (XLA compilation
+    releases the GIL, so threads overlap the C++ compile work).
     """
 
     def __init__(
         self,
         build_and_score: Callable[[Tuple[int, ...]], float],
         verbose: bool = False,
+        compile_workers: int = 1,
+        tag: str = "default",
     ):
         self.build_and_score = build_and_score
         self.verbose = verbose
+        self.compile_workers = max(1, int(compile_workers))
+        self.tag = tag
         self.failures: Dict[Tuple[int, ...], str] = {}
 
     def __call__(self, genes: Sequence[int]) -> float:
@@ -247,3 +275,16 @@ class CompiledEvaluator:
         if self.verbose:
             print(f"[compiled-eval] {key} -> {t*1e3:.2f} ms")
         return t
+
+    def evaluate_batch(
+        self, genes_list: Sequence[Sequence[int]]
+    ) -> "list[float]":
+        from repro.core.evalpool import parallel_map
+
+        return parallel_map(self, list(genes_list), self.compile_workers)
+
+    def fingerprint(self) -> str:
+        name = getattr(self.build_and_score, "__qualname__", None) \
+            or type(self.build_and_score).__name__
+        mod = getattr(self.build_and_score, "__module__", "")
+        return f"compiled:{mod}.{name}:{self.tag}"

@@ -20,16 +20,27 @@
 The evaluator is any ``genes -> seconds`` callable: the analytic cost model,
 the measured miniapp runner, or the compiled-roofline evaluator for the
 framework-level search.
+
+Evaluation goes through :mod:`repro.core.evalpool`: the GA submits each
+whole generation to an :class:`~repro.core.evalpool.EvalPool`, which
+dedups identical gene patterns, serves repeats from a (optionally
+persistent on-disk) fitness cache, and measures the remaining unique
+individuals concurrently. ``run_ga`` with no pool builds a serial
+in-memory pool — identical results to the original point-wise loop for
+well-behaved evaluators; the one semantic difference is that an
+evaluator that *raises* is scored as the penalty (the pgcc
+compile-error analogue) instead of aborting the whole search.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core import genome as G
+from repro.core.evalpool import EvalPool
 
 Genes = G.Genes
 
@@ -64,6 +75,11 @@ class GenerationStats:
     best_genes: Genes
     evaluations: int
     cache_hits: int
+    # per-generation search telemetry (evalpool); defaults keep older
+    # call sites constructing GenerationStats by position working
+    gen_wall_s: float = 0.0
+    dedup_ratio: float = 0.0
+    hit_rate: float = 0.0
 
 
 @dataclasses.dataclass
@@ -85,25 +101,27 @@ def fitness_of_time(t: float) -> float:
 
 
 def run_ga(
-    evaluate: Callable[[Genes], float],
+    evaluate: Optional[Callable[[Genes], float]],
     gene_length: int,
     params: GAParams,
     on_generation: Optional[Callable[[GenerationStats], None]] = None,
+    pool: Optional[EvalPool] = None,
 ) -> GAResult:
-    rng = np.random.default_rng(params.seed)
-    cache: Dict[Genes, float] = {}
-    stats = {"evals": 0, "hits": 0}
+    """Run the offload GA.
 
-    def timed(genes: Genes) -> float:
-        if genes in cache:
-            stats["hits"] += 1
-            return cache[genes]
-        stats["evals"] += 1
-        t = float(evaluate(genes))
-        if not np.isfinite(t) or t < 0 or t >= params.timeout_s:
-            t = params.penalty_time_s
-        cache[genes] = t
-        return t
+    ``pool`` is the evaluation pool a whole generation is submitted to;
+    when omitted, a serial in-memory pool wrapping ``evaluate`` is built
+    (the original point-wise behavior). Pass an :class:`EvalPool` with
+    ``workers > 1`` and/or a persistent :class:`FitnessCache` to
+    parallelize measurements and survive restarts; ``evaluate`` may then
+    be ``None``.
+    """
+    if pool is None:
+        if evaluate is None:
+            raise ValueError("run_ga needs either evaluate or pool")
+        pool = EvalPool(evaluate)
+    rng = np.random.default_rng(params.seed)
+    evals0, hits0 = pool.totals().evaluated, pool.totals().cache_hits
 
     t0 = time.time()
     pop = G.initial_population(rng, gene_length, params.population)
@@ -112,7 +130,10 @@ def run_ga(
     best_time = float("inf")
 
     for gen in range(params.generations):
-        times = [timed(g) for g in pop]
+        times, tel = pool.evaluate_generation(
+            pop, params.timeout_s, params.penalty_time_s
+        )
+        tot = pool.totals()
         order = np.argsort(times)
         if times[order[0]] < best_time:
             best_time = times[order[0]]
@@ -122,8 +143,11 @@ def run_ga(
             best_time_s=best_time,
             mean_time_s=float(np.mean(times)),
             best_genes=best_genes,
-            evaluations=stats["evals"],
-            cache_hits=stats["hits"],
+            evaluations=tot.evaluated - evals0,
+            cache_hits=tot.cache_hits - hits0,
+            gen_wall_s=tel.wall_s,
+            dedup_ratio=tel.dedup_ratio,
+            hit_rate=tel.hit_rate,
         )
         history.append(gs)
         if on_generation:
@@ -152,11 +176,12 @@ def run_ga(
                 nxt.append(G.mutate(rng, cb, params.mutation_rate))
         pop = nxt
 
+    tot = pool.totals()
     return GAResult(
         best_genes=best_genes,
         best_time_s=best_time,
         history=history,
-        evaluations=stats["evals"],
-        cache_hits=stats["hits"],
+        evaluations=tot.evaluated - evals0,
+        cache_hits=tot.cache_hits - hits0,
         wall_s=time.time() - t0,
     )

@@ -34,6 +34,7 @@ from repro.launch import inputs as inp
 from repro.launch.mesh import make_production_mesh
 from repro.launch.roofline import (
     Roofline,
+    cost_analysis_dict,
     kernel_hbm_bytes,
     model_flops,
     parse_hlo_costs,
@@ -118,7 +119,7 @@ def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
     t_compile = time.time() - t0 - t_lower
 
     mem = compiled.memory_analysis()
-    ca = compiled.cost_analysis() or {}
+    ca = cost_analysis_dict(compiled)
     costs = parse_hlo_costs(compiled.as_text())
     n_dev = mesh.devices.size
     mesh_name = (

@@ -59,6 +59,18 @@ _ELEMENTWISE = frozenset(
 )
 
 
+def cost_analysis_dict(compiled) -> Dict[str, float]:
+    """``compiled.cost_analysis()`` normalized to one flat dict.
+
+    jax<=0.4.x returns a list with one per-program dict; newer jax returns
+    the dict directly; some backends return None.
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else None
+    return dict(ca) if isinstance(ca, dict) else {}
+
+
 def _dims(dim_str: str) -> Tuple[int, ...]:
     return tuple(int(d) for d in dim_str.split(",")) if dim_str else ()
 

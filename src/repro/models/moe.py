@@ -233,9 +233,13 @@ def moe_apply(
         def experts_sharded(buf):
             buf = mctx.wsc(buf, ee, None, None, enabled=unit.staged)
             yb = experts_fn(buf)
-            return mctx.wsc(
-                yb.astype(COMPUTE_DTYPE), ee, None, None, enabled=unit.staged
-            )
+            # combine all-gather, placed EXPLICITLY: every token shard
+            # reads arbitrary slots in the next gather, so the expert
+            # outputs must be replicated here. This constraint is
+            # load-bearing for correctness, not a staging choice — left
+            # to GSPMD, the jax<=0.4.x SPMD partitioner miscompiles the
+            # E-sharded reshape+concat+row-gather chain (jit != eager).
+            return mctx.wsc(yb.astype(COMPUTE_DTYPE), None, None, None)
 
         y = _dispatch_combine_local(
             xt, eids, gate_vals, E, k, cap, experts_sharded

@@ -16,9 +16,9 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import json
 import jax
 from repro.launch import dryrun
+from repro.launch.mesh import make_debug_mesh
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_debug_mesh(model=4, data=2)
 recs = []
 for arch, shape in [("stablelm-3b", "train_4k"),
                     ("mamba2-1.3b", "decode_32k"),
@@ -35,7 +35,9 @@ def test_dryrun_small_mesh_cells():
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(ROOT, "src")
     env.pop("XLA_FLAGS", None)
-    env.pop("JAX_PLATFORMS", None)
+    # forced host devices only exist on the CPU platform; pinning it also
+    # skips the slow TPU-backend probe on containers with libtpu present
+    env["JAX_PLATFORMS"] = "cpu"
     out = subprocess.run(
         [sys.executable, "-c", SCRIPT],
         capture_output=True, text=True, env=env, timeout=1200,

@@ -1,0 +1,309 @@
+"""Evaluation pool: dedup, persistent cache round-trip, timeout penalty,
+pool-size GA equivalence, and the pooled wall-clock win."""
+import threading
+import time
+
+import pytest
+
+from repro.core import evalpool as ep
+from repro.core import evaluator as ev
+from repro.core import ga, miniapps
+from repro.core import transfer as tr
+
+
+def _onemax_time(genes):
+    return 10.0 - 9.0 * sum(genes) / len(genes)
+
+
+# ---------------------------------------------------------------------------
+# dedup + cache accounting
+# ---------------------------------------------------------------------------
+
+
+def test_dedup_within_generation():
+    calls = []
+
+    def evaluate(genes):
+        calls.append(genes)
+        return _onemax_time(genes)
+
+    pool = ep.EvalPool(evaluate)
+    pop = [(0, 1), (1, 1), (0, 1), (1, 1), (0, 1)]  # 2 unique of 5
+    times, tel = pool.evaluate_generation(pop, 180.0, 1000.0)
+    assert len(calls) == 2
+    assert tel.submitted == 5 and tel.unique == 2
+    assert tel.evaluated == 2 and tel.cache_hits == 3
+    assert tel.dedup_ratio == pytest.approx(0.6)
+    # results in population order, duplicates identical
+    assert times[0] == times[2] == times[4]
+    assert times[1] == times[3]
+
+
+def test_cross_generation_cache_serves_repeats():
+    calls = []
+
+    def evaluate(genes):
+        calls.append(genes)
+        return _onemax_time(genes)
+
+    pool = ep.EvalPool(evaluate)
+    pool.evaluate_generation([(0, 0), (1, 1)], 180.0, 1000.0)
+    _, tel = pool.evaluate_generation([(0, 0), (1, 0)], 180.0, 1000.0)
+    assert len(calls) == 3  # (0,0) served from cache
+    assert tel.cache_hits == 1 and tel.evaluated == 1
+
+
+# ---------------------------------------------------------------------------
+# persistent cache: round-trip across a simulated restart
+# ---------------------------------------------------------------------------
+
+
+def test_cache_roundtrip_across_restart(tmp_path):
+    path = str(tmp_path / "fitness.jsonl")
+    prog = miniapps.himeno_program()
+    e = ev.MiniappEvaluator(prog, tr.TransferMode.BULK, staged=True)
+    params = ga.GAParams(population=8, generations=4, seed=3)
+
+    cache1 = ep.FitnessCache(path, fingerprint=e.fingerprint())
+    with ep.EvalPool(e, cache=cache1) as pool1:
+        r1 = ga.run_ga(None, prog.gene_length, params, pool=pool1)
+    assert r1.evaluations > 0
+
+    # "restart": new cache object replays the JSONL file
+    cache2 = ep.FitnessCache(path, fingerprint=e.fingerprint())
+    assert cache2.loaded == r1.evaluations
+    with ep.EvalPool(e, cache=cache2) as pool2:
+        r2 = ga.run_ga(None, prog.gene_length, params, pool=pool2)
+    assert r2.evaluations == 0  # everything served from disk
+    assert r2.best_genes == r1.best_genes
+    assert r2.best_time_s == r1.best_time_s
+
+
+def test_cached_hit_revalidated_against_current_timeout(tmp_path):
+    path = str(tmp_path / "fitness.jsonl")
+    c1 = ep.FitnessCache(path, fingerprint="fp")
+    c1.put((0, 1), 500.0)  # measured under a permissive timeout
+    c1.close()
+    c2 = ep.FitnessCache(path, fingerprint="fp")
+    with ep.EvalPool(lambda g: 1.0, cache=c2) as pool:
+        times, tel = pool.evaluate_generation(
+            [(0, 1)], timeout_s=180.0, penalty_time_s=1000.0
+        )
+    assert times == [1000.0]  # stale 500s hit scores as penalty now
+    assert tel.cache_hits == 1 and tel.evaluated == 0
+
+
+def test_cache_fingerprint_isolation(tmp_path):
+    path = str(tmp_path / "fitness.jsonl")
+    c1 = ep.FitnessCache(path, fingerprint="cfg-a")
+    c1.put((1, 0, 1), 2.5)
+    c1.close()
+    # same file, different evaluator configuration: entry must not leak
+    c2 = ep.FitnessCache(path, fingerprint="cfg-b")
+    assert c2.get((1, 0, 1)) is None
+    c3 = ep.FitnessCache(path, fingerprint="cfg-a")
+    assert c3.get((1, 0, 1)) == 2.5
+
+
+def test_penalized_records_not_replayed_on_resume(tmp_path):
+    path = str(tmp_path / "fitness.jsonl")
+    calls = []
+
+    def flaky(genes):
+        calls.append(genes)
+        if len(calls) == 1:
+            return 500.0  # transient overtime on the very first measurement
+        return 1.0
+
+    cache1 = ep.FitnessCache(path, fingerprint="fp")
+    with ep.EvalPool(flaky, cache=cache1) as pool:
+        times, _ = pool.evaluate_generation(
+            [(0,), (1,)], timeout_s=180.0, penalty_time_s=1000.0
+        )
+    assert times == [1000.0, 1.0]
+
+    # restart: the good measurement is replayed, the penalty is not
+    cache2 = ep.FitnessCache(path, fingerprint="fp")
+    assert cache2.get((1,)) == 1.0
+    assert cache2.get((0,)) is None
+    with ep.EvalPool(flaky, cache=cache2) as pool:
+        times, tel = pool.evaluate_generation(
+            [(0,), (1,)], timeout_s=180.0, penalty_time_s=1000.0
+        )
+    assert times == [1.0, 1.0]  # re-measured clean this time
+    assert tel.cache_hits == 1 and tel.evaluated == 1
+
+
+def test_cache_tolerates_corrupt_trailing_line(tmp_path):
+    path = str(tmp_path / "fitness.jsonl")
+    c1 = ep.FitnessCache(path, fingerprint="fp")
+    c1.put((0, 1), 1.25)
+    c1.put((1, 1), 0.75)
+    c1.close()
+    with open(path, "a", encoding="utf-8") as fh:
+        fh.write('{"v": 1, "fp": "fp", "genes": "10", "t": 3.')  # killed write
+    c2 = ep.FitnessCache(path, fingerprint="fp")
+    assert len(c2) == 2
+    assert c2.get((0, 1)) == 1.25
+
+
+# ---------------------------------------------------------------------------
+# timeout -> penalty propagation
+# ---------------------------------------------------------------------------
+
+
+def test_overtime_measurement_penalized_in_pool():
+    def evaluate(genes):
+        return 500.0  # above timeout_s=180
+
+    with ep.EvalPool(evaluate, workers=2) as pool:
+        times, tel = pool.evaluate_generation(
+            [(0,), (1,)], timeout_s=180.0, penalty_time_s=1000.0
+        )
+    assert times == [1000.0, 1000.0]
+    assert tel.timeouts == 2
+
+
+def test_hung_measurement_penalized_at_deadline():
+    done = threading.Event()
+
+    def evaluate(genes):
+        if genes == (1,):
+            done.wait(5.0)  # hangs well past the timeout
+        return 0.01
+
+    with ep.EvalPool(evaluate, workers=2) as pool:
+        t0 = time.monotonic()
+        times, tel = pool.evaluate_generation(
+            [(0,), (1,)], timeout_s=0.3, penalty_time_s=1000.0
+        )
+        wall = time.monotonic() - t0
+    done.set()
+    assert times[0] == 0.01
+    assert times[1] == 1000.0
+    assert tel.timeouts == 1
+    assert wall < 4.0  # scored at the deadline, not at straggler finish
+
+
+def test_queued_individuals_requeued_not_penalized_after_hang():
+    done = threading.Event()
+
+    def evaluate(genes):
+        if genes in ((0,), (1,)):
+            done.wait(10.0)  # occupies both workers past the deadline
+        return 0.01
+
+    # workers=2: (0,) and (1,) hang, so (2,) and (3,) never start before
+    # the deadline; they must be re-measured on a fresh executor, not
+    # penalized unmeasured
+    with ep.EvalPool(evaluate, workers=2) as pool:
+        times, tel = pool.evaluate_generation(
+            [(0,), (1,), (2,), (3,)], timeout_s=0.2, penalty_time_s=1000.0
+        )
+    done.set()
+    assert times[0] == 1000.0 and times[1] == 1000.0
+    assert times[2] == 0.01 and times[3] == 0.01
+    assert tel.timeouts == 2
+
+
+def test_crashing_measurement_penalized():
+    def evaluate(genes):
+        if sum(genes) == 0:
+            raise RuntimeError("compile error analogue")
+        return 1.0
+
+    for workers in (1, 3):
+        with ep.EvalPool(evaluate, workers=workers) as pool:
+            times, tel = pool.evaluate_generation(
+                [(0, 0), (1, 0)], timeout_s=180.0, penalty_time_s=1000.0
+            )
+        assert times == [1000.0, 1.0]
+
+
+def test_ga_timeout_penalty_through_pool():
+    def evaluate(genes):
+        return float("inf")
+
+    p = ga.GAParams(population=4, generations=2, seed=0)
+    with ep.EvalPool(evaluate, workers=2) as pool:
+        r = ga.run_ga(None, 4, p, pool=pool)
+    assert r.best_time_s == p.penalty_time_s
+
+
+# ---------------------------------------------------------------------------
+# GA equivalence: same seed => same best individual, pool size 1 vs N
+# ---------------------------------------------------------------------------
+
+
+def test_ga_pool_size_equivalence_miniapp():
+    prog = miniapps.himeno_program()
+    e = ev.MiniappEvaluator(prog, tr.TransferMode.BULK, staged=True)
+    params = ga.GAParams(population=16, generations=10, seed=0)
+
+    serial = ga.run_ga(e, prog.gene_length, params)
+    with ep.EvalPool(e, workers=4) as pool:
+        pooled = ga.run_ga(None, prog.gene_length, params, pool=pool)
+
+    assert pooled.best_genes == serial.best_genes
+    assert pooled.best_time_s == serial.best_time_s
+    assert [h.best_time_s for h in pooled.history] == \
+        [h.best_time_s for h in serial.history]
+    # the pooled cache must do at least as well as the in-memory serial one
+    assert pooled.cache_hits >= serial.cache_hits
+
+
+def test_batched_evaluator_path_used():
+    class Batched:
+        def __init__(self):
+            self.batch_calls = 0
+            self.point_calls = 0
+
+        def __call__(self, genes):
+            self.point_calls += 1
+            return _onemax_time(genes)
+
+        def evaluate_batch(self, genes_list):
+            self.batch_calls += 1
+            return [_onemax_time(g) for g in genes_list]
+
+    e = Batched()
+    with ep.EvalPool(e) as pool:
+        times, tel = pool.evaluate_generation(
+            [(0, 1), (1, 1), (0, 1)], 180.0, 1000.0
+        )
+    assert e.batch_calls == 1 and e.point_calls == 0
+    assert tel.evaluated == 2
+
+
+# ---------------------------------------------------------------------------
+# wall-clock: >= 3x per-generation improvement at pool size 4
+# ---------------------------------------------------------------------------
+
+
+def test_pooled_generation_wall_clock_speedup():
+    delay = 0.05
+
+    def slow_eval(genes):
+        time.sleep(delay)
+        return _onemax_time(genes)
+
+    pop = [tuple(int(b) for b in format(i, "04b")) for i in range(12)]
+
+    with ep.EvalPool(slow_eval, workers=1) as pool:
+        _, tel1 = pool.evaluate_generation(pop, 180.0, 1000.0)
+    with ep.EvalPool(slow_eval, workers=4) as pool:
+        _, tel4 = pool.evaluate_generation(pop, 180.0, 1000.0)
+
+    assert tel1.evaluated == tel4.evaluated == 12
+    assert tel1.wall_s / tel4.wall_s >= 3.0
+
+
+def test_evaluator_fingerprints_distinguish_configs():
+    prog = miniapps.himeno_program()
+    a = ev.MiniappEvaluator(prog, tr.TransferMode.BULK, staged=True)
+    b = ev.MiniappEvaluator(prog, tr.TransferMode.NEST, staged=False,
+                            kernels_only=True)
+    assert a.fingerprint() != b.fingerprint()
+    assert ep.evaluator_fingerprint(a) == a.fingerprint()
+    # plain functions fall back to their qualified name
+    assert "onemax" in ep.evaluator_fingerprint(_onemax_time)

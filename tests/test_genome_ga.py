@@ -1,7 +1,11 @@
 """GA + genome invariants (unit + hypothesis property tests)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed (dev extra)"
+)
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import ga, genome as G
 

@@ -22,11 +22,11 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import get_arch
 from repro.core import analysis
+from repro.launch.mesh import make_debug_mesh
 from repro.models import moe as moe_mod
 from repro.models.sharding import MeshCtx
 
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_debug_mesh(model=2, data=4)
 cfg = get_arch("moonshot-v1-16b-a3b").reduced()
 # ample capacity so neither path drops tokens (E=4 reduced, top_k=2)
 moe_mod_CAP = moe_mod.CAPACITY_FACTOR
@@ -76,7 +76,9 @@ def test_grouped_dispatch_matches_global_on_mesh():
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(ROOT, "src")
     env.pop("XLA_FLAGS", None)
-    env.pop("JAX_PLATFORMS", None)
+    # forced host devices only exist on the CPU platform; pinning it also
+    # skips the slow TPU-backend probe on containers with libtpu present
+    env["JAX_PLATFORMS"] = "cpu"
     out = subprocess.run(
         [sys.executable, "-c", SCRIPT],
         capture_output=True, text=True, env=env, timeout=900,

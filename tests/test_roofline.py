@@ -10,6 +10,7 @@ from repro.launch.roofline import (
     ICI_BW,
     PEAK_FLOPS,
     Roofline,
+    cost_analysis_dict,
     parse_hlo_costs,
 )
 
@@ -106,7 +107,7 @@ def test_parser_real_matmul_module():
     costs = parse_hlo_costs(compiled.as_text())
     want = 2 * 256**3
     assert want * 0.9 <= costs.flops <= want * 1.1
-    ca = compiled.cost_analysis() or {}
+    ca = cost_analysis_dict(compiled)
     if ca.get("flops"):
         assert costs.flops == pytest.approx(ca["flops"], rel=0.1)
 

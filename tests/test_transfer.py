@@ -2,7 +2,11 @@
 randomly generated loop programs."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed (dev extra)"
+)
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import transfer as tr
 from repro.core.loopir import Loop, LoopClass, LoopProgram, SeqRegion, Var
