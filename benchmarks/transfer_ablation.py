@@ -17,8 +17,9 @@ from repro.core import transfer as tr
 def main(argv=None):
     print("== transfer-reduction ablation (all offloadable loops on) ==")
     hw = ev.QUADRO_P4000
-    for app, make in miniapps.MINIAPPS.items():
-        prog = make()
+    for app in ("himeno", "nasft"):  # the paper's §3.3 table; `hetero`
+        # has its own figure (fig_mixed_destinations.py)
+        prog = miniapps.MINIAPPS[app]()
         genes = (1,) * prog.gene_length
         print(f"\n[{app}] {prog.description}")
         hdr = (f"  {'mode':18s} {'h2d MB':>10s} {'d2h MB':>10s} "

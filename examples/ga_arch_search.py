@@ -117,6 +117,8 @@ def main():
     )
     tot = pool.totals()
     pool.close()
+    if cache is not None:
+        cache.close()  # pools don't close caller-owned caches
     print(f"\nsearch: {tot.evaluated} measurements for "
           f"{tot.submitted} individuals "
           f"({tot.cache_hits} cache hits, {tot.timeouts} timeouts)")

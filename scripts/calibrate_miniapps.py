@@ -80,8 +80,13 @@ def speedups(hw, workers: int = 1, cache_dir: str = None):
                     fingerprint=evaluator.fingerprint(),
                 )
             p = ga.GAParams.for_gene_length(n, seed=0)
-            with ep.EvalPool(evaluator, workers=workers, cache=cache) as pool:
-                r = ga.run_ga(None, n, p, pool=pool)
+            try:
+                with ep.EvalPool(evaluator, workers=workers,
+                                 cache=cache) as pool:
+                    r = ga.run_ga(None, n, p, pool=pool)
+            finally:
+                if cache is not None:
+                    cache.close()  # pools don't close caller-owned caches
             out[(name, method)] = cpu / r.best_time_s
     return out
 

@@ -8,6 +8,13 @@
 - evalpool: generation-level evaluation (dedup / persistent cache / workers)
 - pcast: final result-difference check
 - plan: ExecutionPlan — the genome's phenotype at the framework level
+
+Layered on top (sibling package): ``repro.destinations`` — the
+mixed-destination search (arXiv:2011.12431). Destination registry with
+per-backend profiles + admissibility + transfer topology, the N-memory
+generalization of ``transfer``'s BULK residency tracking, and the
+``MixedEvaluator`` scoring k-ary genomes (``genome``'s operators with
+``GAParams.alleles=k``) with subset-independent fitness-cache keys.
 """
 from repro.core import analysis, evaluator, evalpool, ga, genome, loopir
 from repro.core import miniapps, pcast, plan, transfer

@@ -34,7 +34,13 @@ Cache file format (JSONL, one record per line, append-only)::
                ``miniapp:himeno:bulk:staged:quadro-p4000``; entries whose
                fingerprint differs from the pool's are ignored, so one
                file can serve many searches;
-- ``genes``    the genome as a 0/1 string (gene i = character i);
+- ``genes``    the genome's cache key. By default the gene digits as a
+               string (``"0110..."``; k-ary genomes use digits up to
+               k-1). An evaluator may provide ``cache_key(genes) -> str``
+               to canonicalize the key — the mixed-destination evaluator
+               maps destination *indices* (subset-relative) to destination
+               *names*, so searches over different destination subsets
+               share measurements for placements they both contain;
 - ``t``        the time fed back to the GA (post-penalty, seconds);
 - ``penalized`` whether ``t`` is the timeout/failure penalty rather than
                a real measurement. Penalized records are written (for
@@ -91,11 +97,22 @@ class FitnessCache:
     With ``path=None`` this is a plain in-memory dict (the GA's original
     §5.2 cache). With a path, every ``put`` appends one JSON line and the
     constructor replays the file, so a killed search resumes warm.
+
+    ``key_fn`` maps a genome to its cache-key string (default:
+    :func:`genes_key`, the digit string). :class:`EvalPool` swaps in the
+    evaluator's ``cache_key`` when it provides one, so callers normally
+    construct the cache with just ``(path, fingerprint)``.
     """
 
-    def __init__(self, path: Optional[str] = None, fingerprint: str = ""):
+    def __init__(
+        self,
+        path: Optional[str] = None,
+        fingerprint: str = "",
+        key_fn: Callable[[Sequence[int]], str] = genes_key,
+    ):
         self.path = path
         self.fingerprint = fingerprint
+        self.key_fn = key_fn
         self._mem: Dict[str, float] = {}
         self._lock = threading.Lock()
         self._fh: Optional[IO[str]] = None
@@ -143,15 +160,24 @@ class FitnessCache:
         return len(self._mem)
 
     def __contains__(self, genes: Sequence[int]) -> bool:
-        return genes_key(genes) in self._mem
+        return self.key_fn(genes) in self._mem
 
-    def get(self, genes: Sequence[int]) -> Optional[float]:
-        return self._mem.get(genes_key(genes))
+    def get(
+        self, genes: Sequence[int], key: Optional[str] = None
+    ) -> Optional[float]:
+        """``key`` overrides ``key_fn`` for this lookup — the EvalPool
+        passes its own evaluator-derived keys so one cache object can
+        serve pools over different evaluators without being mutated."""
+        return self._mem.get(key if key is not None else self.key_fn(genes))
 
     def put(
-        self, genes: Sequence[int], t: float, penalized: bool = False
+        self,
+        genes: Sequence[int],
+        t: float,
+        penalized: bool = False,
+        key: Optional[str] = None,
     ) -> None:
-        key = genes_key(genes)
+        key = key if key is not None else self.key_fn(genes)
         with self._lock:
             self._mem[key] = float(t)
             if self._fh is not None:
@@ -237,13 +263,19 @@ def _run_with_executor(
     machine finishing a run after the 3-minute cutoff already penalized
     it). Process pools get the same deadline semantics.
     """
-    cls = (
-        cf.ProcessPoolExecutor
-        if executor_kind == "process"
-        else cf.ThreadPoolExecutor
-    )
     out: List[Tuple[float, bool]] = [(float("inf"), True)] * len(genes_list)
-    ex = cls(max_workers=max(1, workers))
+    if executor_kind == "process":
+        import multiprocessing as mp
+
+        # spawn, not fork: the parent has usually initialized JAX/XLA
+        # (runtime threads + locks), and forking that state can deadlock
+        # the child mid-measurement. Spawn requires the evaluator to be
+        # picklable — module-level run_fns like miniapps.HimenoRunFn.
+        ex = cf.ProcessPoolExecutor(
+            max_workers=max(1, workers), mp_context=mp.get_context("spawn")
+        )
+    else:
+        ex = cf.ThreadPoolExecutor(max_workers=max(1, workers))
     try:
         t0 = time.monotonic()
         futs = {ex.submit(evaluate, g): i for i, g in enumerate(genes_list)}
@@ -312,6 +344,12 @@ class EvalPool:
         but require picklable evaluators.
     cache:
         A :class:`FitnessCache`. Defaults to a fresh in-memory cache.
+        If the evaluator provides ``cache_key(genes) -> str``, the POOL
+        keys every lookup/store with it (the cache object itself is
+        never mutated, so one cache can serve several pools) — this is
+        how the mixed-destination evaluator canonicalizes subset-relative
+        destination indices to destination names so different searches
+        share measurements.
     """
 
     def __init__(
@@ -327,7 +365,17 @@ class EvalPool:
         self.evaluate = evaluate
         self.workers = max(1, int(workers))
         self.executor = executor
+        # a cache the pool built itself is closed by close(); a CALLER's
+        # cache is left open — it may be serving other pools (the
+        # advertised cross-subset sharing), and every put is flushed to
+        # disk immediately so nothing is lost either way. Callers that
+        # construct a persistent cache own its close().
+        self._owns_cache = cache is None
         self.cache = cache if cache is not None else FitnessCache()
+        ck = getattr(evaluate, "cache_key", None)
+        self.key_fn: Callable[[Genes], str] = (
+            ck if callable(ck) else self.cache.key_fn
+        )
         self.batch = batch
         self.history: List[GenTelemetry] = []
 
@@ -358,45 +406,47 @@ class EvalPool:
         tel = GenTelemetry(submitted=len(population))
         pop = [tuple(int(g) for g in ind) for ind in population]
 
-        # in-generation dedup + cache lookup
-        unique: List[Genes] = []
-        seen: Dict[Genes, None] = {}
-        for ind in pop:
-            if ind not in seen:
-                seen[ind] = None
-                unique.append(ind)
+        # in-generation dedup + cache lookup, both on the CANONICAL key:
+        # genomes that canonicalize identically (e.g. mixed-destination
+        # placements that clamp to the same admissible plan) share one
+        # measurement even within a generation
+        keys = [self.key_fn(ind) for ind in pop]
+        unique: Dict[str, Genes] = {}
+        for ind, key in zip(pop, keys):
+            if key not in unique:
+                unique[key] = ind
         tel.unique = len(unique)
 
-        times: Dict[Genes, float] = {}
-        misses: List[Genes] = []
-        for ind in unique:
-            hit = self.cache.get(ind)
+        times: Dict[str, float] = {}
+        misses: List[Tuple[str, Genes]] = []
+        for key, ind in unique.items():
+            hit = self.cache.get(ind, key=key)
             if hit is not None:
                 # re-validate against THIS run's params: a resumed search
                 # may use a tighter timeout than the run that measured
                 # the value, in which case the stored time must score as
                 # the penalty now (the cache record itself is untouched)
-                times[ind] = self._penalize(hit, timeout_s, penalty_time_s)[0]
+                times[key] = self._penalize(hit, timeout_s, penalty_time_s)[0]
             else:
-                misses.append(ind)
+                misses.append((key, ind))
         # dedup repeats + cache serves both avoid a fresh measurement
         tel.cache_hits = (len(pop) - len(unique)) + (len(unique) - len(misses))
         tel.evaluated = len(misses)
 
         if misses:
-            raw = self._measure(misses, timeout_s)
-            for ind, (t, timed_out) in zip(misses, raw):
+            raw = self._measure([ind for _, ind in misses], timeout_s)
+            for (key, ind), (t, timed_out) in zip(misses, raw):
                 t, penalized = self._penalize(t, timeout_s, penalty_time_s)
                 penalized = penalized or timed_out
                 if penalized:
                     t = penalty_time_s
                     tel.timeouts += 1
-                times[ind] = t
-                self.cache.put(ind, t, penalized=penalized)
+                times[key] = t
+                self.cache.put(ind, t, penalized=penalized, key=key)
 
         tel.wall_s = time.monotonic() - t0
         self.history.append(tel)
-        return [times[ind] for ind in pop], tel
+        return [times[key] for key in keys], tel
 
     def _measure(
         self, misses: List[Genes], timeout_s: float
@@ -438,7 +488,8 @@ class EvalPool:
         return tot
 
     def close(self) -> None:
-        self.cache.close()
+        if self._owns_cache:
+            self.cache.close()
 
     def __enter__(self) -> "EvalPool":
         return self

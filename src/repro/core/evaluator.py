@@ -96,9 +96,10 @@ _DIRECTIVE_RATE = {
 }
 
 
-def _loop_bytes(prog: LoopProgram, loop: Loop) -> float:
+def loop_bytes(prog: LoopProgram, loop: Loop) -> float:
     """Memory traffic of one nest execution: every touched array streamed
-    once (true for the miniapps' loops, which sweep their arrays)."""
+    once (true for the miniapps' loops, which sweep their arrays).
+    Public: shared with :mod:`repro.destinations`' per-backend models."""
     return float(sum(prog.var(v).nbytes for v in loop.touched()))
 
 
@@ -107,7 +108,7 @@ def loop_time(
 ) -> float:
     """Time for ONE execution of the full nest (all trips of this loop)."""
     flops = loop.total_flops
-    byts = _loop_bytes(prog, loop)
+    byts = loop_bytes(prog, loop)
     if not offloaded:
         return max(flops / hw.cpu_flops, byts / hw.cpu_membw)
     rate = getattr(hw, _DIRECTIVE_RATE[loop.klass])
@@ -185,9 +186,11 @@ class MiniappEvaluator:
 
     def fingerprint(self) -> str:
         """Configuration key for the persistent fitness cache (evalpool):
-        two evaluators share measurements iff their fingerprints match."""
+        two evaluators share measurements iff their fingerprints match.
+        Keys on the program's structural digest, not its name — the same
+        app at another grid size must not share cached times."""
         return (
-            f"miniapp:{self.prog.name}:{self.mode.value}"
+            f"miniapp:{self.prog.fingerprint()}:{self.mode.value}"
             f":{'staged' if self.staged else 'unstaged'}:{self.hw.name}"
             f"{':kernels-only' if self.kernels_only else ''}"
         )

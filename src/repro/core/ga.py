@@ -57,6 +57,10 @@ class GAParams:
     seed: int = 0
     crossover_kind: str = "uniform"  # "uniform" | "single_point"
     fitness_windowing: bool = True  # subtract generation-worst before roulette
+    # gene alphabet size: 2 = the paper's binary offload/stay genome
+    # (byte-identical to the pre-k-ary GA); >2 = mixed-destination search
+    # (arXiv:2011.12431) where each gene is a destination index
+    alleles: int = 2
 
     @classmethod
     def for_gene_length(cls, n: int, **kw) -> "GAParams":
@@ -124,7 +128,9 @@ def run_ga(
     evals0, hits0 = pool.totals().evaluated, pool.totals().cache_hits
 
     t0 = time.time()
-    pop = G.initial_population(rng, gene_length, params.population)
+    pop = G.initial_population(
+        rng, gene_length, params.population, params.alleles
+    )
     history: List[GenerationStats] = []
     best_genes: Genes = pop[0]
     best_time = float("inf")
@@ -171,9 +177,11 @@ def run_ga(
             pa = G.roulette_pick(rng, pop, fit)
             pb = G.roulette_pick(rng, pop, fit)
             ca, cb = xover(rng, pa, pb, params.crossover_rate)
-            nxt.append(G.mutate(rng, ca, params.mutation_rate))
+            nxt.append(G.mutate(rng, ca, params.mutation_rate, params.alleles))
             if len(nxt) < params.population:
-                nxt.append(G.mutate(rng, cb, params.mutation_rate))
+                nxt.append(
+                    G.mutate(rng, cb, params.mutation_rate, params.alleles)
+                )
         pop = nxt
 
     tot = pool.totals()

@@ -1,8 +1,15 @@
-"""Binary genome operators for the offload GA (paper [32] §GA setup).
+"""Genome operators for the offload GA (paper [32] §GA setup).
 
-Gene value 1 = insert the offload directive on that loop/unit; 0 = leave it
-on the CPU path. Operators are pure functions over numpy Generators so the
-GA is reproducible and hypothesis-testable.
+Originally binary: gene value 1 = insert the offload directive on that
+loop/unit; 0 = leave it on the CPU path. The mixed-destination follow-up
+(arXiv:2011.12431) searches several offload backends in one genome, so the
+operators are k-ary: a gene holds a *destination index* in ``[0, k)`` and
+``k=2`` (the default everywhere) reproduces the binary operators
+bit-for-bit — same RNG draws, same outputs — so existing searches and
+their persisted fitness caches are untouched.
+
+Operators are pure functions over numpy Generators so the GA is
+reproducible and hypothesis-testable.
 """
 from __future__ import annotations
 
@@ -13,20 +20,22 @@ import numpy as np
 Genes = Tuple[int, ...]
 
 
-def random_genome(rng: np.random.Generator, length: int) -> Genes:
-    return tuple(int(b) for b in rng.integers(0, 2, size=length))
+def random_genome(rng: np.random.Generator, length: int, k: int = 2) -> Genes:
+    """Uniform gene draw over destination indices ``[0, k)``."""
+    assert k >= 2, k
+    return tuple(int(b) for b in rng.integers(0, k, size=length))
 
 
 def initial_population(
-    rng: np.random.Generator, length: int, size: int
+    rng: np.random.Generator, length: int, size: int, k: int = 2
 ) -> List[Genes]:
-    """Random 0/1 assignment; duplicates re-drawn (bounded) to keep the
-    initial search wide, as the paper's implementation does."""
+    """Random destination assignment; duplicates re-drawn (bounded) to keep
+    the initial search wide, as the paper's implementation does."""
     pop: List[Genes] = []
     seen = set()
     attempts = 0
     while len(pop) < size:
-        g = random_genome(rng, length)
+        g = random_genome(rng, length, k)
         attempts += 1
         if g in seen and attempts < 20 * size and length > 1:
             continue
@@ -38,7 +47,8 @@ def initial_population(
 def crossover(
     rng: np.random.Generator, a: Genes, b: Genes, rate: float
 ) -> Tuple[Genes, Genes]:
-    """Single-point crossover with probability ``rate`` (Pc=0.9)."""
+    """Single-point crossover with probability ``rate`` (Pc=0.9).
+    Allele-agnostic: children only ever hold parent gene values."""
     assert len(a) == len(b)
     if len(a) < 2 or rng.random() >= rate:
         return a, b
@@ -50,7 +60,8 @@ def uniform_crossover(
     rng: np.random.Generator, a: Genes, b: Genes, rate: float
 ) -> Tuple[Genes, Genes]:
     """Uniform crossover with probability ``rate``: each gene swaps sides
-    with p=0.5 — better building-block mixing on long genomes."""
+    with p=0.5 — better building-block mixing on long genomes.
+    Allele-agnostic: children only ever hold parent gene values."""
     assert len(a) == len(b)
     if rng.random() >= rate:
         return a, b
@@ -60,10 +71,26 @@ def uniform_crossover(
     return ca, cb
 
 
-def mutate(rng: np.random.Generator, g: Genes, rate: float) -> Genes:
-    """Independent per-bit flips (Pm=0.05)."""
+def mutate(rng: np.random.Generator, g: Genes, rate: float, k: int = 2) -> Genes:
+    """Independent per-gene mutation (Pm=0.05). Binary genes flip; k-ary
+    genes re-draw uniformly among the k-1 OTHER destinations (never a
+    self-mutation, matching the binary flip semantics)."""
     flips = rng.random(len(g)) < rate
-    return tuple(int(b) ^ int(f) for b, f in zip(g, flips))
+    if k == 2:
+        return tuple(int(b) ^ int(f) for b, f in zip(g, flips))
+    # draw in [0, k-1) and shift past the current allele: uniform over the
+    # other k-1 values. Draws happen for every gene (vectorized) so the
+    # number of RNG pulls is independent of which genes mutate.
+    draws = rng.integers(0, k - 1, size=len(g))
+    out = []
+    for b, f, d in zip(g, flips, draws):
+        b = int(b)
+        if not f:
+            out.append(b)
+            continue
+        d = int(d)
+        out.append(d + 1 if d >= b else d)
+    return tuple(out)
 
 
 def roulette_pick(

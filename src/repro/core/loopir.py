@@ -143,6 +143,27 @@ class LoopProgram:
             l.total_flops * self.region_trip(l.parent_seq) for l in self.loops
         )
 
+    def fingerprint(self) -> str:
+        """Stable structural digest: name alone is NOT enough to key a
+        persistent fitness cache — the same app at a different grid size
+        or trip count has completely different loop times. Covers every
+        field the evaluators read (loops, vars, regions)."""
+        import hashlib
+
+        parts = []
+        for l in self.loops:
+            parts.append(
+                f"{l.name}:{l.klass.value}:{l.trip}:{l.inner_trip}"
+                f":{l.flops_per_iter:.6g}:{','.join(sorted(l.reads))}"
+                f":{','.join(sorted(l.writes))}:{l.parent_seq}"
+                f":{int(l.sequential_carry)}"
+            )
+        parts += [f"{v.name}:{v.nbytes}:{int(v.is_global)}"
+                  f":{int(v.init_external)}" for v in self.vars]
+        parts += [f"{r.name}:{r.trip}" for r in self.seq_regions]
+        digest = hashlib.sha256("|".join(parts).encode()).hexdigest()[:12]
+        return f"{self.name}-{digest}"
+
     def describe(self) -> str:
         rows = [f"LoopProgram {self.name}: {len(self.loops)} loops "
                 f"({self.gene_length} offloadable = gene length)"]

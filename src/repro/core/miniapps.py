@@ -315,6 +315,102 @@ def nasft_program(
 
 
 # ===========================================================================
+# Heterogeneous pipeline miniapp (mixed-destination search target)
+# ===========================================================================
+
+
+def hetero_program(
+    grid: Tuple[int, int, int] = (128, 128, 256), frames: int = 50
+) -> LoopProgram:
+    """A radar/beamforming-style per-frame pipeline where no single
+    accelerator dominates — the mixed-destination search's showcase app
+    (arXiv:2011.12431's "mixed offloading destination environment"):
+
+    - ``stencil_a/b``: compute-dense tight nests -> the GPU's win;
+    - ``scan_stage1..4``: FFT/IIR-like stages with a sequential carry —
+      lane-rate on the GPU, full pipelined rate on the FPGA profile;
+    - ``ctrl_gain``: a small host-coupled control loop whose data the
+      sequential ``host_ctrl`` loop rewrites every frame — any offload
+      pays a per-frame transfer bigger than the CPU just doing the work.
+
+    12 offloadable loops = gene length 12; ``frame_iter`` is the
+    sequential per-frame region the transfers must cross.
+    """
+    i, j, k = grid
+    cells = i * j * k
+    plane = F32 * cells
+
+    vars_ = [
+        Var("raw", plane, "pipeline.c", is_global=True, init_external=True),
+        Var("field", plane, "pipeline.c", is_global=True),
+        Var("tmp", plane, "pipeline.c", is_global=True),
+        Var("coefs", plane, "pipeline.c", is_global=True),
+        Var("spec", plane, "pipeline.c", is_global=True),
+        Var("gains", F32 * 16384, "control.c", is_global=True,
+            init_external=True),
+        Var("acc", F32, "control.c"),
+    ]
+
+    loops = []
+
+    def L(name, klass, trip, inner, flops, reads, writes,
+          parent=None, seq_carry=False, file="pipeline.c"):
+        loops.append(
+            Loop(
+                name=name, klass=klass, trip=trip, inner_trip=inner,
+                flops_per_iter=flops, reads=frozenset(reads),
+                writes=frozenset(writes), file=file, parent_seq=parent,
+                sequential_carry=seq_carry,
+            )
+        )
+
+    # setup (once per run)
+    L("init_coefs", LoopClass.TIGHT, i, j * k, 1.0, [], ["coefs"])
+    L("init_gains", LoopClass.VECTOR_ONLY, 16384, 1, 2.0, [], ["gains"],
+      file="control.c")
+
+    # per-frame pipeline
+    L("load_frame", LoopClass.TIGHT, i, j * k, 2.0, ["raw"], ["field"],
+      parent="frame_iter")
+    L("stencil_a", LoopClass.TIGHT, i - 2, (j - 2) * (k - 2), 140.0,
+      ["field", "coefs"], ["tmp"], parent="frame_iter")
+    L("stencil_b", LoopClass.TIGHT, i - 2, (j - 2) * (k - 2), 140.0,
+      ["tmp", "coefs"], ["field"], parent="frame_iter")
+    L("scan_stage1", LoopClass.VECTOR_ONLY, i, j * k, 64.0,
+      ["field"], ["spec"], parent="frame_iter", seq_carry=True)
+    for s in (2, 3, 4):
+        L(f"scan_stage{s}", LoopClass.VECTOR_ONLY, i, j * k, 64.0,
+          ["spec"], ["spec"], parent="frame_iter", seq_carry=True)
+    L("normalize", LoopClass.TIGHT, i, j * k, 3.0, ["spec", "gains"],
+      ["spec"], parent="frame_iter")
+    L("reduce_power", LoopClass.VECTOR_ONLY, i, j * k, 2.0, ["spec"],
+      ["acc"], parent="frame_iter")
+    L("ctrl_gain", LoopClass.VECTOR_ONLY, 16384, 1, 4.0, ["gains"],
+      ["gains"], parent="frame_iter", file="control.c")
+
+    # sequential host control: rewrites gains from the reduction every
+    # frame (the host-coupling that pins ctrl_gain's data to the CPU)
+    L("host_ctrl", LoopClass.NOT_OFFLOADABLE, 16384, 1, 3.0,
+      ["acc", "gains"], ["gains"], parent="frame_iter", seq_carry=True,
+      file="control.c")
+    L("frame_driver", LoopClass.NOT_OFFLOADABLE, frames, 1, 2.0, ["acc"],
+      ["acc"], seq_carry=True)
+
+    prog = LoopProgram(
+        name="hetero",
+        loops=tuple(loops),
+        vars=tuple(vars_),
+        seq_regions=(SeqRegion("frame_iter", frames),),
+        description=(
+            f"heterogeneous per-frame pipeline {i}x{j}x{k}, "
+            f"{frames} frames"
+        ),
+    )
+    assert prog.gene_length == 12, prog.gene_length
+    return prog
+
+
+# ===========================================================================
 # Runnable implementations (measured verification environment + PCAST)
 # ===========================================================================
 
@@ -480,7 +576,73 @@ def nasft_run(
     return np.asarray(sums, np.complex64)
 
 
+# ===========================================================================
+# Picklable genes->run callables (MeasuredEvaluator + process EvalPools)
+# ===========================================================================
+#
+# ``MeasuredEvaluator`` wall-clocks ``run_fn(genes)``. The runnable
+# implementations above expose ONE offload switch (jitted JAX vs numpy),
+# so the run fn collapses the genome to the gene of the designated hot
+# loop. Defined as frozen module-level dataclasses — not closures — so a
+# ``ProcessPoolExecutor`` (``EvalPool(executor="process")``) can pickle
+# the evaluator into its workers.
+
+
+def _gene_index(prog: LoopProgram, loop_name: str) -> int:
+    for idx, l in enumerate(prog.offloadable_loops):
+        if l.name == loop_name:
+            return idx
+    raise KeyError(loop_name)
+
+
+_HOT_GENES: Dict[Tuple[str, str], int] = {}
+
+
+def _hot_gene(prog_fn, loop_name: str) -> int:
+    """Memoized gene index of a program's hot loop: run fns sit inside
+    MeasuredEvaluator's perf_counter window, so the LoopProgram must not
+    be rebuilt per measurement."""
+    key = (prog_fn.__name__, loop_name)
+    if key not in _HOT_GENES:
+        _HOT_GENES[key] = _gene_index(prog_fn(), loop_name)
+    return _HOT_GENES[key]
+
+
+@dataclasses.dataclass(frozen=True)
+class HimenoRunFn:
+    """genes -> run Himeno; the ``jacobi_stencil`` gene picks the path."""
+
+    grid: Tuple[int, int, int] = (9, 9, 17)
+    nn: int = 2
+
+    def __call__(self, genes: Sequence[int]) -> None:
+        hot = _hot_gene(himeno_program, "jacobi_stencil")
+        himeno_run(self.grid, self.nn, jit_stencil=bool(genes[hot]))
+
+    @property
+    def tag(self) -> str:
+        """Cache tag for MeasuredEvaluator (captures the config)."""
+        return f"himeno:{'x'.join(map(str, self.grid))}:nn{self.nn}"
+
+
+@dataclasses.dataclass(frozen=True)
+class NasftRunFn:
+    """genes -> run NAS.FT; the ``evolve`` gene picks the path."""
+
+    grid: Tuple[int, int, int] = (8, 8, 8)
+    niter: int = 2
+
+    def __call__(self, genes: Sequence[int]) -> None:
+        hot = _hot_gene(nasft_program, "evolve")
+        nasft_run(self.grid, self.niter, jit_fft=bool(genes[hot]))
+
+    @property
+    def tag(self) -> str:
+        return f"nasft:{'x'.join(map(str, self.grid))}:it{self.niter}"
+
+
 MINIAPPS = {
     "himeno": himeno_program,
     "nasft": nasft_program,
+    "hetero": hetero_program,
 }

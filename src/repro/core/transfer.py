@@ -99,7 +99,7 @@ class TransferSchedule:
 Event = Tuple[str, Optional[Loop], float]  # ("loop", l, times) | ("boundary", None, times)
 
 
-def _dynamic_events(prog: LoopProgram, boundaries: bool) -> Iterator[Event]:
+def dynamic_events(prog: LoopProgram, boundaries: bool) -> Iterator[Event]:
     """Linearized execution with steady-state weighting.
 
     Loops sharing a ``parent_seq`` region execute region.trip times as a
@@ -109,6 +109,9 @@ def _dynamic_events(prog: LoopProgram, boundaries: bool) -> Iterator[Event]:
     decisions depend only on validity state the first iteration establishes.
     ``boundaries``: emit a region-iteration boundary event after each
     (weighted) iteration — NEST mode flushes device-written vars there.
+
+    Public: :mod:`repro.destinations.schedule` replays the same event
+    stream through its N-memory residency simulation.
     """
     i = 0
     loops = prog.loops
@@ -205,7 +208,7 @@ def _schedule_tracked(
     device_dirty: Dict[str, bool] = {v.name: False for v in prog.vars}
     region_dirty: set = set()  # device-written WITHIN the current region iter
 
-    for kind, loop, times in _dynamic_events(prog, boundaries=iteration_flush):
+    for kind, loop, times in dynamic_events(prog, boundaries=iteration_flush):
         if kind == "boundary":
             # NEST ([33]): no present-tracking across kernel regions inside
             # the time-step loop — vars the region's kernels wrote are synced

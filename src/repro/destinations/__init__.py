@@ -1,0 +1,56 @@
+"""Mixed-destination offload search (arXiv:2011.12431 direction).
+
+The source paper searches binary CPU/GPU placements for application loop
+statements; its successors extend the same GA to FPGAs and to *mixed
+offloading destination environments* where every loop may land on CPU,
+GPU or FPGA in one search. This subsystem layers that on the existing
+core without changing binary-search behavior:
+
+- profiles: :class:`Destination` registry — per-backend
+  ``HardwareModel``-style profiles with admissibility rules (which
+  ``LoopClass`` each backend's compiler accepts) and the transfer
+  topology between memories (device->device routes through the host).
+- schedule: N-memory residency tracking (the BULK mode of
+  ``core.transfer`` generalized from one device to N), per-link byte and
+  batch accounting priced by the topology.
+- mixed: :class:`MixedEvaluator` — k-ary genes (destination indices,
+  ``core.genome``'s generalized operators with ``GAParams.alleles=k``)
+  -> predicted seconds, with a destination-set-independent
+  ``fingerprint()``/``cache_key()`` pair so the persistent evalpool
+  fitness cache is shared across searches over different destination
+  subsets of one machine.
+"""
+from repro.destinations import mixed, profiles, schedule
+from repro.destinations.mixed import (
+    MixedBreakdown,
+    MixedEvaluator,
+    mixed_loop_time,
+)
+from repro.destinations.profiles import (
+    Destination,
+    Link,
+    Registry,
+    default_registry,
+    fpga_destination,
+    gpu_destination,
+    host_destination,
+)
+from repro.destinations.schedule import MixedSchedule, build_mixed_schedule
+
+__all__ = [
+    "Destination",
+    "Link",
+    "MixedBreakdown",
+    "MixedEvaluator",
+    "MixedSchedule",
+    "Registry",
+    "build_mixed_schedule",
+    "default_registry",
+    "fpga_destination",
+    "gpu_destination",
+    "host_destination",
+    "mixed",
+    "mixed_loop_time",
+    "profiles",
+    "schedule",
+]

@@ -1,0 +1,176 @@
+"""Mixed-destination evaluator: k-ary genes -> predicted seconds.
+
+The genome generalizes the paper's binary offload genome (gene = 0/1)
+to destination indices: gene i places offloadable loop i on
+``destinations[gene i]``, where index 0 is always the host CPU. The
+evaluator composes
+
+- per-destination loop times (each :class:`Destination` profile's
+  class-dependent effective rates + launch latency),
+- the cross-destination transfer schedule
+  (:func:`~repro.destinations.schedule.build_mixed_schedule`'s N-memory
+  residency tracking, priced through the registry topology), and
+- one-time per-kernel setup costs (the FPGA configuration charge).
+
+Caching: ``fingerprint()`` identifies the program + the WHOLE modeled
+machine (every profile + link constant) but deliberately not the searched
+destination subset, and ``cache_key()`` renders a genome as the
+destination *names* of its admissible placement. Together these make the
+PR-1 persistent JSONL fitness cache shareable across searches over
+different destination subsets of one machine: a CPU+GPU search and a
+CPU+GPU+FPGA search hit the same entries for every genome whose placement
+uses only the shared destinations.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence, Tuple
+
+from repro.core.evaluator import loop_bytes
+from repro.core.loopir import Loop, LoopProgram
+from repro.destinations.profiles import (
+    Destination,
+    Registry,
+    default_registry,
+)
+from repro.destinations.schedule import MixedSchedule, build_mixed_schedule
+
+Genes = Tuple[int, ...]
+
+
+def mixed_loop_time(
+    prog: LoopProgram, loop: Loop, dest: Destination
+) -> float:
+    """Time for ONE execution of the full nest on ``dest`` (generalizes
+    :func:`repro.core.evaluator.loop_time` to any destination profile)."""
+    flops = loop.total_flops
+    byts = loop_bytes(prog, loop)
+    t = max(flops / dest.rate_for(loop), byts / dest.membw)
+    return t + dest.launch_latency
+
+
+@dataclasses.dataclass
+class MixedBreakdown:
+    """Where the predicted seconds go, per destination."""
+
+    compute_s: Dict[str, float]  # destination name -> compute seconds
+    transfer_s: float
+    setup_s: float
+    schedule: MixedSchedule
+
+    @property
+    def total_s(self) -> float:
+        return sum(self.compute_s.values()) + self.transfer_s + self.setup_s
+
+    def describe(self) -> str:
+        comp = ", ".join(
+            f"{n} {t:.3g}s" for n, t in sorted(self.compute_s.items())
+        )
+        return (
+            f"compute[{comp}] transfer {self.transfer_s:.3g}s "
+            f"setup {self.setup_s:.3g}s = {self.total_s:.3g}s "
+            f"({self.schedule.describe()})"
+        )
+
+
+class MixedEvaluator:
+    """k-ary genes -> predicted seconds over a destination subset.
+
+    ``destinations`` names the searched subset (order = gene value
+    meaning); the first entry must be the registry's host. Gene length and
+    admissibility follow the LoopProgram exactly as in the binary search:
+    one gene per offloadable loop, and a placement the destination's
+    compiler rejects (inadmissible LoopClass) falls back to the host —
+    the mixed analogue of ``MiniappEvaluator.admissible``'s masking.
+    """
+
+    def __init__(
+        self,
+        prog: LoopProgram,
+        destinations: Sequence[str] = ("cpu", "gpu", "fpga"),
+        registry: Optional[Registry] = None,
+    ):
+        self.prog = prog
+        self.registry = registry if registry is not None else \
+            default_registry()
+        self.dests: Tuple[Destination, ...] = tuple(
+            self.registry.get(n) for n in destinations
+        )
+        assert self.dests, "need at least the host destination"
+        assert self.dests[0].kind == "host", \
+            "destinations[0] must be the host (gene value 0 = stay on CPU)"
+
+    @property
+    def k(self) -> int:
+        """Gene alphabet size (pass as ``GAParams.alleles``)."""
+        return len(self.dests)
+
+    # -- genome -> placement ------------------------------------------------
+
+    def admissible(self, genes: Sequence[int]) -> Genes:
+        """Clamp inadmissible placements to the host (index 0)."""
+        out = []
+        for g, loop in zip(genes, self.prog.offloadable_loops):
+            g = int(g)
+            assert 0 <= g < self.k, (g, self.k)
+            out.append(g if self.dests[g].accepts(loop.klass) else 0)
+        return tuple(out)
+
+    def placement(self, genes: Sequence[int]) -> Dict[str, str]:
+        """{loop name: destination name} for ALL loops (non-offloadable
+        and inadmissible ones on the host)."""
+        host = self.dests[0].name
+        out = {l.name: host for l in self.prog.loops}
+        for g, loop in zip(self.admissible(genes), self.prog.offloadable_loops):
+            out[loop.name] = self.dests[g].name
+        return out
+
+    def cache_key(self, genes: Sequence[int]) -> str:
+        """Canonical, destination-SET-independent key: the admissible
+        placement as destination names, one per gene. Adopted by
+        :class:`repro.core.evalpool.EvalPool` in place of the digit
+        string, so searches over different subsets share cache entries
+        for placements within their overlap."""
+        return ",".join(
+            self.dests[g].name for g in self.admissible(genes)
+        )
+
+    # -- scoring ------------------------------------------------------------
+
+    def breakdown(self, genes: Sequence[int]) -> MixedBreakdown:
+        place = self.placement(genes)
+        by_name = {d.name: d for d in self.dests}
+        compute: Dict[str, float] = {d.name: 0.0 for d in self.dests}
+        setup_s = 0.0
+        for loop in self.prog.loops:
+            dest = by_name[place[loop.name]]
+            execs = self.prog.region_trip(loop.parent_seq)
+            compute[dest.name] += mixed_loop_time(
+                self.prog, loop, dest
+            ) * execs
+            setup_s += dest.setup_latency  # one-time per placed kernel
+        sched = build_mixed_schedule(self.prog, place, self.registry)
+        return MixedBreakdown(
+            compute_s=compute,
+            transfer_s=sched.seconds(self.registry),
+            setup_s=setup_s,
+            schedule=sched,
+        )
+
+    def __call__(self, genes: Sequence[int]) -> float:
+        return self.breakdown(genes).total_s
+
+    def host_only_time(self) -> float:
+        return self((0,) * self.prog.gene_length)
+
+    # -- caching ------------------------------------------------------------
+
+    def fingerprint(self) -> str:
+        """Program (structural digest, not just the name — another grid
+        size must not share times) + whole-machine identity; NOT the
+        searched subset (see module docstring — subset-independence is
+        what lets searches over different destination subsets share one
+        cache file)."""
+        return (
+            f"mixed:{self.prog.fingerprint()}:{self.registry.fingerprint()}"
+        )

@@ -1,0 +1,240 @@
+"""Per-backend destination profiles + transfer topology.
+
+The mixed-destination follow-up to the source paper (arXiv:2011.12431)
+searches CPU, GPU and FPGA placements in ONE genome. This module holds the
+pieces that make a backend a first-class *destination*:
+
+- :class:`Destination` — a ``HardwareModel``-style profile (effective
+  per-``LoopClass`` compute rates, memory bandwidth, launch latency, a
+  one-time per-kernel setup cost) plus its admissibility rule: which loop
+  classes the backend's compiler accepts at all. The host CPU is itself a
+  destination (``kind="host"``), always index 0 of a search: it is the
+  fallback for inadmissible placements and the home of every variable.
+
+- :class:`Registry` — the destinations plus the transfer topology between
+  their memories: per directed pair (bandwidth, latency) links. Only
+  host<->device links exist physically in the modeled machines; a
+  device->device transfer (GPU->FPGA) routes through the host, paying both
+  legs (and leaving a staged copy in host RAM, which the residency
+  simulation credits).
+
+Calibration notes: the GPU numbers are the paper verification machine's
+Quadro P4000 constants frozen in :mod:`repro.core.evaluator`. The FPGA
+profile models a mid-range PCIe accelerator card compiled through an
+HLS-style flow: a ~10x lower clock-derived peak than the GPU on parallel
+nests, but deeply pipelined loop bodies (II=1 pipelines make
+sequential-carry/vectorizable-only loops run near peak instead of
+collapsing to a lane rate as on the GPU), a high one-time per-kernel
+configuration cost, and a narrower host link.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Dict, Optional, Sequence, Tuple
+
+from repro.core.evaluator import QUADRO_P4000, HardwareModel
+from repro.core.loopir import Loop, LoopClass
+
+
+@dataclasses.dataclass(frozen=True)
+class Destination:
+    """One offload destination: admissibility + effective rates.
+
+    ``rates`` maps an admissible :class:`LoopClass` to the effective
+    flop/s the backend sustains on loops of that class; a class absent
+    from ``rates`` is inadmissible (the backend's compiler rejects it and
+    the evaluator re-homes the loop to the host, the GA's analogue of a
+    pgcc compile error that doesn't kill the whole individual).
+    """
+
+    name: str
+    kind: str  # "host" | "gpu" | "fpga" | ...
+    rates: Tuple[Tuple[LoopClass, float], ...]
+    sequential_rate: float  # rate when loop.sequential_carry is set
+    membw: float
+    launch_latency: float = 0.0  # per kernel launch
+    setup_latency: float = 0.0  # ONE-TIME per distinct loop placed here
+
+    def accepts(self, klass: LoopClass) -> bool:
+        return any(k == klass for k, _ in self.rates)
+
+    def rate_for(self, loop: Loop) -> float:
+        if loop.sequential_carry:
+            return self.sequential_rate
+        for k, r in self.rates:
+            if k == loop.klass:
+                return r
+        raise KeyError(f"{self.name} does not accept {loop.klass}")
+
+    def fingerprint(self) -> str:
+        rates = ",".join(f"{k.value}={r:.6g}" for k, r in self.rates)
+        return (
+            f"{self.name}[{self.kind}|{rates}|seq={self.sequential_rate:.6g}"
+            f"|bw={self.membw:.6g}|launch={self.launch_latency:.6g}"
+            f"|setup={self.setup_latency:.6g}]"
+        )
+
+
+def host_destination(
+    hw: HardwareModel = QUADRO_P4000, name: str = "cpu"
+) -> Destination:
+    """The host CPU as a destination: accepts everything (it is where
+    loops already live), no launch or setup cost."""
+    return Destination(
+        name=name,
+        kind="host",
+        rates=(
+            (LoopClass.TIGHT, hw.cpu_flops),
+            (LoopClass.NON_TIGHT, hw.cpu_flops),
+            (LoopClass.VECTOR_ONLY, hw.cpu_flops),
+            (LoopClass.NOT_OFFLOADABLE, hw.cpu_flops),
+        ),
+        sequential_rate=hw.cpu_flops,
+        membw=hw.cpu_membw,
+    )
+
+
+def gpu_destination(
+    hw: HardwareModel = QUADRO_P4000, name: str = "gpu"
+) -> Destination:
+    """The paper's GPU path as a destination (same class->directive->rate
+    mapping as :func:`repro.core.evaluator.loop_time`)."""
+    return Destination(
+        name=name,
+        kind="gpu",
+        rates=(
+            (LoopClass.TIGHT, hw.accel_flops_kernels),
+            (LoopClass.NON_TIGHT, hw.accel_flops_parallel),
+            (LoopClass.VECTOR_ONLY, hw.accel_flops_vector),
+        ),
+        sequential_rate=hw.accel_flops_vector,
+        membw=hw.accel_membw,
+        launch_latency=hw.launch_latency,
+    )
+
+
+def fpga_destination(name: str = "fpga") -> Destination:
+    """FPGA-like profile (HLS flow on a mid-range PCIe card).
+
+    - TIGHT nests: clock-limited, ~10x below the GPU's kernels rate.
+    - NON_TIGHT (ragged tile bounds): NOT admissible — dynamic inner trip
+      counts don't map to a static pipeline, the HLS analogue of a pgcc
+      compile error.
+    - VECTOR_ONLY / sequential-carry loops: the FPGA's win — a deeply
+      pipelined datapath (II=1) keeps the dependence chain at full rate
+      where the GPU collapses to its lane (VPU) rate.
+    - High one-time setup per distinct kernel (partial-reconfiguration
+      region load + datapath handshake), so sprinkling many trivial loops
+      onto the fabric is penalized.
+    - Memory: on-card DDR, below the GPU's GDDR; residency is what makes
+      it cheap (tracked by the schedule, not a rate here).
+    """
+    return Destination(
+        name=name,
+        kind="fpga",
+        rates=(
+            (LoopClass.TIGHT, 5.6e10),
+            (LoopClass.VECTOR_ONLY, 8.9e10),
+        ),
+        sequential_rate=8.9e10,
+        membw=4.3e10,
+        launch_latency=1.2e-5,
+        setup_latency=1.8e-3,
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class Link:
+    """One directed memory-to-memory link."""
+
+    bw: float  # bytes/s
+    latency: float  # seconds per transfer batch
+
+
+@dataclasses.dataclass(frozen=True)
+class Registry:
+    """Destination set + transfer topology for one modeled machine.
+
+    ``links`` holds the physical directed links (host<->device). Routes
+    between two devices go through the host: :meth:`route` returns the hop
+    list and the schedule prices every hop.
+    """
+
+    name: str
+    destinations: Tuple[Destination, ...]
+    links: Tuple[Tuple[str, str, Link], ...]
+
+    def __post_init__(self):
+        names = [d.name for d in self.destinations]
+        assert len(set(names)) == len(names), "duplicate destination names"
+        assert any(d.kind == "host" for d in self.destinations), \
+            "a registry needs a host destination"
+
+    def get(self, name: str) -> Destination:
+        for d in self.destinations:
+            if d.name == name:
+                return d
+        raise KeyError(
+            f"unknown destination {name!r}; have "
+            f"{[d.name for d in self.destinations]}"
+        )
+
+    @property
+    def host(self) -> Destination:
+        return next(d for d in self.destinations if d.kind == "host")
+
+    def link(self, src: str, dst: str) -> Optional[Link]:
+        for a, b, l in self.links:
+            if (a, b) == (src, dst):
+                return l
+        return None
+
+    def route(self, src: str, dst: str) -> Tuple[Tuple[str, str], ...]:
+        """Hop list from ``src`` memory to ``dst`` memory. Direct when a
+        physical link exists; otherwise staged through the host."""
+        if src == dst:
+            return ()
+        if self.link(src, dst) is not None:
+            return ((src, dst),)
+        h = self.host.name
+        if src != h and dst != h \
+                and self.link(src, h) and self.link(h, dst):
+            return ((src, h), (h, dst))
+        raise KeyError(f"no route {src} -> {dst} in registry {self.name}")
+
+    def fingerprint(self) -> str:
+        """Stable digest of every profile + link constant. Part of the
+        mixed evaluator's cache fingerprint: searches share measurements
+        only when the whole modeled machine is identical — note the
+        *searched subset* is deliberately NOT part of this, so searches
+        over different subsets of one machine share their overlap."""
+        parts = [self.name]
+        parts += [d.fingerprint() for d in self.destinations]
+        parts += [
+            f"{a}->{b}:bw={l.bw:.6g},lat={l.latency:.6g}"
+            for a, b, l in self.links
+        ]
+        digest = hashlib.sha256("|".join(parts).encode()).hexdigest()[:16]
+        return f"{self.name}-{digest}"
+
+
+def default_registry(hw: HardwareModel = QUADRO_P4000) -> Registry:
+    """The paper's verification machine extended with the FPGA card:
+    i5-7500 host + Quadro P4000 (PCIe3 x16) + FPGA (PCIe3 x8)."""
+    pcie_gpu = Link(bw=hw.link_bw, latency=hw.link_latency)
+    pcie_fpga = Link(bw=3.8e9, latency=5.0e-5)  # x8 + driver overhead
+    return Registry(
+        name="p4000-fpga",
+        destinations=(
+            host_destination(hw),
+            gpu_destination(hw),
+            fpga_destination(),
+        ),
+        links=(
+            ("cpu", "gpu", pcie_gpu),
+            ("gpu", "cpu", pcie_gpu),
+            ("cpu", "fpga", pcie_fpga),
+            ("fpga", "cpu", pcie_fpga),
+        ),
+    )

@@ -1,0 +1,136 @@
+"""N-memory transfer scheduling for mixed-destination placements.
+
+Generalizes :func:`repro.core.transfer.build_schedule`'s BULK mode — the
+source paper's program-wide data region with host/device validity
+tracking — from one device memory to N. The residency state per variable
+is the SET of memories holding a valid copy (an MSI-like protocol):
+
+- a loop reading ``v`` on destination ``d`` with no valid copy at ``d``
+  copies it in from the host if the host copy is valid, else from the
+  (sorted-first) device that owns it — routed through the host when no
+  direct link exists, which also leaves a valid staged copy in host RAM;
+- a loop writing ``v`` on ``d`` invalidates every other copy (only ``d``
+  is valid afterwards);
+- program end flushes device-dirty variables back to the host once.
+
+Transfers coalesce per (loop execution, link) into one latency-bearing
+batch, exactly like BULK's multi-file coalescing. The dynamic execution
+order (first + weighted steady-state iteration per region) is replayed
+from :func:`repro.core.transfer.dynamic_events`.
+
+Costs are counted per directed link (bytes + batch events) and priced by
+the :class:`~repro.destinations.profiles.Registry`'s topology, so
+asymmetric H2D/D2H links and routed device->device hops fall out of the
+same accounting.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Mapping, Set, Tuple
+
+from repro.core.loopir import LoopProgram
+from repro.core.transfer import dynamic_events
+from repro.destinations.profiles import Registry
+
+Pair = Tuple[str, str]  # (src memory, dst memory), a directed link
+
+
+@dataclasses.dataclass
+class MixedSchedule:
+    """Per-link totals of the scheduled copies across all memories."""
+
+    bytes_by_link: Dict[Pair, float] = dataclasses.field(default_factory=dict)
+    events_by_link: Dict[Pair, float] = dataclasses.field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(self.bytes_by_link.values())
+
+    @property
+    def total_events(self) -> float:
+        return sum(self.events_by_link.values())
+
+    def _add(self, pair: Pair, nbytes: float) -> None:
+        self.bytes_by_link[pair] = self.bytes_by_link.get(pair, 0.0) + nbytes
+
+    def _add_event(self, pair: Pair, times: float) -> None:
+        self.events_by_link[pair] = (
+            self.events_by_link.get(pair, 0.0) + times
+        )
+
+    def seconds(self, registry: Registry) -> float:
+        """Price the per-link totals through the registry's topology."""
+        t = 0.0
+        for pair, b in self.bytes_by_link.items():
+            link = registry.link(*pair)
+            assert link is not None, pair
+            t += b / link.bw
+        for pair, n in self.events_by_link.items():
+            link = registry.link(*pair)
+            assert link is not None, pair
+            t += n * link.latency
+        return t
+
+    def describe(self) -> str:
+        rows = []
+        for pair in sorted(self.bytes_by_link):
+            rows.append(
+                f"{pair[0]}->{pair[1]} "
+                f"{self.bytes_by_link[pair]/1e6:.1f} MB"
+                f"/{self.events_by_link.get(pair, 0.0):.0f} batches"
+            )
+        return ", ".join(rows) if rows else "no transfers"
+
+
+def build_mixed_schedule(
+    prog: LoopProgram,
+    placement: Mapping[str, str],
+    registry: Registry,
+) -> MixedSchedule:
+    """Residency simulation over N memories.
+
+    ``placement`` maps every loop name to a destination name (the host
+    for CPU-resident and non-offloadable loops).
+    """
+    host = registry.host.name
+    sched = MixedSchedule()
+    valid: Dict[str, Set[str]] = {v.name: {host} for v in prog.vars}
+    dirty_dev: Dict[str, str] = {}  # var -> device holding the only copy
+
+    for kind, loop, times in dynamic_events(prog, boundaries=False):
+        if kind != "loop":
+            continue
+        assert loop is not None
+        dest = placement[loop.name]
+        moved: Dict[Pair, float] = {}
+        for vn in sorted(loop.reads):
+            if dest in valid[vn]:
+                continue
+            src = host if host in valid[vn] else sorted(valid[vn])[0]
+            nbytes = prog.var(vn).nbytes
+            for hop in registry.route(src, dest):
+                moved[hop] = moved.get(hop, 0.0) + nbytes
+                # a routed transfer stages a valid copy at each hop's end
+                valid[vn].add(hop[1])
+        for vn in sorted(loop.writes):
+            valid[vn] = {dest}
+            if dest == host:
+                dirty_dev.pop(vn, None)
+            else:
+                dirty_dev[vn] = dest
+        for pair, b in moved.items():
+            sched._add(pair, b * times)
+            sched._add_event(pair, times)  # coalesced per loop execution
+
+    # program end: device-dirty results return to the host once
+    end_moved: Dict[Pair, float] = {}
+    for vn in sorted(dirty_dev):
+        if host in valid[vn]:
+            continue
+        nbytes = prog.var(vn).nbytes
+        for hop in registry.route(dirty_dev[vn], host):
+            end_moved[hop] = end_moved.get(hop, 0.0) + nbytes
+    for pair, b in end_moved.items():
+        sched._add(pair, b)
+        sched._add_event(pair, 1.0)
+    return sched

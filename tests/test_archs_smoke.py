@@ -92,7 +92,12 @@ def test_prefill_then_decode_matches_full_forward(models, arch_id):
     """Strong correctness check: prefill(S) + decode(token S) must equal the
     full forward over S+1 tokens at the last position."""
     cfg, model, params = models(arch_id)
-    B, S = 2, 16
+    # B=4, not 2: bf16 near-tied router scores can flip experts in BOTH
+    # rows of a 2-row batch between the two compiled paths (seen on
+    # llama4-maverick in full-suite runs), tripping the majority check
+    # below. Four rows make a full-batch flip vanishingly unlikely while
+    # keeping the same <=50% tolerance per row.
+    B, S = 4, 16
     rng = np.random.default_rng(1)
     toks = rng.integers(0, cfg.vocab, size=(B, S + 1)).astype(np.int32)
     batch_full = {"tokens": jnp.asarray(toks)}

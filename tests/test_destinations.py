@@ -1,0 +1,361 @@
+"""Mixed-destination subsystem: profiles/topology, N-memory scheduling,
+MixedEvaluator parity + admissibility, the mixed-beats-single acceptance
+search, and cross-subset fitness-cache sharing."""
+import numpy as np
+import pytest
+
+from repro.core import evaluator as ev
+from repro.core import evalpool as ep
+from repro.core import ga, miniapps
+from repro.core import transfer as tr
+from repro.core.loopir import Loop, LoopClass, LoopProgram, SeqRegion, Var
+from repro.destinations import (
+    MixedEvaluator,
+    build_mixed_schedule,
+    default_registry,
+)
+
+
+# ---------------------------------------------------------------------------
+# registry + topology
+# ---------------------------------------------------------------------------
+
+
+def test_registry_basics():
+    reg = default_registry()
+    assert reg.host.name == "cpu"
+    assert reg.get("gpu").kind == "gpu"
+    with pytest.raises(KeyError):
+        reg.get("tpu")
+
+
+def test_route_direct_and_via_host():
+    reg = default_registry()
+    assert reg.route("cpu", "gpu") == (("cpu", "gpu"),)
+    assert reg.route("gpu", "gpu") == ()
+    # no physical gpu<->fpga link: staged through the host
+    assert reg.route("gpu", "fpga") == (("gpu", "cpu"), ("cpu", "fpga"))
+
+
+def test_admissibility_rules():
+    reg = default_registry()
+    fpga = reg.get("fpga")
+    assert fpga.accepts(LoopClass.TIGHT)
+    assert fpga.accepts(LoopClass.VECTOR_ONLY)
+    assert not fpga.accepts(LoopClass.NON_TIGHT)  # HLS compile-error analogue
+    gpu = reg.get("gpu")
+    assert gpu.accepts(LoopClass.NON_TIGHT)
+    assert not gpu.accepts(LoopClass.NOT_OFFLOADABLE)
+
+
+def test_registry_fingerprint_tracks_constants():
+    import dataclasses
+
+    from repro.destinations import profiles
+
+    a = default_registry()
+    b = default_registry()
+    assert a.fingerprint() == b.fingerprint()
+    # any profile constant change must change the fingerprint
+    fpga = a.get("fpga")
+    tweaked = dataclasses.replace(fpga, membw=fpga.membw * 2)
+    c = profiles.Registry(
+        name=a.name,
+        destinations=tuple(
+            tweaked if d.name == "fpga" else d for d in a.destinations
+        ),
+        links=a.links,
+    )
+    assert c.fingerprint() != a.fingerprint()
+
+
+# ---------------------------------------------------------------------------
+# N-memory schedule
+# ---------------------------------------------------------------------------
+
+
+def _two_loop_program(trip=4):
+    """x: written on one device, read on another, every region iteration."""
+    vars_ = [Var("x", 1 << 20), Var("y", 1 << 20)]
+    loops = (
+        Loop("produce", LoopClass.TIGHT, 64, 64, 2.0,
+             frozenset(), frozenset({"x"}), parent_seq="it"),
+        Loop("consume", LoopClass.VECTOR_ONLY, 64, 64, 2.0,
+             frozenset({"x"}), frozenset({"y"}), parent_seq="it"),
+    )
+    return LoopProgram("twoloop", loops, tuple(vars_),
+                       (SeqRegion("it", trip),))
+
+
+def test_schedule_residency_no_retransfer():
+    """A var read twice on the same device transfers once (BULK present)."""
+    prog = _two_loop_program(trip=4)
+    reg = default_registry()
+    sched = build_mixed_schedule(
+        prog, {"produce": "gpu", "consume": "gpu"}, reg
+    )
+    # x never crosses to the host mid-run (produced+consumed on gpu);
+    # program end flushes the two device-dirty vars home in ONE batch
+    assert sched.bytes_by_link.get(("cpu", "gpu"), 0.0) == 0.0
+    assert sched.bytes_by_link[("gpu", "cpu")] == float(2 << 20)
+    assert sched.events_by_link[("gpu", "cpu")] == 1.0
+
+
+def test_schedule_cross_device_routes_through_host():
+    prog = _two_loop_program(trip=3)
+    reg = default_registry()
+    sched = build_mixed_schedule(
+        prog, {"produce": "gpu", "consume": "fpga"}, reg
+    )
+    # x crosses gpu->cpu->fpga every iteration (produce rewrites it)
+    mb = float(1 << 20)
+    assert sched.bytes_by_link[("gpu", "cpu")] == pytest.approx(3 * mb)
+    assert sched.bytes_by_link[("cpu", "fpga")] == pytest.approx(3 * mb)
+    # y is written on fpga and flushed home once
+    assert sched.bytes_by_link[("fpga", "cpu")] == pytest.approx(mb)
+
+
+def test_schedule_write_invalidates_other_copies():
+    """After the host rewrites x, a device reader must re-transfer it."""
+    vars_ = [Var("x", 1 << 20)]
+    loops = (
+        Loop("host_write", LoopClass.NOT_OFFLOADABLE, 8, 8, 1.0,
+             frozenset(), frozenset({"x"}), parent_seq="it"),
+        Loop("dev_read", LoopClass.TIGHT, 8, 8, 1.0,
+             frozenset({"x"}), frozenset({"x"}), parent_seq="it"),
+    )
+    prog = LoopProgram("inval", loops, tuple(vars_), (SeqRegion("it", 5),))
+    sched = build_mixed_schedule(
+        prog, {"host_write": "cpu", "dev_read": "gpu"}, default_registry()
+    )
+    assert sched.bytes_by_link[("cpu", "gpu")] == pytest.approx(
+        5 * float(1 << 20)
+    )
+
+
+# ---------------------------------------------------------------------------
+# MixedEvaluator: binary parity, admissibility, canonical keys
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("app", ["himeno", "nasft", "hetero"])
+def test_mixed_k2_matches_binary_bulk_evaluator(app):
+    """The k=2 cpu+gpu search IS the paper's search: the mixed evaluator
+    must reproduce MiniappEvaluator(BULK, staged) to round-off."""
+    prog = miniapps.MINIAPPS[app]()
+    binary = ev.MiniappEvaluator(prog, tr.TransferMode.BULK, staged=True)
+    mixed = MixedEvaluator(prog, ("cpu", "gpu"))
+    rng = np.random.default_rng(7)
+    for _ in range(15):
+        g = tuple(int(b) for b in rng.integers(0, 2, prog.gene_length))
+        assert mixed(g) == pytest.approx(binary(g), rel=1e-12)
+
+
+def test_inadmissible_placement_falls_back_to_host():
+    prog = miniapps.nasft_program()
+    e = MixedEvaluator(prog, ("cpu", "gpu", "fpga"))
+    genes = tuple(2 for _ in range(prog.gene_length))  # everything -> fpga
+    adm = e.admissible(genes)
+    for g, loop in zip(adm, prog.offloadable_loops):
+        if loop.klass == LoopClass.NON_TIGHT:
+            assert g == 0  # fpga rejects ragged tiles -> host
+        else:
+            assert g == 2
+
+
+def test_cache_key_is_subset_independent():
+    prog = miniapps.hetero_program()
+    small = MixedEvaluator(prog, ("cpu", "fpga"))
+    full = MixedEvaluator(prog, ("cpu", "gpu", "fpga"))
+    n = prog.gene_length
+    g_small = tuple([1] + [0] * (n - 1))  # loop 0 -> fpga (index 1 of small)
+    g_full = tuple([2] + [0] * (n - 1))  # loop 0 -> fpga (index 2 of full)
+    assert small.cache_key(g_small) == full.cache_key(g_full)
+    assert small.fingerprint() == full.fingerprint()
+    # and the evaluations agree too: same placement, same machine
+    assert small(g_small) == pytest.approx(full(g_full), rel=1e-12)
+
+
+def test_fingerprint_distinguishes_programs():
+    a = MixedEvaluator(miniapps.himeno_program(), ("cpu", "gpu"))
+    b = MixedEvaluator(miniapps.hetero_program(), ("cpu", "gpu"))
+    assert a.fingerprint() != b.fingerprint()
+
+
+def test_fingerprint_distinguishes_program_shapes():
+    """Same app name at another grid/trip count must NOT share cached
+    fitness values — the times differ by orders of magnitude."""
+    big = MixedEvaluator(miniapps.hetero_program(), ("cpu", "gpu"))
+    small = MixedEvaluator(
+        miniapps.hetero_program(grid=(32, 32, 32), frames=5), ("cpu", "gpu")
+    )
+    assert big.fingerprint() != small.fingerprint()
+    # the binary evaluator keys on the same structural digest
+    ea = ev.MiniappEvaluator(miniapps.himeno_program())
+    eb = ev.MiniappEvaluator(miniapps.himeno_program(grid=(64, 64, 64)))
+    assert ea.fingerprint() != eb.fingerprint()
+    same = ev.MiniappEvaluator(miniapps.himeno_program())
+    assert ea.fingerprint() == same.fingerprint()
+
+
+def test_destinations_must_start_with_host():
+    with pytest.raises(AssertionError):
+        MixedEvaluator(miniapps.hetero_program(), ("gpu", "cpu"))
+
+
+# ---------------------------------------------------------------------------
+# k-ary GA wiring (plain tests; the hypothesis property tests for the
+# operators themselves live in test_genome_ga.py behind the dev extra)
+# ---------------------------------------------------------------------------
+
+
+def test_ga_kary_alleles_threaded_through():
+    """alleles=3: the GA explores destination indices and the winning
+    genome stays inside the alphabet."""
+    from repro.core import genome as G
+
+    def tri_time(genes):
+        # destination 2 fastest, 1 middling, 0 slow — optimum all-2s
+        return 10.0 - sum(genes) / len(genes)
+
+    p = ga.GAParams(population=12, generations=16, seed=0, alleles=3)
+    r = ga.run_ga(tri_time, 8, p)
+    assert all(0 <= g < 3 for g in r.best_genes)
+    assert sum(r.best_genes) >= 14  # ~all genes found destination 2
+    pop = G.initial_population(np.random.default_rng(0), 12, 24, k=3)
+    assert len(set(pop)) == 24
+    assert {x for g in pop for x in g} <= {0, 1, 2}
+
+
+def test_ga_default_alleles_binary_unchanged():
+    """alleles=2 (the default) is the pre-k-ary GA: identical results."""
+
+    def onemax_time(genes):
+        return 10.0 - 9.0 * sum(genes) / len(genes)
+
+    p2 = ga.GAParams(population=8, generations=8, seed=42)
+    explicit = ga.GAParams(population=8, generations=8, seed=42, alleles=2)
+    assert ga.run_ga(onemax_time, 10, p2).best_genes == \
+        ga.run_ga(onemax_time, 10, explicit).best_genes
+
+
+# ---------------------------------------------------------------------------
+# acceptance: mixed beats the best single destination; caches shared
+# ---------------------------------------------------------------------------
+
+
+def _search(prog, subset, seed=0, pool=None):
+    e = MixedEvaluator(prog, subset)
+    params = ga.GAParams(population=24, generations=24, seed=seed,
+                         timeout_s=1e6, alleles=e.k)
+    if pool is None:
+        return ga.run_ga(e, prog.gene_length, params)
+    return ga.run_ga(None, prog.gene_length, params, pool=pool)
+
+
+def test_mixed_destination_beats_best_single():
+    """The headline claim (same seed, same generations, same population):
+    one genome over all three backends finds a strictly faster plan than
+    the best either single-backend search reaches."""
+    prog = miniapps.hetero_program()
+    gpu_only = _search(prog, ("cpu", "gpu"))
+    fpga_only = _search(prog, ("cpu", "fpga"))
+    mixed = _search(prog, ("cpu", "gpu", "fpga"))
+    best_single = min(gpu_only.best_time_s, fpga_only.best_time_s)
+    assert mixed.best_time_s < best_single
+    # and the winning plan actually uses >= 2 non-host destinations
+    e = MixedEvaluator(prog, ("cpu", "gpu", "fpga"))
+    used = set(e.admissible(mixed.best_genes)) - {0}
+    assert len(used) >= 2
+
+
+def test_cross_subset_searches_share_fitness_cache(tmp_path):
+    """A second search over a DIFFERENT destination subset gets persistent
+    cache hits for every genome whose placement falls entirely within the
+    shared destinations."""
+    path = str(tmp_path / "mixed.jsonl")
+    prog = miniapps.hetero_program()
+
+    e_small = MixedEvaluator(prog, ("cpu", "gpu"))
+    cache1 = ep.FitnessCache(path, fingerprint=e_small.fingerprint())
+    with ep.EvalPool(e_small, cache=cache1) as pool1:
+        r1 = _search(prog, ("cpu", "gpu"), pool=pool1)
+    assert r1.evaluations > 0
+
+    # restart against the same file with the WIDER subset
+    e_full = MixedEvaluator(prog, ("cpu", "gpu", "fpga"))
+    assert e_full.fingerprint() == e_small.fingerprint()
+    cache2 = ep.FitnessCache(path, fingerprint=e_full.fingerprint())
+    assert cache2.loaded == r1.evaluations  # all binary measurements replay
+
+    # the binary best re-expressed in the k=3 alphabet (gpu is index 1 in
+    # both subsets) is served from disk; an fpga placement is a miss
+    with ep.EvalPool(e_full, cache=cache2) as pool2:
+        times, tel = pool2.evaluate_generation(
+            [r1.best_genes, tuple([2] * prog.gene_length)],
+            timeout_s=1e6, penalty_time_s=1e9,
+        )
+    assert tel.cache_hits == 1 and tel.evaluated == 1
+    assert times[0] == pytest.approx(r1.best_time_s, rel=1e-12)
+
+    # a whole warm mixed search: identical results (the cache never
+    # perturbs the GA's RNG stream), and it can only do better than cold
+    # — how much better is placement-dependent (a random k=3 genome
+    # rarely lands entirely inside the binary subset; the deterministic
+    # hit/miss pattern above is the hard guarantee)
+    cache3 = ep.FitnessCache(path, fingerprint=e_full.fingerprint())
+    with ep.EvalPool(e_full, cache=cache3) as pool3:
+        r3 = _search(prog, ("cpu", "gpu", "fpga"), pool=pool3)
+    cold = _search(prog, ("cpu", "gpu", "fpga"))
+    assert r3.best_genes == cold.best_genes
+    assert r3.best_time_s == cold.best_time_s
+    assert r3.evaluations <= cold.evaluations
+    assert r3.cache_hits >= cold.cache_hits
+
+
+def test_one_cache_object_serves_pools_over_different_subsets():
+    """A shared FitnessCache must never be repurposed by a pool: the same
+    raw genome means gpu in one subset and fpga in another, so the pools'
+    evaluator-derived keys (not a mutated cache key_fn) must disambiguate."""
+    prog = miniapps.hetero_program()
+    e_gpu = MixedEvaluator(prog, ("cpu", "gpu"))
+    e_fpga = MixedEvaluator(prog, ("cpu", "fpga"))
+    cache = ep.FitnessCache()  # one in-memory cache, two pools
+    g = tuple([1] + [0] * (prog.gene_length - 1))
+
+    t_gpu, _ = ep.EvalPool(e_gpu, cache=cache).evaluate_generation(
+        [g], 1e6, 1e9
+    )
+    t_fpga, tel = ep.EvalPool(e_fpga, cache=cache).evaluate_generation(
+        [g], 1e6, 1e9
+    )
+    assert tel.evaluated == 1 and tel.cache_hits == 0  # no false hit
+    assert t_gpu[0] == pytest.approx(e_gpu(g), rel=1e-12)
+    assert t_fpga[0] == pytest.approx(e_fpga(g), rel=1e-12)
+    assert t_gpu[0] != t_fpga[0]
+
+
+def test_clamped_duplicates_share_one_measurement():
+    """Two genomes whose placements clamp to the same admissible plan
+    canonicalize identically and must be measured once per generation."""
+    prog = miniapps.nasft_program()
+    e = MixedEvaluator(prog, ("cpu", "gpu", "fpga"))
+    i = next(
+        i for i, l in enumerate(prog.offloadable_loops)
+        if l.klass == LoopClass.NON_TIGHT
+    )
+    a = (0,) * prog.gene_length
+    b = a[:i] + (2,) + a[i + 1:]  # fpga rejects NON_TIGHT -> clamps to host
+    assert e.cache_key(a) == e.cache_key(b)
+    with ep.EvalPool(e) as pool:
+        times, tel = pool.evaluate_generation([a, b], 1e6, 1e9)
+    assert tel.unique == 1 and tel.evaluated == 1 and tel.cache_hits == 1
+    assert times[0] == times[1]
+
+
+def test_mixed_search_deterministic_per_seed():
+    prog = miniapps.hetero_program()
+    a = _search(prog, ("cpu", "gpu", "fpga"), seed=5)
+    b = _search(prog, ("cpu", "gpu", "fpga"), seed=5)
+    assert a.best_genes == b.best_genes
+    assert a.best_time_s == b.best_time_s

@@ -134,6 +134,22 @@ def test_penalized_records_not_replayed_on_resume(tmp_path):
     assert tel.cache_hits == 1 and tel.evaluated == 1
 
 
+def test_pool_close_leaves_caller_cache_open(tmp_path):
+    """A caller-owned cache survives its pool: it may be serving other
+    pools (cross-subset sharing), so only pool-built caches close with
+    the pool."""
+    path = str(tmp_path / "fitness.jsonl")
+    cache = ep.FitnessCache(path, fingerprint="fp")
+    with ep.EvalPool(lambda g: 1.0, cache=cache) as pool:
+        pool.evaluate_generation([(0,)], 180.0, 1000.0)
+    # still open: a second pool over the same cache keeps persisting
+    with ep.EvalPool(lambda g: 2.0, cache=cache) as pool:
+        pool.evaluate_generation([(1,)], 180.0, 1000.0)
+    cache.close()
+    replay = ep.FitnessCache(path, fingerprint="fp")
+    assert replay.get((0,)) == 1.0 and replay.get((1,)) == 2.0
+
+
 def test_cache_tolerates_corrupt_trailing_line(tmp_path):
     path = str(tmp_path / "fitness.jsonl")
     c1 = ep.FitnessCache(path, fingerprint="fp")
@@ -273,6 +289,44 @@ def test_batched_evaluator_path_used():
         )
     assert e.batch_calls == 1 and e.point_calls == 0
     assert tel.evaluated == 2
+
+
+# ---------------------------------------------------------------------------
+# process-pool path: MeasuredEvaluator on real miniapp runs (ROADMAP item)
+# ---------------------------------------------------------------------------
+
+
+def test_measured_evaluator_through_process_pool():
+    """The paper's real measurement loop, parallelized: a picklable
+    module-level run_fn (miniapps.HimenoRunFn) wall-clocked by
+    MeasuredEvaluator inside EvalPool(executor="process") workers. The
+    pool spawns (not forks) so the parent's JAX/XLA state can't deadlock
+    the children."""
+    run_fn = miniapps.HimenoRunFn(grid=(9, 9, 17), nn=2)
+    e = ev.MeasuredEvaluator(run_fn, tag=run_fn.tag)
+    assert "himeno" in ep.evaluator_fingerprint(e)
+
+    prog = miniapps.himeno_program()
+    n = prog.gene_length
+    off = (0,) * n
+    on = tuple(1 for _ in range(n))
+    with ep.EvalPool(e, workers=2, executor="process") as pool:
+        times, tel = pool.evaluate_generation(
+            [off, on, off], timeout_s=300.0, penalty_time_s=1000.0
+        )
+    assert tel.evaluated == 2 and tel.cache_hits == 1
+    assert tel.timeouts == 0
+    assert all(0.0 < t < 300.0 for t in times)
+    assert times[0] == times[2]
+
+
+def test_run_fns_are_picklable():
+    import pickle
+
+    for fn in (miniapps.HimenoRunFn(), miniapps.NasftRunFn()):
+        clone = pickle.loads(pickle.dumps(ev.MeasuredEvaluator(fn,
+                                                               tag=fn.tag)))
+        assert clone.tag == fn.tag
 
 
 # ---------------------------------------------------------------------------

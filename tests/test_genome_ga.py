@@ -83,6 +83,100 @@ def test_initial_population_unique_when_space_allows():
 
 
 # ---------------------------------------------------------------------------
+# k-ary genome operators (mixed-destination search)
+# ---------------------------------------------------------------------------
+
+
+def _binary_random_genome(rng, length):
+    """The pre-k-ary binary operator, verbatim (bit-for-bit reference)."""
+    return tuple(int(b) for b in rng.integers(0, 2, size=length))
+
+
+def _binary_mutate(rng, g, rate):
+    """The pre-k-ary binary operator, verbatim (bit-for-bit reference)."""
+    flips = rng.random(len(g)) < rate
+    return tuple(int(b) ^ int(f) for b, f in zip(g, flips))
+
+
+@given(st.integers(1, 128), st.integers(2, 9), st.integers(0, 2**31 - 1))
+def test_random_genome_kary_allele_validity(length, k, seed):
+    g = G.random_genome(np.random.default_rng(seed), length, k)
+    assert len(g) == length
+    assert all(0 <= x < k for x in g)
+
+
+@given(st.integers(1, 64), st.integers(2, 9), st.integers(0, 2**31 - 1),
+       st.floats(0.0, 1.0))
+def test_mutate_kary_preserves_allele_validity(length, k, seed, rate):
+    rng = np.random.default_rng(seed)
+    g = G.random_genome(rng, length, k)
+    m = G.mutate(rng, g, rate, k)
+    assert len(m) == length
+    assert all(0 <= x < k for x in m)
+
+
+@given(st.integers(1, 64), st.integers(3, 9), st.integers(0, 2**31 - 1))
+def test_mutate_kary_rate_one_never_self_mutates(length, k, seed):
+    """A mutated gene must land on one of the k-1 OTHER alleles (the
+    k-ary generalization of the binary flip)."""
+    rng = np.random.default_rng(seed)
+    g = G.random_genome(rng, length, k)
+    m = G.mutate(rng, g, 1.0, k)
+    assert all(x != y for x, y in zip(g, m))
+    assert G.mutate(rng, g, 0.0, k) == g
+
+
+@given(st.integers(2, 64), st.integers(3, 9), st.integers(0, 2**31 - 1))
+def test_crossover_kary_preserves_columns(length, k, seed):
+    """Crossover is allele-agnostic: each child column holds one of the
+    two parent values, for any alphabet size."""
+    rng = np.random.default_rng(seed)
+    a = G.random_genome(rng, length, k)
+    b = G.random_genome(rng, length, k)
+    for op in (G.crossover, G.uniform_crossover):
+        ca, cb = op(rng, a, b, rate=1.0)
+        for i in range(length):
+            assert {ca[i], cb[i]} == {a[i], b[i]}
+
+
+@given(st.integers(1, 128), st.integers(0, 2**31 - 1),
+       st.floats(0.0, 1.0))
+def test_k2_operators_bit_identical_to_binary(length, seed, rate):
+    """k=2 must reproduce the pre-k-ary binary operators bit-for-bit
+    under the same seed — same RNG draws, same outputs — so existing
+    searches and persisted fitness caches are unchanged."""
+    r_new, r_old = np.random.default_rng(seed), np.random.default_rng(seed)
+    g_new = G.random_genome(r_new, length, 2)
+    g_old = _binary_random_genome(r_old, length)
+    assert g_new == g_old
+    assert G.mutate(r_new, g_new, rate, 2) == _binary_mutate(
+        r_old, g_old, rate
+    )
+    # generator states still aligned after both ops
+    assert r_new.integers(0, 1 << 30) == r_old.integers(0, 1 << 30)
+
+
+@given(st.integers(1, 16), st.integers(1, 20), st.integers(0, 2**31 - 1))
+def test_initial_population_k2_bit_identical(length, size, seed):
+    r_new, r_old = np.random.default_rng(seed), np.random.default_rng(seed)
+    pop = G.initial_population(r_new, length, size, 2)
+    # reference: the pre-k-ary loop, verbatim
+    ref, seen, attempts = [], set(), 0
+    while len(ref) < size:
+        g = _binary_random_genome(r_old, length)
+        attempts += 1
+        if g in seen and attempts < 20 * size and length > 1:
+            continue
+        seen.add(g)
+        ref.append(g)
+    assert pop == ref
+
+
+# (plain, non-hypothesis k-ary wiring tests live in test_destinations.py
+# so they run even where the hypothesis dev extra is absent)
+
+
+# ---------------------------------------------------------------------------
 # GA engine
 # ---------------------------------------------------------------------------
 
