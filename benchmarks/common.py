@@ -1,0 +1,39 @@
+"""Shared CLI surface for the benchmark scripts.
+
+Every benchmark takes the same evaluation-infrastructure flags
+(--seed / --workers / --cache / --smoke); declaring them once here stops
+the scripts drifting apart (each used to re-declare its own subset with
+slightly different help text and defaults).
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def add_common_args(
+    ap: argparse.ArgumentParser,
+    *,
+    seed: bool = True,
+    workers: bool = True,
+    cache: bool = True,
+    smoke: bool = True,
+) -> argparse.ArgumentParser:
+    """Add the shared benchmark flags; pass ``flag=False`` to omit one
+    a script genuinely has no use for."""
+    if seed:
+        ap.add_argument("--seed", type=int, default=0,
+                        help="GA RNG seed")
+    if workers:
+        ap.add_argument("--workers", type=int, default=1,
+                        help="concurrent fitness measurements per "
+                             "generation")
+    if cache:
+        ap.add_argument("--cache", default=None, metavar="PATH",
+                        help="persistent fitness cache (JSONL); searches "
+                             "with matching evaluator fingerprints share "
+                             "measurements and killed runs resume warm")
+    if smoke:
+        ap.add_argument("--smoke", action="store_true",
+                        help="small CI-sized budget (fast-tier smoke "
+                             "invocation)")
+    return ap

@@ -3,33 +3,25 @@
 The paper's fig. 4 plots each generation's best performance for NAS.FT
 under the previous method [33], converging from CPU-only 31.3 s to 5.8 s
 (5.4x) over 20 generations. This benchmark emits the same curve for both
-the previous and proposed configurations from the analytic verification
-environment, as speedup-vs-CPU per generation (ASCII plot + CSV).
+the previous and proposed configurations, driving the ``repro.offload``
+facade's analyze+search stages, as speedup-vs-CPU per generation
+(ASCII plot + CSV).
 """
 from __future__ import annotations
 
 import argparse
 
-from repro.core import evaluator as ev
-from repro.core import evalpool as ep
-from repro.core import ga, miniapps
-from repro.core import transfer as tr
+from benchmarks.common import add_common_args
+from repro.core import miniapps
+from repro.offload import Offloader, OffloadSpec
 
 
-def convergence(app: str, method: str, seed: int = 0, workers: int = 1):
-    prog = miniapps.MINIAPPS[app]()
-    n = prog.gene_length
-    cpu = ev.predict_time(prog, (0,) * n).total_s
-    if method == "previous":
-        e = ev.MiniappEvaluator(
-            prog, tr.TransferMode.NEST, staged=False, kernels_only=True
-        )
-    else:
-        e = ev.MiniappEvaluator(prog, tr.TransferMode.BULK, staged=True)
-    params = ga.GAParams.for_gene_length(n, seed=seed)
-    with ep.EvalPool(e, workers=workers) as pool:
-        result = ga.run_ga(None, n, params, pool=pool)
-    return cpu, result
+def convergence(app: str, method: str, seed: int = 0, workers: int = 1,
+                cache: str = None):
+    spec = OffloadSpec(program=app, mode="binary", method=method,
+                       seed=seed, workers=workers, cache=cache)
+    res = Offloader(spec).run(until="search")
+    return res.baseline_time_s, res.stage("search").payload
 
 
 def ascii_plot(rows, width: int = 50):
@@ -44,25 +36,29 @@ def ascii_plot(rows, width: int = 50):
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--app", default="nasft", choices=list(miniapps.MINIAPPS))
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--workers", type=int, default=1)
+    add_common_args(ap, smoke=False)
     args = ap.parse_args(argv)
 
     print(f"== fig4: GA convergence, {args.app} ==")
     for method in ("previous", "proposed"):
-        cpu, res = convergence(args.app, method, args.seed, args.workers)
+        cpu, search = convergence(args.app, method, args.seed, args.workers,
+                                  args.cache)
+        history = search["history"]
         rows = [
-            (h.generation, cpu / h.best_time_s) for h in res.history
+            (h["generation"], cpu / h["best_time_s"]) for h in history
         ]
-        dedup = max((h.dedup_ratio for h in res.history), default=0.0)
+        dedup = max((h["dedup_ratio"] for h in history), default=0.0)
+        best = search["best_time_s"]
         print(f"\n[{method}] CPU-only {cpu:.1f}s; "
-              f"final {res.best_time_s:.2f}s = {cpu/res.best_time_s:.1f}x "
-              f"({res.evaluations} evals, {res.cache_hits} cache hits, "
-              f"peak dedup {dedup:.0%}, search wall {res.wall_s:.1f}s)")
+              f"final {best:.2f}s = {cpu/best:.1f}x "
+              f"({search['evaluations']} evals, {search['cache_hits']} "
+              f"cache hits, peak dedup {dedup:.0%}, "
+              f"search wall {search['wall_s']:.1f}s)")
         print(ascii_plot(rows))
         print("csv:generation,speedup,gen_wall_s,hit_rate")
-        for (g, s), h in zip(rows, res.history):
-            print(f"csv:{g},{s:.3f},{h.gen_wall_s:.4f},{h.hit_rate:.3f}")
+        for (g, s), h in zip(rows, history):
+            print(f"csv:{g},{s:.3f},{h['gen_wall_s']:.4f},"
+                  f"{h['hit_rate']:.3f}")
 
 
 if __name__ == "__main__":

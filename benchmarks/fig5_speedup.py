@@ -5,20 +5,19 @@ Paper table (measured on i5-7500 + Quadro P4000):
     Himeno benchmark      4.8x         15.4x
     NAS.FT                5.4x         10.0x
 
-Both methods run the full GA (paper parameters) against the analytic
-verification environment with the calibrated hardware model. ``--ablate``
-adds the intermediate configurations that isolate each §3.3 improvement:
-  directive expansion only / transfer reduction only / both (=proposed).
+Each (app, config) pair runs the full GA through the ``repro.offload``
+facade (the method configurations live in ``repro.offload.METHODS``).
+``--ablate`` adds the intermediate configurations that isolate each §3.3
+improvement: directive expansion only / transfer reduction only / both
+(=proposed).
 """
 from __future__ import annotations
 
 import argparse
-from typing import Dict, Tuple
+from typing import Optional, Tuple
 
-from repro.core import evaluator as ev
-from repro.core import evalpool as ep
-from repro.core import ga, miniapps
-from repro.core import transfer as tr
+from benchmarks.common import add_common_args
+from repro.offload import Offloader, OffloadSpec
 
 PAPER = {
     ("himeno", "previous"): 4.8,
@@ -27,54 +26,19 @@ PAPER = {
     ("nasft", "proposed"): 10.0,
 }
 
-CONFIGS: Dict[str, dict] = {
-    # [33]: nest-level transfers, kernels directive only, no temp-area
-    "previous": dict(mode=tr.TransferMode.NEST, staged=False,
-                     kernels_only=True),
-    # ablation: add the directive expansion, keep [33] transfers
-    "dir-expansion-only": dict(mode=tr.TransferMode.NEST, staged=False,
-                               kernels_only=False),
-    # ablation: add bulk/present/temp-area transfers, keep kernels-only
-    "transfer-only": dict(mode=tr.TransferMode.BULK, staged=True,
-                          kernels_only=True),
-    # this paper: both improvements
-    "proposed": dict(mode=tr.TransferMode.BULK, staged=True,
-                     kernels_only=False),
-    # extra reference: [32]-era naive per-kernel sync
-    "naive-2018": dict(mode=tr.TransferMode.NAIVE, staged=False,
-                       kernels_only=True),
-}
-
 
 def run(app: str, config: str, seed: int = 0, workers: int = 1,
-        cache_path: str = None) -> Tuple[float, float]:
-    prog = miniapps.MINIAPPS[app]()
-    n = prog.gene_length
-    cpu = ev.predict_time(prog, (0,) * n).total_s
-    kw = CONFIGS[config]
-    e = ev.MiniappEvaluator(
-        prog, kw["mode"], staged=kw["staged"], kernels_only=kw["kernels_only"]
-    )
-    cache = ep.FitnessCache(cache_path, fingerprint=e.fingerprint()) \
-        if cache_path else None
-    params = ga.GAParams.for_gene_length(n, seed=seed)
-    try:
-        with ep.EvalPool(e, workers=workers, cache=cache) as pool:
-            res = ga.run_ga(None, n, params, pool=pool)
-    finally:
-        if cache is not None:
-            cache.close()  # pools don't close caller-owned caches
-    return cpu, cpu / res.best_time_s
+        cache_path: Optional[str] = None) -> Tuple[float, float]:
+    spec = OffloadSpec(program=app, mode="binary", method=config,
+                       seed=seed, workers=workers, cache=cache_path)
+    res = Offloader(spec).run(until="search")
+    return res.baseline_time_s, res.speedup
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--ablate", action="store_true")
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--workers", type=int, default=1)
-    ap.add_argument("--cache", default=None, metavar="PATH",
-                    help="persistent fitness cache (JSONL, shared by all "
-                         "app/config pairs; fingerprints keep them apart)")
+    add_common_args(ap, smoke=False)
     args = ap.parse_args(argv)
 
     configs = (

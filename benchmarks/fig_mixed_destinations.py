@@ -2,16 +2,26 @@
 
 Runs the offload GA on the heterogeneous pipeline miniapp over three
 destination subsets of the modeled machine (host + Quadro P4000 + FPGA
-card) and shows the headline claim: one k-ary genome over ALL backends
-finds a placement strictly faster than the best any single-backend search
-can reach, because the app's loop classes favor different backends
-(tight stencils -> GPU, sequential-carry scan stages -> FPGA pipelines,
-host-coupled control -> CPU).
+card) through the ``repro.offload`` facade, and shows the headline
+claim: one k-ary genome over ALL backends finds a placement strictly
+faster than the best any single-backend search can reach, because the
+app's loop classes favor different backends (tight stencils -> GPU,
+sequential-carry scan stages -> FPGA pipelines, host-coupled control ->
+CPU).
 
-All three searches share one persistent fitness cache when ``--cache`` is
+A second section demonstrates genome-aware seeding
+(``OffloadSpec.warm_start``): the mixed initial population is warmed
+with each single-destination best re-expressed in the k-ary alphabet,
+which starts the search AT the best-single-destination level instead of
+spending generations of paid measurements getting there
+(measurements-to-parity is the win metric; both runs converge to the
+mixed optimum).
+
+All searches share one persistent fitness cache when ``--cache`` is
 given: the mixed evaluator's fingerprint covers the machine, not the
 searched subset, and its canonical cache keys are destination names — so
-the CPU+GPU search pre-pays measurements the mixed search reuses.
+the CPU+GPU search (and the warm-start pre-searches) pre-pay
+measurements the mixed search reuses.
 
   PYTHONPATH=src python -m benchmarks.fig_mixed_destinations
   PYTHONPATH=src python -m benchmarks.fig_mixed_destinations --smoke
@@ -21,12 +31,11 @@ the CPU+GPU search pre-pays measurements the mixed search reuses.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 from typing import Optional, Sequence, Tuple
 
-from repro.core import evalpool as ep
-from repro.core import ga, miniapps
-from repro.destinations import MixedEvaluator
+from benchmarks.common import add_common_args
+from repro.offload import Offloader, OffloadSpec
+from repro.offload.spec import MIXED_BUDGET, MIXED_SMOKE_BUDGET
 
 SUBSETS: Tuple[Tuple[str, ...], ...] = (
     ("cpu", "gpu"),
@@ -35,85 +44,97 @@ SUBSETS: Tuple[Tuple[str, ...], ...] = (
 )
 
 
-def search(
-    subset: Sequence[str],
-    prog,
-    params: ga.GAParams,
-    workers: int = 1,
-    cache_path: Optional[str] = None,
-) -> Tuple[ga.GAResult, MixedEvaluator, ep.GenTelemetry]:
-    e = MixedEvaluator(prog, subset)
-    params = dataclasses.replace(params, alleles=e.k)
-    cache = ep.FitnessCache(cache_path, fingerprint=e.fingerprint()) \
-        if cache_path else None
-    try:
-        with ep.EvalPool(e, workers=workers, cache=cache) as pool:
-            res = ga.run_ga(None, prog.gene_length, params, pool=pool)
-            tot = pool.totals()
-    finally:
-        if cache is not None:
-            cache.close()  # pools don't close caller-owned caches
-    return res, e, tot
+def search(subset: Sequence[str], population: int, generations: int,
+           seed: int = 0, workers: int = 1,
+           cache_path: Optional[str] = None, warm_start: bool = False):
+    spec = OffloadSpec(
+        program="hetero", mode="mixed", destinations=tuple(subset),
+        population=population, generations=generations, seed=seed,
+        workers=workers, cache=cache_path, warm_start=warm_start,
+    )
+    return Offloader(spec).run(until="search")
+
+
+def gens_to_level(history, level: float) -> Optional[int]:
+    """First generation whose best reaches ``level`` (None = never)."""
+    for h in history:
+        if h["best_time_s"] <= level * (1 + 1e-9):
+            return h["generation"]
+    return None
 
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--smoke", action="store_true",
-                    help="small grid + short GA (CI fast-tier invocation)")
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--workers", type=int, default=1)
-    ap.add_argument("--cache", default=None, metavar="PATH",
-                    help="persistent fitness cache shared by all three "
-                         "searches (the mixed fingerprint is subset-"
-                         "independent, so overlaps hit)")
+    add_common_args(ap)
     args = ap.parse_args(argv)
 
-    # the evaluator is analytic, so the paper-scale program costs the same
-    # as a toy one — smoke only trims the GA budget (the k=3 space needs
-    # pop/gens ~24 to find the mixed optimum on every seed; the short
-    # smoke GA still shows the win on the default seed)
-    prog = miniapps.hetero_program()
-    if args.smoke:
-        params = ga.GAParams(population=10, generations=8, seed=args.seed,
-                             timeout_s=1e6)
-    else:
-        params = ga.GAParams(population=24, generations=24, seed=args.seed,
-                             timeout_s=1e6)
-
-    host_only = MixedEvaluator(prog, ("cpu", "gpu")).host_only_time()
-    print(f"== mixed destinations: {prog.description} ==")
-    print(f"host-only (all-CPU): {host_only:.3f}s")
-    print(f"{'destinations':18s} {'best_s':>9s} {'speedup':>8s} "
-          f"{'evals':>6s} {'hits':>5s}")
+    # the evaluator is analytic, so the paper-scale program costs the
+    # same as a toy one — smoke only trims the GA budget (see the budget
+    # constants' rationale in repro.offload.spec)
+    pop, gens = MIXED_SMOKE_BUDGET if args.smoke else MIXED_BUDGET
 
     best_single = float("inf")
     mixed_best = float("inf")
+    host_only = None
+    results = {}
     for subset in SUBSETS:
-        res, e, tot = search(
-            subset, prog, params, args.workers, args.cache
-        )
+        res = search(subset, pop, gens, args.seed, args.workers, args.cache)
+        results[subset] = res
+        if host_only is None:
+            host_only = res.baseline_time_s
+            prog_desc = res.stage("analyze").payload["description"]
+            print(f"== mixed destinations: {prog_desc} ==")
+            print(f"host-only (all-CPU): {host_only:.3f}s")
+            print(f"{'destinations':18s} {'best_s':>9s} {'speedup':>8s} "
+                  f"{'evals':>6s} {'hits':>5s}")
+        p = res.stage("search").payload
         name = "+".join(subset)
         sp = host_only / res.best_time_s
         print(f"{name:18s} {res.best_time_s:9.4f} {sp:7.1f}x "
-              f"{tot.evaluated:6d} {tot.cache_hits:5d}")
+              f"{p['evaluations']:6d} {p['cache_hits']:5d}")
         print(f"csv:{name},{res.best_time_s:.5f},{sp:.2f},"
-              f"{tot.evaluated},{tot.cache_hits}")
+              f"{p['evaluations']},{p['cache_hits']}")
         if len(subset) < 3:
             best_single = min(best_single, res.best_time_s)
         else:
             mixed_best = res.best_time_s
-            bd = e.breakdown(res.best_genes)
-            print(f"  mixed plan: {bd.describe()}")
-            for loop, dest in zip(
-                prog.offloadable_loops,
-                (e.dests[g].name for g in e.admissible(res.best_genes)),
-            ):
-                print(f"    {loop.name:16s} -> {dest}")
+            print("  mixed placement:")
+            for loop, dest in p["placement"].items():
+                if dest != "cpu":
+                    print(f"    {loop:16s} -> {dest}")
 
     gain = best_single / mixed_best
     print(f"\nmixed vs best single destination: {gain:.2f}x "
           f"({'strictly faster' if mixed_best < best_single else 'NO GAIN'})")
     print(f"csv:mixed_vs_best_single,{gain:.4f}")
+
+    # -- genome-aware seeding (OffloadSpec.warm_start) ----------------------
+    # run the full-alphabet search cold vs warm at the full budget (the
+    # analytic searches cost milliseconds; smoke keeps it too) and report
+    # measurements-to-parity with the best single destination
+    print("\n== warm-start convergence (genome-aware seeding) ==")
+    cold = results[SUBSETS[-1]]
+    warm = search(SUBSETS[-1], *MIXED_BUDGET, args.seed, args.workers,
+                  args.cache, warm_start=True)
+    wp = warm.stage("search").payload
+    seed_info = warm.stage("seed").payload["seed_info"]
+    print("single-destination seeds: "
+          + ", ".join(f"{i['device']} {i['best_time_s']:.4f}s"
+                      for i in seed_info))
+    if cold.stage("search").payload["ga"]["generations"] != MIXED_BUDGET[1]:
+        cold = search(SUBSETS[-1], *MIXED_BUDGET, args.seed, args.workers,
+                      args.cache)
+    cp = cold.stage("search").payload
+    for tag, p in (("cold", cp), ("warm", wp)):
+        g = gens_to_level(p["history"], best_single)
+        evals_to = (g + 1) * p["ga"]["population"] if g is not None else None
+        print(f"{tag}: gen0 best {p['history'][0]['best_time_s']:.4f}s; "
+              f"reaches best-single level at gen "
+              f"{'never' if g is None else g} "
+              f"(~{evals_to or '-'} paid measurements); "
+              f"final {p['best_time_s']:.4f}s")
+        print(f"csv:warmstart,{tag},{p['history'][0]['best_time_s']:.5f},"
+              f"{-1 if g is None else g},{p['best_time_s']:.5f}")
 
 
 if __name__ == "__main__":

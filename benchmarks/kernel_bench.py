@@ -98,11 +98,12 @@ def bench_ssd(check_kernel: bool, workers: int = 1):
 
 
 def main(argv=None):
+    from benchmarks.common import add_common_args
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--check-kernel", action="store_true",
                     help="also run the Pallas kernels in interpret mode")
-    ap.add_argument("--workers", type=int, default=1,
-                    help="concurrent interpret-mode kernel checks")
+    add_common_args(ap, seed=False, cache=False, smoke=False)
     args = ap.parse_args(argv)
     bench_attention(args.check_kernel, args.workers)
     bench_ssd(args.check_kernel, args.workers)

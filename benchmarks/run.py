@@ -79,13 +79,13 @@ SECTIONS = {
 
 
 def main() -> None:
+    from benchmarks.common import add_common_args
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--section", choices=list(SECTIONS), default=None)
     ap.add_argument("--ablate", action="store_true")
     ap.add_argument("--check-kernel", action="store_true")
-    ap.add_argument("--workers", type=int, default=1,
-                    help="evaluation-pool size for the GA sections and the "
-                         "kernel-check fan-out")
+    add_common_args(ap, seed=False, cache=False, smoke=False)
     args = ap.parse_args()
 
     picks = [args.section] if args.section else list(SECTIONS)

@@ -6,19 +6,33 @@ Shows the mechanism (bytes/events), complementing fig5's end-to-end times:
   nest   [33]: hoisted read-onlys + per-iteration flush of written arrays
   bulk  (new): whole-program residency ("data present" tracking)
 and the temp-area effect (staged on/off) on compiler auto-transfers.
+
+Hardware models come from the ``repro.offload`` registry (--hw), the
+same one every pipeline spec resolves against.
 """
 from __future__ import annotations
 
-from repro.core import evaluator as ev
+import argparse
+
+from benchmarks.common import add_common_args
 from repro.core import miniapps
 from repro.core import transfer as tr
+from repro.offload.programs import HW_MODELS
 
 
 def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--hw", default="quadro-p4000",
+                    choices=sorted(HW_MODELS))
+    add_common_args(ap, seed=False, workers=False, cache=False)
+    args = ap.parse_args(argv)
+
     print("== transfer-reduction ablation (all offloadable loops on) ==")
-    hw = ev.QUADRO_P4000
-    for app in ("himeno", "nasft"):  # the paper's §3.3 table; `hetero`
-        # has its own figure (fig_mixed_destinations.py)
+    hw = HW_MODELS[args.hw]
+    apps = ("himeno",) if args.smoke else ("himeno", "nasft")
+    # the paper's §3.3 table apps; `hetero` has its own figure
+    # (fig_mixed_destinations.py)
+    for app in apps:
         prog = miniapps.MINIAPPS[app]()
         genes = (1,) * prog.gene_length
         print(f"\n[{app}] {prog.description}")

@@ -3,20 +3,22 @@
 The paper searches which C loops go to the GPU. At the framework level the
 same genome decides which stage groups of a transformer get their
 accelerated treatment (TP/EP sharding + fused kernels) vs the replicated
-baseline. The verification environment here is the AOT-compiled roofline
-evaluator on the production mesh — expensive per individual (XLA compile),
-exactly like the paper's per-individual deploy+measure, so gene lengths
-stay small (units, not layers).
+baseline, driven through the ``repro.offload`` facade with
+``program="arch:<name>"``. The verification environment here is the
+AOT-compiled roofline evaluator on the production mesh — expensive per
+individual (XLA compile), exactly like the paper's per-individual
+deploy+measure, so gene lengths stay small (units, not layers).
 
 This example uses the ANALYTIC plan evaluator (instant) by default so it
 runs everywhere; pass --compiled to score individuals by actually
 lowering+compiling each plan on the 16x16 mesh (minutes; run via
   PYTHONPATH=src python examples/ga_arch_search.py --compiled
-inside a fresh process — it sets the 512-device flag itself).
+inside a fresh process — it sets the 512-device flag itself). The
+compiled evaluator is injected into the facade; such artifacts resume
+only with the same injection.
 """
 import argparse
 import os
-import sys
 
 
 def main():
@@ -30,28 +32,32 @@ def main():
     ap.add_argument("--cache", default=None, metavar="PATH",
                     help="persistent fitness cache (JSONL); lets a killed "
                          "search resume without re-measuring")
+    ap.add_argument("--artifact", default=None, metavar="PATH",
+                    help="save the staged OffloadResult artifact here")
     args = ap.parse_args()
 
     if args.compiled and "XLA_FLAGS" not in os.environ:
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
-    from repro.configs import get_arch
-    from repro.core import analysis, ga
-    from repro.core.evalpool import EvalPool, FitnessCache, \
-        evaluator_fingerprint
-    from repro.core.evaluator import CompiledEvaluator
+    from repro.offload import Offloader, OffloadSpec
 
-    cfg = get_arch(args.arch)
-    units = analysis.build_units(cfg, None)
-    n = len(units)
-    print(f"{args.arch}: {n} offload units (gene length {n})")
-    for u in units:
-        print(f"  {u.name:14s} {u.directive.value}")
+    spec = OffloadSpec(
+        program=f"arch:{args.arch}",
+        generations=args.generations or (4 if args.compiled else None),
+        population=6 if args.compiled else None,
+        workers=args.workers,
+        cache=args.cache,
+    )
 
+    evaluator = None
     if args.compiled:
+        from repro.core.evaluator import CompiledEvaluator
+        from repro.core import analysis
+        from repro.configs import get_arch
         from repro.launch import dryrun
         from repro.launch.mesh import make_production_mesh
 
+        cfg = get_arch(args.arch)
         mesh = make_production_mesh(multi_pod=False)
 
         def build_and_score(genes):
@@ -66,65 +72,27 @@ def main():
             build_and_score, verbose=True, compile_workers=args.workers,
             tag=f"{args.arch}:train_4k:16x16",
         )
-        gens = args.generations or 4
-        params = ga.GAParams(population=min(n, 6), generations=gens,
-                             seed=0, timeout_s=1e6)
-    else:
-        # analytic: per-unit roofline terms without compiling
-        from repro.configs.base import TRAIN_4K
-        from repro.launch.roofline import model_flops
 
-        def analytic_time(genes):
-            plan = analysis.build_plan(cfg, None, genes=genes)
-            # napkin model: offloaded units run TP-sharded (model axis 16),
-            # baseline units replicated (x16 compute); collectives charged
-            # per offloaded unit boundary.
-            t = 0.0
-            flops = model_flops(cfg, TRAIN_4K) / 256
-            per_unit = flops / max(len(plan.units), 1)
-            for u in plan.units:
-                rate = 197e12
-                t += per_unit / rate / (1.0 if u.offload else 16.0) * 16.0 \
-                    if not u.offload else per_unit / rate
-                if u.offload:
-                    t += 2 * cfg.d_model * 4096 * 2 / 50e9 / 1e3  # reshard
-            return t
-
-        # cache key: the closure's qualname alone would collide across
-        # --arch values, silently sharing measurements between models
-        analytic_time.fingerprint = lambda: f"analytic-plan:{args.arch}"
-        evaluator = analytic_time
-        params = ga.GAParams(
-            population=min(n, 10),
-            generations=args.generations or min(n, 10),
-            seed=0, timeout_s=1e6,
-        )
-
-    cache = FitnessCache(args.cache,
-                         fingerprint=evaluator_fingerprint(evaluator)) \
-        if args.cache else None
-    if cache is not None and len(cache):
-        print(f"resumed fitness cache: {len(cache)} measurements "
-              f"({args.cache})")
-    pool = EvalPool(evaluator, workers=args.workers, cache=cache)
-    result = ga.run_ga(
-        None, n, params, pool=pool,
+    off = Offloader(
+        spec, artifact_path=args.artifact, evaluator=evaluator,
         on_generation=lambda s: print(
             f"  gen {s.generation}: best {s.best_time_s*1e3:.2f} ms "
             f"(wall {s.gen_wall_s:.2f}s, dedup {s.dedup_ratio:.0%}, "
             f"hit-rate {s.hit_rate:.0%})"
         ),
     )
-    tot = pool.totals()
-    pool.close()
-    if cache is not None:
-        cache.close()  # pools don't close caller-owned caches
-    print(f"\nsearch: {tot.evaluated} measurements for "
-          f"{tot.submitted} individuals "
-          f"({tot.cache_hits} cache hits, {tot.timeouts} timeouts)")
-    print(f"best genes: {result.best_genes}")
-    best_plan = analysis.build_plan(cfg, None, genes=result.best_genes)
-    print(best_plan.describe())
+    a = off.run(until="analyze").stage("analyze").payload
+    print(f"{args.arch}: {a['gene_length']} offload units "
+          f"(gene length {a['gene_length']})")
+    for u in a["units"]:
+        print(f"  {u['name']:14s} {u['directive']}")
+
+    res = off.run()
+    search = res.stage("search").payload
+    print(f"\nsearch: {search['evaluations']} measurements "
+          f"({search['cache_hits']} cache hits)")
+    print(f"best genes: {res.best_genes}")
+    print(off.adapter.describe_plan(res.best_genes))
 
 
 if __name__ == "__main__":

@@ -2,10 +2,12 @@
 
 The paper's GA searches binary CPU/GPU placements; here one k-ary genome
 places every loop on CPU, GPU or the FPGA profile in a single search
-(arXiv:2011.12431's mixed offloading destination environment). With
-``--cache``, re-running with a different ``--destinations`` subset reuses
-every measurement whose placement falls inside the shared destinations —
-the fingerprint covers the machine, not the subset.
+(arXiv:2011.12431's mixed offloading destination environment), driven
+end-to-end through the ``repro.offload`` facade. With ``--cache``,
+re-running with a different ``--destinations`` subset reuses every
+measurement whose placement falls inside the shared destinations — the
+fingerprint covers the machine, not the subset. ``--warm-start`` seeds
+the k-ary population with each single-destination best.
 
   PYTHONPATH=src python examples/mixed_offload_search.py
   PYTHONPATH=src python examples/mixed_offload_search.py \
@@ -30,45 +32,40 @@ def main():
     ap.add_argument("--cache", default=None, metavar="PATH",
                     help="persistent fitness cache (JSONL), shared across "
                          "destination subsets")
+    ap.add_argument("--warm-start", action="store_true",
+                    help="seed the population with single-destination "
+                         "bests (genome-aware seeding)")
+    ap.add_argument("--artifact", default=None, metavar="PATH",
+                    help="save the staged OffloadResult artifact here")
     args = ap.parse_args()
 
-    from repro.core import ga, miniapps
-    from repro.core.evalpool import EvalPool, FitnessCache
-    from repro.destinations import MixedEvaluator
+    from repro.offload import Offloader, OffloadSpec
 
-    prog = miniapps.MINIAPPS[args.app]()
-    subset = tuple(args.destinations.split(","))
-    e = MixedEvaluator(prog, subset)
-    print(f"{prog.name}: {prog.gene_length} genes x {e.k} destinations "
-          f"({', '.join(d.name for d in e.dests)})")
-
-    cache = FitnessCache(args.cache, fingerprint=e.fingerprint()) \
-        if args.cache else None
-    if cache is not None and len(cache):
-        print(f"resumed fitness cache: {len(cache)} placements ({args.cache})")
-    params = ga.GAParams(
-        population=args.population, generations=args.generations,
-        seed=args.seed, timeout_s=1e6, alleles=e.k,
+    spec = OffloadSpec(
+        program=args.app,
+        mode="mixed",
+        destinations=tuple(args.destinations.split(",")),
+        population=args.population,
+        generations=args.generations,
+        seed=args.seed,
+        workers=args.workers,
+        cache=args.cache,
+        warm_start=args.warm_start,
     )
-    with EvalPool(e, workers=args.workers, cache=cache) as pool:
-        res = ga.run_ga(
-            None, prog.gene_length, params, pool=pool,
-            on_generation=lambda s: print(
-                f"  gen {s.generation:2d}: best {s.best_time_s:.4f}s "
-                f"(hit-rate {s.hit_rate:.0%})"
-            ),
-        )
-        tot = pool.totals()
-    if cache is not None:
-        cache.close()  # pools don't close caller-owned caches
-
-    host_only = e.host_only_time()
-    print(f"\nbest plan: {res.best_time_s:.4f}s "
-          f"= {host_only / res.best_time_s:.1f}x over all-CPU "
-          f"({tot.evaluated} measurements, {tot.cache_hits} cache hits)")
-    print(e.breakdown(res.best_genes).describe())
-    for loop, g in zip(prog.offloadable_loops, e.admissible(res.best_genes)):
-        print(f"  {loop.name:16s} -> {e.dests[g].name}")
+    off = Offloader(
+        spec, artifact_path=args.artifact,
+        on_generation=lambda s: print(
+            f"  gen {s.generation:2d}: best {s.best_time_s:.4f}s "
+            f"(hit-rate {s.hit_rate:.0%})"
+        ),
+    )
+    a = off.run(until="analyze").stage("analyze").payload
+    print(f"{a['program']}: {a['gene_length']} genes x "
+          f"{len(a['destinations'])} destinations "
+          f"({', '.join(a['destinations'])})")
+    res = off.run()
+    print()
+    print(res.stage("report").payload["text"])
 
 
 if __name__ == "__main__":

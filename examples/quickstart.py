@@ -1,58 +1,52 @@
 """Quickstart: the paper's pipeline end to end on one miniapp.
 
-1. "Code analysis"  — load the Himeno LoopProgram (13 offloadable loops)
-2. GA offload search — fitness t^-1/2, roulette+elitism, Pc=.9 Pm=.05
-3. Transfer reduction — bulk / present / temp-area scheduling
-4. PCAST result check — offloaded vs CPU outputs on a sample run
+One :class:`OffloadSpec` drives every step through the staged
+``repro.offload`` facade:
+
+1. analyze — "code analysis": the Himeno LoopProgram (13 offloadable
+   loops) with its pgcc-style directive per loop
+2. seed + search — GA offload search (fitness t^-1/2, roulette+elitism,
+   Pc=.9 Pm=.05, the paper's M/T rule) over the evaluation pool
+3. verify — re-measure the winner + PCAST result-difference check of the
+   offloaded JAX implementation vs the CPU numpy reference
+4. report — the end-to-end summary (also saved in the artifact)
 
   PYTHONPATH=src python examples/quickstart.py
-"""
-import numpy as np
 
-from repro.core import evaluator as ev
-from repro.core import ga, miniapps, pcast
-from repro.core import transfer as tr
+The same flow from the command line:
+
+  PYTHONPATH=src python -m repro.offload run --program himeno
+"""
+from repro.offload import Offloader, OffloadSpec
 
 
 def main():
-    # -- 1. code analysis -------------------------------------------------
-    prog = miniapps.himeno_program()
-    print(prog.describe())
-
-    # -- 2. GA search (proposed method: bulk+present+temp-area) -----------
-    evaluator = ev.MiniappEvaluator(prog, tr.TransferMode.BULK, staged=True)
-    params = ga.GAParams.for_gene_length(prog.gene_length, seed=0)
-    print(f"\nGA: M={params.population} T={params.generations} "
-          f"Pc={params.crossover_rate} Pm={params.mutation_rate}")
-    result = ga.run_ga(
-        evaluator, prog.gene_length, params,
+    spec = OffloadSpec(program="himeno", mode="binary", method="proposed")
+    off = Offloader(
+        spec,
         on_generation=lambda s: print(
             f"  gen {s.generation:2d}: best {s.best_time_s*1e3:8.1f} ms "
             f"(mean {s.mean_time_s*1e3:8.1f} ms)"
         ),
     )
-    cpu_time = evaluator.cpu_only_time()
-    print(f"\nbest genes: {result.best_genes}")
-    print(f"CPU-only {cpu_time:.2f}s -> offloaded {result.best_time_s:.3f}s "
-          f"= {cpu_time/result.best_time_s:.1f}x speedup "
-          f"(paper: 15.4x; previous method 4.8x)")
 
-    # -- 3. transfer schedule for the found plan ---------------------------
-    sched = tr.build_schedule(prog, result.best_genes, tr.TransferMode.BULK)
-    print(f"transfer schedule: {sched.describe()}")
+    # -- 1. code analysis -------------------------------------------------
+    a = off.run(until="analyze").stage("analyze").payload
+    print(f"{a['description']}: {a['n_loops']} loops, "
+          f"{a['gene_length']} offloadable (= gene length)")
+    for l in a["loops"]:
+        print(f"  {l['name']:24s} {l['class']:16s} {l['directive']}")
 
-    # -- 4. PCAST result-difference check ----------------------------------
-    print("\nPCAST check (offloaded jit stencil vs CPU numpy):")
-    p_acc, gosa_acc = miniapps.himeno_run(grid=(17, 17, 33), nn=4,
-                                          jit_stencil=True)
-    p_cpu, gosa_cpu = miniapps.himeno_run(grid=(17, 17, 33), nn=4,
-                                          jit_stencil=False)
-    report = pcast.compare(
-        {"p": p_cpu, "gosa": np.float32(gosa_cpu)},
-        {"p": p_acc, "gosa": np.float32(gosa_acc)},
-    )
-    print(report.describe())
-    assert report.ok
+    # -- 2-4. search + verify + report ------------------------------------
+    print(f"\nGA search ({spec.method} method):")
+    res = off.run()
+    print()
+    print(res.stage("report").payload["text"])
+
+    # a PCAST failure would have raised StageFailure out of run() above;
+    # reaching here means the offloaded results matched the CPU reference
+    print(f"\n(paper: 15.4x; previous method 4.8x — got "
+          f"{res.speedup:.1f}x)")
 
 
 if __name__ == "__main__":

@@ -13,13 +13,14 @@ minimizing the sum of squared log-errors to the four targets.
 Run: PYTHONPATH=src python scripts/calibrate_miniapps.py [--workers N]
 Prints the best constants; they are then frozen into core/evaluator.py.
 
-Each candidate's four GA runs go through an EvalPool: --workers measures
-individuals concurrently, and --cache-dir persists every (hardware
-fingerprint, genome) measurement so an interrupted sweep resumes warm —
-re-scored grid points are answered entirely from cache.
+Each candidate's four GA runs drive the ``repro.offload`` facade (each
+is one analyze+search pipeline with the candidate HardwareModel injected
+— candidates aren't in the registry): --workers measures individuals
+concurrently, and --cache-dir persists every (hardware fingerprint,
+genome) measurement so an interrupted sweep resumes warm — re-scored
+grid points are answered entirely from cache.
 """
 import argparse
-import dataclasses
 import itertools
 import math
 import os
@@ -28,15 +29,12 @@ import sys
 import numpy as np
 
 from repro.core import evaluator as ev
-from repro.core import evalpool as ep
-from repro.core import ga
-from repro.core import miniapps
-from repro.core import transfer as tr
+from repro.offload import Offloader, OffloadSpec
 
 TARGETS = {("himeno", "prev"): 4.8, ("himeno", "prop"): 15.4,
            ("nasft", "prev"): 5.4, ("nasft", "prop"): 10.0}
 
-PROGS = {"himeno": miniapps.himeno_program(), "nasft": miniapps.nasft_program()}
+METHOD_OF = {"prev": "previous", "prop": "proposed"}
 
 
 def make_hw(cpu_f, cpu_bw, acc_f, acc_bw, link):
@@ -59,35 +57,20 @@ def make_hw(cpu_f, cpu_bw, acc_f, acc_bw, link):
 
 def speedups(hw, workers: int = 1, cache_dir: str = None):
     out = {}
-    for name, prog in PROGS.items():
-        n = prog.gene_length
-        cpu = ev.predict_time(prog, (0,) * n, tr.TransferMode.BULK, True, hw).total_s
-        for method, evaluator in [
-            ("prev", ev.MiniappEvaluator(prog, tr.TransferMode.NEST,
-                                          staged=False, hw=hw, kernels_only=True)),
-            ("prop", ev.MiniappEvaluator(prog, tr.TransferMode.BULK,
-                                          staged=True, hw=hw)),
-        ]:
-            cache = None
-            if cache_dir:
-                # one file PER candidate (hw.name encodes the constants):
-                # a shared file would be re-parsed in full by every new
-                # candidate only to discard foreign-fingerprint lines —
-                # O(candidates^2) JSON work by sweep end
-                cache = ep.FitnessCache(
-                    os.path.join(cache_dir,
-                                 f"{name}-{method}-{hw.name}.jsonl"),
-                    fingerprint=evaluator.fingerprint(),
-                )
-            p = ga.GAParams.for_gene_length(n, seed=0)
-            try:
-                with ep.EvalPool(evaluator, workers=workers,
-                                 cache=cache) as pool:
-                    r = ga.run_ga(None, n, p, pool=pool)
-            finally:
-                if cache is not None:
-                    cache.close()  # pools don't close caller-owned caches
-            out[(name, method)] = cpu / r.best_time_s
+    for name in ("himeno", "nasft"):
+        for method in ("prev", "prop"):
+            # one cache file PER candidate (hw.name encodes the
+            # constants): a shared file would be re-parsed in full by
+            # every new candidate only to discard foreign-fingerprint
+            # lines — O(candidates^2) JSON work by sweep end
+            cache = os.path.join(
+                cache_dir, f"{name}-{method}-{hw.name}.jsonl"
+            ) if cache_dir else None
+            spec = OffloadSpec(program=name, mode="binary",
+                               method=METHOD_OF[method], seed=0,
+                               workers=workers, cache=cache)
+            res = Offloader(spec, hw=hw).run(until="search")
+            out[(name, method)] = res.speedup
     return out
 
 

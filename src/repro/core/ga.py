@@ -110,6 +110,7 @@ def run_ga(
     params: GAParams,
     on_generation: Optional[Callable[[GenerationStats], None]] = None,
     pool: Optional[EvalPool] = None,
+    seeds: Optional[Sequence[Genes]] = None,
 ) -> GAResult:
     """Run the offload GA.
 
@@ -119,6 +120,14 @@ def run_ga(
     ``workers > 1`` and/or a persistent :class:`FitnessCache` to
     parallelize measurements and survive restarts; ``evaluate`` may then
     be ``None``.
+
+    ``seeds`` warm-starts the search: the given genomes replace the
+    first ``len(seeds)`` individuals of the random initial population
+    (genome-aware seeding — e.g. single-destination bests re-expressed
+    in the mixed k-ary alphabet). The random population is drawn FIRST
+    with the same RNG pulls either way, so ``seeds=None`` is
+    byte-identical to the pre-seeding GA and a seeded run's evolution
+    stream differs only through selection, never through the generator.
     """
     if pool is None:
         if evaluate is None:
@@ -131,6 +140,15 @@ def run_ga(
     pop = G.initial_population(
         rng, gene_length, params.population, params.alleles
     )
+    for i, s in enumerate(seeds or ()):
+        if i >= len(pop):
+            break
+        s = tuple(int(x) for x in s)
+        if len(s) != gene_length:
+            raise ValueError(f"seed {i}: length {len(s)} != {gene_length}")
+        if any(not (0 <= x < params.alleles) for x in s):
+            raise ValueError(f"seed {i} has alleles outside [0, {params.alleles})")
+        pop[i] = s
     history: List[GenerationStats] = []
     best_genes: Genes = pop[0]
     best_time = float("inf")

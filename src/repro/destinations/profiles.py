@@ -42,10 +42,15 @@ class Destination:
     """One offload destination: admissibility + effective rates.
 
     ``rates`` maps an admissible :class:`LoopClass` to the effective
-    flop/s the backend sustains on loops of that class; a class absent
-    from ``rates`` is inadmissible (the backend's compiler rejects it and
-    the evaluator re-homes the loop to the host, the GA's analogue of a
-    pgcc compile error that doesn't kill the whole individual).
+    flop/s the backend sustains on loops of that class. ``degraded_rates``
+    lists classes the backend's compiler accepts only through a painful
+    fallback (e.g. an HLS flow sequentializing a ragged-tile loop instead
+    of rejecting it): the placement is LEGAL — the GA may choose it and
+    prices the degraded rate — instead of the old boolean rejection that
+    silently re-homed the loop to the host. A class absent from both is
+    inadmissible (a hard compile error): the evaluator re-homes the loop
+    to the host, the GA's analogue of a pgcc compile error that doesn't
+    kill the whole individual.
     """
 
     name: str
@@ -55,11 +60,21 @@ class Destination:
     membw: float
     launch_latency: float = 0.0  # per kernel launch
     setup_latency: float = 0.0  # ONE-TIME per distinct loop placed here
+    degraded_rates: Tuple[Tuple[LoopClass, float], ...] = ()
 
     def accepts(self, klass: LoopClass) -> bool:
-        return any(k == klass for k, _ in self.rates)
+        return any(k == klass for k, _ in self.rates) or self.degraded(klass)
+
+    def degraded(self, klass: LoopClass) -> bool:
+        """True when ``klass`` compiles only through the degraded path."""
+        return any(k == klass for k, _ in self.degraded_rates)
 
     def rate_for(self, loop: Loop) -> float:
+        # the degraded fallback governs its classes outright (the
+        # sequentialized datapath IS the carry handling — no II=1 bonus)
+        for k, r in self.degraded_rates:
+            if k == loop.klass:
+                return r
         if loop.sequential_carry:
             return self.sequential_rate
         for k, r in self.rates:
@@ -69,10 +84,12 @@ class Destination:
 
     def fingerprint(self) -> str:
         rates = ",".join(f"{k.value}={r:.6g}" for k, r in self.rates)
+        deg = ",".join(f"{k.value}={r:.6g}" for k, r in self.degraded_rates)
         return (
             f"{self.name}[{self.kind}|{rates}|seq={self.sequential_rate:.6g}"
             f"|bw={self.membw:.6g}|launch={self.launch_latency:.6g}"
-            f"|setup={self.setup_latency:.6g}]"
+            f"|setup={self.setup_latency:.6g}"
+            f"{'|deg=' + deg if deg else ''}]"
         )
 
 
@@ -118,9 +135,12 @@ def fpga_destination(name: str = "fpga") -> Destination:
     """FPGA-like profile (HLS flow on a mid-range PCIe card).
 
     - TIGHT nests: clock-limited, ~10x below the GPU's kernels rate.
-    - NON_TIGHT (ragged tile bounds): NOT admissible — dynamic inner trip
-      counts don't map to a static pipeline, the HLS analogue of a pgcc
-      compile error.
+    - NON_TIGHT (ragged tile bounds): admissible only through a DEGRADED
+      fallback — dynamic inner trip counts don't map to a static pipeline,
+      so the HLS flow sequentializes the loop body behind a handshake,
+      landing below even the host's scalar rate. The placement is legal
+      (the GA may take it and pay for it) but never profitable unless
+      residency savings outweigh the compute loss.
     - VECTOR_ONLY / sequential-carry loops: the FPGA's win — a deeply
       pipelined datapath (II=1) keeps the dependence chain at full rate
       where the GPU collapses to its lane (VPU) rate.
@@ -137,6 +157,10 @@ def fpga_destination(name: str = "fpga") -> Destination:
             (LoopClass.TIGHT, 5.6e10),
             (LoopClass.VECTOR_ONLY, 8.9e10),
         ),
+        # sequentialized ragged-tile fallback: below the host's ~3.3e9
+        # scalar rate, so the GA only ever picks it when residency savings
+        # beat the compute loss
+        degraded_rates=((LoopClass.NON_TIGHT, 1.0e9),),
         sequential_rate=8.9e10,
         membw=4.3e10,
         launch_latency=1.2e-5,

@@ -1,0 +1,42 @@
+"""repro.offload — the paper's whole flow as one staged pipeline API.
+
+The source paper's contribution is a single automated sequence: extract
+loop statements, assign directives, GA-search placements against a
+verification environment, reduce transfers, and check results (PCAST).
+This package is that sequence as a reusable surface:
+
+- :class:`OffloadSpec` — one frozen, JSON-round-trippable description of
+  a search (program, binary/mixed mode, method, GA budget, pool/cache
+  settings, verify tolerances);
+- :class:`Offloader` — the facade running the named stages ``analyze ->
+  seed -> search -> verify -> report``;
+- :class:`OffloadResult` — the per-stage artifact that saves, reloads,
+  and resumes (completed stages skip; interrupted searches resume warm
+  through the persistent JSONL fitness cache);
+- ``python -m repro.offload`` — the CLI (``run`` / ``resume`` /
+  ``report``, ``--smoke`` for CI).
+
+Every example, benchmark and calibration script drives this facade; with
+spec defaults its searches are byte-identical to the pre-redesign
+hand-wired paths (parity-tested).
+"""
+from repro.offload.pipeline import Offloader, render_report
+from repro.offload.result import (
+    STAGES,
+    OffloadResult,
+    StageFailure,
+    StageRecord,
+)
+from repro.offload.spec import METHODS, MODES, OffloadSpec
+
+__all__ = [
+    "METHODS",
+    "MODES",
+    "Offloader",
+    "OffloadResult",
+    "OffloadSpec",
+    "STAGES",
+    "StageFailure",
+    "StageRecord",
+    "render_report",
+]

@@ -1,0 +1,159 @@
+"""CLI for the staged offload pipeline.
+
+  python -m repro.offload run --program himeno --mode binary
+  python -m repro.offload run --program hetero --mode mixed \\
+      --destinations cpu,gpu,fpga --warm-start --cache /tmp/hetero.jsonl
+  python -m repro.offload run --program himeno --smoke   # CI gate
+  python -m repro.offload resume --artifact himeno-binary.offload.json
+  python -m repro.offload report --artifact himeno-binary.offload.json
+
+``run`` executes every stage (analyze -> seed -> search -> verify ->
+report) and saves the artifact after each one; a failed stage (e.g. the
+PCAST result-difference check) exits non-zero with the failure recorded
+in the artifact. ``resume`` continues a saved artifact, skipping its
+completed stages — an interrupted *search* additionally resumes warm
+through the spec's persistent fitness cache. ``report`` pretty-prints an
+artifact (partial ones included) without running anything.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import List, Optional
+
+from repro.offload.pipeline import Offloader, render_report
+from repro.offload.result import STAGES, OffloadResult, StageFailure
+from repro.offload.spec import (
+    METHODS,
+    MIXED_SMOKE_BUDGET,
+    MODES,
+    OffloadSpec,
+)
+
+
+def _default_artifact(spec: OffloadSpec) -> str:
+    tag = spec.program.replace(":", "-")
+    return f"{tag}-{spec.mode}.offload.json"
+
+
+def _spec_from_args(args: argparse.Namespace) -> OffloadSpec:
+    kw = dict(
+        program=args.program,
+        mode=args.mode,
+        method=args.method,
+        destinations=tuple(args.destinations.split(",")),
+        hw=args.hw,
+        population=args.population,
+        generations=args.generations,
+        seed=args.seed,
+        timeout_s=args.timeout_s,
+        warm_start=args.warm_start,
+        workers=args.workers,
+        executor=args.executor,
+        cache=args.cache,
+        rel_tol=args.rel_tol,
+        abs_tol=args.abs_tol,
+    )
+    if args.smoke and args.mode == "mixed":
+        # binary paper-rule budgets are already seconds-scale on the
+        # analytic evaluator; only the mixed budget needs trimming
+        kw["population"] = kw["population"] or MIXED_SMOKE_BUDGET[0]
+        kw["generations"] = kw["generations"] or MIXED_SMOKE_BUDGET[1]
+    return OffloadSpec(**kw)
+
+
+def _progress(stats) -> None:
+    print(f"  gen {stats.generation:2d}: best {stats.best_time_s:.4g}s "
+          f"(hit-rate {stats.hit_rate:.0%})")
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.offload",
+        description="staged offload pipeline: analyze -> seed -> search "
+                    "-> verify -> report",
+    )
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    run = sub.add_parser("run", help="run the pipeline for a new spec")
+    run.add_argument("--program", required=True,
+                     help="miniapp name (himeno/nasft/hetero) or "
+                          "arch:<name>")
+    run.add_argument("--mode", choices=list(MODES), default="binary")
+    run.add_argument("--method", choices=sorted(METHODS),
+                     default="proposed", help="binary-mode configuration")
+    run.add_argument("--destinations", default="cpu,gpu,fpga",
+                     help="mixed-mode destination subset (host first)")
+    run.add_argument("--hw", default="quadro-p4000")
+    run.add_argument("--population", type=int, default=None)
+    run.add_argument("--generations", type=int, default=None)
+    run.add_argument("--seed", type=int, default=0)
+    run.add_argument("--timeout-s", type=float, default=None)
+    run.add_argument("--warm-start", action="store_true",
+                     help="mixed mode: seed the k-ary population with "
+                          "single-destination bests")
+    run.add_argument("--workers", type=int, default=1)
+    run.add_argument("--executor", choices=("thread", "process"),
+                     default="thread")
+    run.add_argument("--cache", default=None, metavar="PATH",
+                     help="persistent JSONL fitness cache (resume rides "
+                          "on it)")
+    run.add_argument("--rel-tol", type=float, default=None,
+                     help="PCAST relative tolerance override")
+    run.add_argument("--abs-tol", type=float, default=None,
+                     help="PCAST absolute tolerance override")
+    run.add_argument("--artifact", default=None, metavar="PATH",
+                     help="artifact path (default <program>-<mode>"
+                          ".offload.json)")
+    run.add_argument("--until", choices=STAGES, default="report")
+    run.add_argument("--smoke", action="store_true",
+                     help="CI-sized budget (small GA)")
+    run.add_argument("--quiet", action="store_true")
+
+    res = sub.add_parser("resume", help="continue a saved artifact")
+    res.add_argument("--artifact", required=True, metavar="PATH")
+    res.add_argument("--until", choices=STAGES, default="report")
+    res.add_argument("--quiet", action="store_true")
+
+    rep = sub.add_parser("report", help="pretty-print a saved artifact")
+    rep.add_argument("--artifact", required=True, metavar="PATH")
+
+    args = ap.parse_args(argv)
+
+    if args.cmd == "report":
+        art = OffloadResult.load(args.artifact)
+        print(art.summary())
+        print()
+        if art.completed("report"):
+            print(art.stage("report").payload["text"])
+        else:
+            print(render_report(art))
+        return 0
+
+    on_gen = None if args.quiet else _progress
+    if args.cmd == "run":
+        try:
+            spec = _spec_from_args(args)
+        except ValueError as e:
+            ap.error(str(e))
+        off = Offloader(spec, artifact_path=args.artifact
+                        or _default_artifact(spec), on_generation=on_gen)
+    else:  # resume
+        off = Offloader.resume(args.artifact, on_generation=on_gen)
+
+    try:
+        result = off.run(until=args.until)
+    except StageFailure as e:
+        print(f"error: {e}", file=sys.stderr)
+        print(f"artifact: {off.result.path}", file=sys.stderr)
+        return 1
+    if result.completed("report"):
+        print(result.stage("report").payload["text"])
+    else:
+        print(render_report(result))
+    print(f"artifact: {result.path}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,413 @@
+"""The Offloader facade: the paper's whole flow as one staged pipeline.
+
+Stages (in order, each recorded into the :class:`OffloadResult` artifact):
+
+- **analyze** — load the program, assign directives per loop/unit (the
+  paper's Clang-parse + pgcc-classification step), price the all-host
+  baseline.
+- **seed** — build the initial-population seeds. With
+  ``spec.warm_start`` (mixed mode), runs one quick binary GA per
+  non-host destination and re-expresses each single-destination best in
+  the full k-ary alphabet (genome-aware seeding); the pre-searches share
+  the spec's fitness cache with the main search (the mixed fingerprint
+  is subset-independent).
+- **search** — the GA over an :class:`EvalPool` with the persistent
+  JSONL fitness cache; a killed search re-run resumes warm from the
+  cache without re-measuring anything already paid for.
+- **verify** — re-measure the winner against the recorded best (exact
+  for the analytic evaluators) and run the PCAST result-difference check
+  of the offloaded implementation vs the CPU reference, where the
+  program has a runnable implementation.
+- **report** — render the human-readable summary into the artifact.
+
+Completed stages are skipped when re-running from a loaded artifact, so
+``Offloader.resume(path).run()`` continues a killed pipeline exactly
+where it stopped. A stage failure is recorded (status ``failed``) and
+saved *before* :class:`StageFailure` propagates, so the artifact always
+reflects what actually happened.
+
+With ``spec`` defaults, the facade's searches are byte-identical to the
+pre-redesign hand-wired paths (parity-tested in
+tests/test_offload_pipeline.py): same GAParams, same pool construction,
+same RNG stream.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Sequence
+
+from repro.core import ga
+from repro.core.evalpool import (
+    EvalPool,
+    FitnessCache,
+    evaluator_fingerprint,
+)
+from repro.core.evaluator import HardwareModel
+from repro.offload import programs
+from repro.offload.result import (
+    STAGES,
+    OffloadResult,
+    StageFailure,
+    timed,
+)
+from repro.offload.spec import OffloadSpec
+
+# relative mismatch tolerated when re-measuring the winner with a
+# deterministic (analytic) evaluator
+_REMEASURE_RTOL = 1e-9
+
+
+class Offloader:
+    """Facade running the staged pipeline for one :class:`OffloadSpec`.
+
+    Parameters
+    ----------
+    spec:
+        The declarative pipeline input.
+    artifact:
+        An existing :class:`OffloadResult` to continue (its completed
+        stages are skipped). Defaults to a fresh artifact for ``spec``.
+    artifact_path:
+        Where to save the artifact after every stage (None = in-memory).
+    evaluator:
+        Injected evaluator for the search/verify stages, overriding the
+        adapter's (e.g. a ``CompiledEvaluator``, or a calibration
+        candidate). Injection is process-local: resuming such an
+        artifact in a new process needs the same injection again.
+    hw:
+        Injected :class:`HardwareModel` overriding the ``spec.hw``
+        registry lookup (calibration sweeps score unregistered
+        candidate models).
+    on_generation:
+        Optional per-generation callback forwarded to ``run_ga``.
+    """
+
+    def __init__(
+        self,
+        spec: OffloadSpec,
+        artifact: Optional[OffloadResult] = None,
+        artifact_path: Optional[str] = None,
+        evaluator: Optional[Callable[[Sequence[int]], float]] = None,
+        hw: Optional[HardwareModel] = None,
+        on_generation: Optional[Callable[[ga.GenerationStats], None]] = None,
+    ):
+        if artifact is not None and artifact.spec != spec:
+            raise ValueError("artifact was produced by a different spec; "
+                             "use Offloader.resume to continue it")
+        self.spec = spec
+        self.result = artifact or OffloadResult(spec=spec)
+        if artifact_path is not None:
+            self.result.path = artifact_path
+        self._evaluator = evaluator
+        self._hw = hw
+        self._on_generation = on_generation
+        self._adapter = None  # built lazily (adapters may import jax-side)
+
+    @classmethod
+    def resume(
+        cls,
+        artifact_path: str,
+        evaluator: Optional[Callable[[Sequence[int]], float]] = None,
+        hw: Optional[HardwareModel] = None,
+        on_generation: Optional[Callable[[ga.GenerationStats], None]] = None,
+    ) -> "Offloader":
+        """Continue a saved artifact: its spec is authoritative and its
+        completed stages are skipped on the next :meth:`run`."""
+        art = OffloadResult.load(artifact_path)
+        return cls(art.spec, artifact=art, artifact_path=artifact_path,
+                   evaluator=evaluator, hw=hw, on_generation=on_generation)
+
+    # -- plumbing ----------------------------------------------------------
+
+    @property
+    def adapter(self):
+        if self._adapter is None:
+            self._adapter = programs.resolve_adapter(self.spec, self._hw)
+        return self._adapter
+
+    def _search_evaluator(self):
+        return self._evaluator if self._evaluator is not None \
+            else self.adapter.build_evaluator()
+
+    def _open_cache(self, evaluator) -> Optional[FitnessCache]:
+        if not self.spec.cache:
+            return None
+        return FitnessCache(self.spec.cache,
+                            fingerprint=evaluator_fingerprint(evaluator))
+
+    # -- driver ------------------------------------------------------------
+
+    def run(self, until: str = "report") -> OffloadResult:
+        """Run every not-yet-completed stage up to and including
+        ``until``, saving the artifact after each one."""
+        if until not in STAGES:
+            raise ValueError(f"unknown stage {until!r}; have {STAGES}")
+        for name in STAGES[: STAGES.index(until) + 1]:
+            if self.result.completed(name):
+                continue
+            self.run_stage(name)
+        return self.result
+
+    def run_stage(self, name: str) -> None:
+        fn = getattr(self, f"_stage_{name}")
+        try:
+            payload, wall = timed(fn)
+        except StageFailure:
+            raise
+        except Exception as e:  # noqa: BLE001 — record, then propagate
+            self.result.record(name, {}, 0.0, status="failed",
+                               error=repr(e))
+            self.result.save()
+            raise
+        status = "done"
+        error = payload.pop("_error", None)
+        if error is not None:
+            status = "failed"
+        self.result.record(name, payload, wall, status=status, error=error)
+        self.result.save()
+        if error is not None:
+            raise StageFailure(name, error)
+
+    # -- stages ------------------------------------------------------------
+
+    def _stage_analyze(self) -> Dict[str, Any]:
+        payload = self.adapter.analyze_payload()
+        payload["baseline_s"] = float(self.adapter.baseline_time())
+        return payload
+
+    def _stage_seed(self) -> Dict[str, Any]:
+        payload: Dict[str, Any] = {
+            "warm_start": bool(self.spec.warm_start),
+            "seeds": [],
+            "seed_info": [],
+        }
+        if not self.spec.warm_start:
+            return payload
+        # mixed-mode genome-aware seeding: one quick binary GA per
+        # non-host destination, bests re-expressed in the k-ary alphabet
+        adapter = self.adapter
+        host = self.spec.destinations[0]
+        n = adapter.gene_length
+        for device in self.spec.destinations[1:]:
+            sub = adapter.sub_evaluator((host, device))
+            params = ga.GAParams.for_gene_length(
+                n,
+                seed=self.spec.seed,
+                timeout_s=self.spec.timeout_s
+                if self.spec.timeout_s is not None else 1e6,
+                penalty_time_s=self.spec.penalty_time_s,
+                alleles=sub.k,
+            )
+            cache = self._open_cache(sub)
+            try:
+                with EvalPool(sub, workers=self.spec.workers,
+                              executor=self.spec.executor,
+                              cache=cache) as pool:
+                    res = ga.run_ga(None, n, params, pool=pool)
+                    tot = pool.totals()
+            finally:
+                if cache is not None:
+                    cache.close()
+            seed_genes = adapter.reexpress(res.best_genes, device)
+            payload["seeds"].append([int(g) for g in seed_genes])
+            payload["seed_info"].append({
+                "device": device,
+                "best_time_s": float(res.best_time_s),
+                "evaluations": int(tot.evaluated),
+                "cache_hits": int(tot.cache_hits),
+            })
+        return payload
+
+    def _stage_search(self) -> Dict[str, Any]:
+        adapter = self.adapter
+        evaluator = self._search_evaluator()
+        n = adapter.gene_length
+        params = self.spec.ga_params(n, adapter.alleles)
+        seeds = [
+            tuple(int(g) for g in s)
+            for s in self.result.stage("seed").payload.get("seeds", [])
+        ]
+        cache = self._open_cache(evaluator)
+        resumed = len(cache) if cache is not None else 0
+        try:
+            with EvalPool(evaluator, workers=self.spec.workers,
+                          executor=self.spec.executor, cache=cache) as pool:
+                res = ga.run_ga(
+                    None, n, params, pool=pool,
+                    on_generation=self._on_generation,
+                    seeds=seeds or None,
+                )
+                tot = pool.totals()
+        finally:
+            if cache is not None:
+                cache.close()
+        return {
+            "best_genes": [int(g) for g in res.best_genes],
+            "best_time_s": float(res.best_time_s),
+            "wall_s": float(res.wall_s),
+            "evaluations": int(tot.evaluated),
+            "cache_hits": int(tot.cache_hits),
+            "timeouts": int(tot.timeouts),
+            "cache_resumed": int(resumed),
+            "evaluator": evaluator_fingerprint(evaluator),
+            "ga": {
+                "population": params.population,
+                "generations": params.generations,
+                "alleles": params.alleles,
+                "seed": params.seed,
+                "seeded": len(seeds),
+            },
+            "placement": adapter.placement(res.best_genes),
+            "history": [
+                {
+                    "generation": h.generation,
+                    "best_time_s": float(h.best_time_s),
+                    "mean_time_s": float(h.mean_time_s),
+                    "gen_wall_s": float(h.gen_wall_s),
+                    "dedup_ratio": float(h.dedup_ratio),
+                    "hit_rate": float(h.hit_rate),
+                }
+                for h in res.history
+            ],
+        }
+
+    def _stage_verify(self) -> Dict[str, Any]:
+        adapter = self.adapter
+        search = self.result.stage("search").payload
+        best = tuple(int(g) for g in search["best_genes"])
+        best_t = float(search["best_time_s"])
+
+        evaluator = self._search_evaluator()
+        # guard against evaluator drift across resume: the search stage
+        # recorded its evaluator's fingerprint, and re-measuring the
+        # winner with a DIFFERENT one (e.g. a compiled-evaluator
+        # artifact resumed without re-injecting it) would either fail
+        # spuriously or silently bless an unverified number
+        searched_fp = search.get("evaluator")
+        verify_fp = evaluator_fingerprint(evaluator)
+        if searched_fp is not None and searched_fp != verify_fp:
+            return {
+                "re_measured_s": None,
+                "search_best_s": best_t,
+                "pcast": {"skipped": "evaluator mismatch"},
+                "_error": (
+                    f"verify evaluator {verify_fp!r} differs from the one "
+                    f"the search used ({searched_fp!r}); resume with the "
+                    "same evaluator injection (Offloader.resume(path, "
+                    "evaluator=...))"
+                ),
+            }
+        if self._evaluator is not None:
+            # injected evaluators (compiled / measured): a re-measurement
+            # would redo the expensive per-individual work (an AOT
+            # compile, a wall-clocked run) outside the pool/cache for a
+            # number that could not be held to exactness anyway — skip it
+            payload: Dict[str, Any] = {
+                "re_measured_s": None,
+                "search_best_s": best_t,
+                "consistent": True,
+                "note": "injected evaluator: re-measurement skipped",
+            }
+            consistent = True
+        else:
+            re_t = float(evaluator(best))
+            exact = adapter.deterministic
+            mismatch = abs(re_t - best_t) / max(best_t, 1e-300)
+            consistent = (not exact) or mismatch <= _REMEASURE_RTOL
+            payload = {
+                "re_measured_s": re_t,
+                "search_best_s": best_t,
+                "mismatch_rel": mismatch,
+                "consistent": bool(consistent),
+            }
+        report = adapter.pcast_check(best)
+        if report is None:
+            payload["pcast"] = {
+                "skipped": "no runnable reference implementation",
+            }
+        else:
+            payload["pcast"] = {
+                "ok": bool(report.ok),
+                "max_rel": float(report.max_rel),
+                "n_leaves": len(report.leaves),
+                "detail": report.describe(),
+            }
+        if not consistent:
+            payload["_error"] = (
+                f"winner re-measurement drifted: "
+                f"{payload['re_measured_s']:.6g}s vs recorded "
+                f"{best_t:.6g}s (rel {payload['mismatch_rel']:.3g})"
+            )
+        elif report is not None and not report.ok:
+            payload["_error"] = (
+                f"PCAST result-difference check FAILED "
+                f"(max_rel {report.max_rel:.3e})"
+            )
+        return payload
+
+    def _stage_report(self) -> Dict[str, Any]:
+        return {"text": render_report(self.result)}
+
+
+def render_report(result: OffloadResult) -> str:
+    """Human-readable end-to-end summary from artifact payloads alone
+    (used by the report stage AND ``python -m repro.offload report`` on
+    loaded artifacts, partial ones included)."""
+    spec = result.spec
+    tag = spec.method if spec.mode == "binary" and not spec.is_arch \
+        else "+".join(spec.destinations) if spec.mode == "mixed" \
+        else "plan-search"
+    rows = [f"== repro.offload report: {spec.program} [{spec.mode}/{tag}] =="]
+
+    if result.completed("analyze"):
+        a = result.stage("analyze").payload
+        rows.append(
+            f"analyze: {a.get('description', spec.program)} — "
+            f"{a['gene_length']} genes"
+            + (f" / {a['n_loops']} loops" if "n_loops" in a else "")
+            + f"; all-host baseline {a['baseline_s']:.4g}s"
+        )
+    if result.completed("seed"):
+        s = result.stage("seed").payload
+        if s.get("seeds"):
+            info = ", ".join(
+                f"{i['device']} {i['best_time_s']:.4g}s"
+                for i in s["seed_info"]
+            )
+            rows.append(f"seed: warm-start with {len(s['seeds'])} "
+                        f"single-destination bests ({info})")
+        else:
+            rows.append("seed: random initial population")
+    if result.completed("search"):
+        p = result.stage("search").payload
+        line = (
+            f"search: best {p['best_time_s']:.4g}s in "
+            f"{p['ga']['generations']} generations "
+            f"({p['evaluations']} measurements, {p['cache_hits']} cache "
+            f"hits, wall {p['wall_s']:.2f}s)"
+        )
+        if result.speedup:
+            line += f"; speedup {result.speedup:.1f}x over all-host"
+        rows.append(line)
+        moved = {u: d for u, d in p["placement"].items()
+                 if d not in ("cpu", "host")}
+        rows.append(f"placement: {len(moved)}/{len(p['placement'])} units "
+                    "offloaded")
+        for u, d in moved.items():
+            rows.append(f"    {u:24s} -> {d}")
+    if "verify" in result.stages:
+        v = result.stages["verify"]
+        pc = v.payload.get("pcast", {})
+        if "skipped" in pc:
+            pc_txt = f"PCAST skipped ({pc['skipped']})"
+        elif pc:
+            pc_txt = (f"PCAST {'PASS' if pc['ok'] else 'FAIL'} "
+                      f"(max_rel {pc['max_rel']:.3e}, "
+                      f"{pc['n_leaves']} tensors)")
+        else:
+            pc_txt = "PCAST not run"
+        ok = "ok" if v.done else f"FAILED: {v.error}"
+        re_t = v.payload.get("re_measured_s")
+        re_txt = "re-measurement skipped" if re_t is None \
+            else f"re-measured {re_t:.4g}s"
+        rows.append(f"verify: {ok}; {re_txt}; {pc_txt}")
+    return "\n".join(rows)

@@ -1,0 +1,374 @@
+"""Program adapters: one interface from an OffloadSpec to the pieces the
+pipeline stages need.
+
+A *program* is whatever the offload genome indexes into:
+
+- a **miniapp** ``LoopProgram`` (the paper's applications — Himeno,
+  NAS.FT, and the heterogeneous pipeline), searched either in the
+  paper's binary CPU/GPU mode (``MiniappEvaluator`` under a METHODS
+  configuration) or in the mixed-destination k-ary mode
+  (``MixedEvaluator`` over a destination subset);
+- a **model architecture** (``"arch:<name>"``), the beyond-paper
+  framework-level search where genes toggle stage-group offload in an
+  ExecutionPlan, scored by the analytic plan evaluator (or an injected
+  ``CompiledEvaluator`` for real AOT-compile scoring).
+
+Each adapter knows its gene length and allele count, builds its
+evaluator, computes the all-host baseline, renders a genome as a
+{unit: destination} placement, and (for miniapps with runnable JAX
+implementations) produces the PCAST result-difference check of the
+offloaded path against the CPU reference.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import evaluator as ev
+from repro.core import miniapps
+from repro.core import pcast
+from repro.core import transfer as tr
+from repro.core.loopir import LoopClass, LoopProgram
+from repro.offload.spec import METHODS, OffloadSpec
+
+# HardwareModel registry (spec.hw); Offloader may inject an unregistered
+# candidate model (calibration sweeps) via its ``hw=`` override.
+HW_MODELS: Dict[str, ev.HardwareModel] = {
+    ev.QUADRO_P4000.name: ev.QUADRO_P4000,
+    ev.TPU_V5E_HOST.name: ev.TPU_V5E_HOST,
+}
+
+# paper directive per pgcc-style loop class (§3.3)
+DIRECTIVES: Dict[LoopClass, str] = {
+    LoopClass.TIGHT: "acc kernels",
+    LoopClass.NON_TIGHT: "acc parallel loop",
+    LoopClass.VECTOR_ONLY: "acc parallel loop vector",
+    LoopClass.NOT_OFFLOADABLE: "(excluded: not offloadable)",
+}
+
+
+def resolve_hw(spec: OffloadSpec,
+               override: Optional[ev.HardwareModel] = None
+               ) -> ev.HardwareModel:
+    if override is not None:
+        return override
+    if spec.hw not in HW_MODELS:
+        raise ValueError(
+            f"unknown hardware model {spec.hw!r}; have {sorted(HW_MODELS)}"
+        )
+    return HW_MODELS[spec.hw]
+
+
+# ---------------------------------------------------------------------------
+# PCAST runnables: genome -> (reference pytree, offloaded pytree)
+# ---------------------------------------------------------------------------
+
+
+def _himeno_pair(offloaded: bool):
+    p_ref, g_ref = miniapps.himeno_run(grid=(17, 17, 33), nn=4,
+                                       jit_stencil=False)
+    p_off, g_off = miniapps.himeno_run(grid=(17, 17, 33), nn=4,
+                                       jit_stencil=offloaded)
+    return (
+        {"p": p_ref, "gosa": np.float32(g_ref)},
+        {"p": p_off, "gosa": np.float32(g_off)},
+    )
+
+
+def _nasft_pair(offloaded: bool):
+    ref = miniapps.nasft_run(grid=(16, 16, 16), niter=2, jit_fft=False)
+    off = miniapps.nasft_run(grid=(16, 16, 16), niter=2, jit_fft=offloaded)
+    return {"checksums": ref}, {"checksums": off}
+
+
+# miniapp name -> (hot loop whose gene selects the accelerator path,
+#                  pair builder). Apps absent here have no runnable
+# implementation; their verify stage records the PCAST check as skipped.
+RUNNABLE: Dict[str, Tuple[str, Callable[[bool], Tuple[Any, Any]]]] = {
+    "himeno": ("jacobi_stencil", _himeno_pair),
+    "nasft": ("evolve", _nasft_pair),
+}
+
+
+# ---------------------------------------------------------------------------
+# adapters
+# ---------------------------------------------------------------------------
+
+
+class MiniappBinaryAdapter:
+    """The paper's binary CPU/GPU search under a METHODS configuration."""
+
+    kind = "miniapp-binary"
+    deterministic = True  # analytic evaluator: re-measuring is exact
+
+    def __init__(self, spec: OffloadSpec,
+                 hw: Optional[ev.HardwareModel] = None):
+        if spec.program not in miniapps.MINIAPPS:
+            raise ValueError(
+                f"unknown miniapp {spec.program!r}; have "
+                f"{sorted(miniapps.MINIAPPS)}"
+            )
+        self.spec = spec
+        self.hw = resolve_hw(spec, hw)
+        self.prog: LoopProgram = miniapps.MINIAPPS[spec.program]()
+        self.method = METHODS[spec.method]
+
+    @property
+    def gene_length(self) -> int:
+        return self.prog.gene_length
+
+    @property
+    def alleles(self) -> int:
+        return 2
+
+    def build_evaluator(self) -> ev.MiniappEvaluator:
+        return ev.MiniappEvaluator(
+            self.prog,
+            tr.TransferMode(self.method["transfer"]),
+            staged=self.method["staged"],
+            hw=self.hw,
+            kernels_only=self.method["kernels_only"],
+        )
+
+    def baseline_time(self) -> float:
+        # all loops on the CPU, priced exactly as the fig4/fig5 scripts
+        # did (default BULK/staged args are transfer-free at zero genes)
+        return ev.predict_time(
+            self.prog, (0,) * self.gene_length, hw=self.hw
+        ).total_s
+
+    def analyze_payload(self) -> Dict[str, Any]:
+        return {
+            "program": self.prog.name,
+            "description": self.prog.description,
+            "gene_length": self.gene_length,
+            "n_loops": len(self.prog.loops),
+            "kernels_only": bool(self.method["kernels_only"]),
+            "loops": [
+                {
+                    "name": l.name,
+                    "class": l.klass.value,
+                    "directive": DIRECTIVES[l.klass],
+                    "offloadable": l.offloadable,
+                }
+                for l in self.prog.loops
+            ],
+        }
+
+    def placement(self, genes: Sequence[int]) -> Dict[str, str]:
+        adm = self.build_evaluator().admissible(genes)
+        out = {l.name: "cpu" for l in self.prog.loops}
+        for g, l in zip(adm, self.prog.offloadable_loops):
+            out[l.name] = "gpu" if g else "cpu"
+        return out
+
+    def pcast_check(self, genes: Sequence[int]
+                    ) -> Optional[pcast.PcastReport]:
+        hot = RUNNABLE.get(self.prog.name)
+        if hot is None:
+            return None
+        loop_name, pair = hot
+        offloaded = self.placement(genes)[loop_name] != "cpu"
+        ref, off = pair(offloaded)
+        return pcast.compare(ref, off, rel_tol=self.spec.rel_tol,
+                             abs_tol=self.spec.abs_tol)
+
+
+class MiniappMixedAdapter:
+    """Mixed-destination k-ary search (arXiv:2011.12431 direction)."""
+
+    kind = "miniapp-mixed"
+    deterministic = True
+
+    def __init__(self, spec: OffloadSpec,
+                 hw: Optional[ev.HardwareModel] = None):
+        from repro.destinations import MixedEvaluator, default_registry
+
+        if spec.program not in miniapps.MINIAPPS:
+            raise ValueError(
+                f"unknown miniapp {spec.program!r}; have "
+                f"{sorted(miniapps.MINIAPPS)}"
+            )
+        self.spec = spec
+        self.hw = resolve_hw(spec, hw)
+        self.prog: LoopProgram = miniapps.MINIAPPS[spec.program]()
+        self.registry = default_registry(self.hw)
+        self._mixed_cls = MixedEvaluator
+        self._evaluator = MixedEvaluator(
+            self.prog, spec.destinations, registry=self.registry
+        )
+
+    @property
+    def gene_length(self) -> int:
+        return self.prog.gene_length
+
+    @property
+    def alleles(self) -> int:
+        return self._evaluator.k
+
+    def build_evaluator(self):
+        return self._evaluator
+
+    def sub_evaluator(self, subset: Sequence[str]):
+        """A single-destination (host + one device) evaluator sharing
+        this machine's registry — the warm-start pre-searches. Its
+        fingerprint equals the mixed one (subset-independent), so the
+        pre-searches and the main search share one fitness-cache file."""
+        return self._mixed_cls(self.prog, tuple(subset),
+                               registry=self.registry)
+
+    def reexpress(self, genes: Sequence[int], device: str) -> Tuple[int, ...]:
+        """A binary (host, device) genome re-expressed in the full k-ary
+        alphabet of ``spec.destinations``."""
+        idx = self.spec.destinations.index(device)
+        return tuple(idx if int(g) else 0 for g in genes)
+
+    def baseline_time(self) -> float:
+        return self._evaluator.host_only_time()
+
+    def analyze_payload(self) -> Dict[str, Any]:
+        dests = {d.name: d for d in self._evaluator.dests}
+        return {
+            "program": self.prog.name,
+            "description": self.prog.description,
+            "gene_length": self.gene_length,
+            "n_loops": len(self.prog.loops),
+            "destinations": [d.name for d in self._evaluator.dests],
+            "loops": [
+                {
+                    "name": l.name,
+                    "class": l.klass.value,
+                    "directive": DIRECTIVES[l.klass],
+                    "offloadable": l.offloadable,
+                    "admissible": [
+                        n for n, d in dests.items() if d.accepts(l.klass)
+                    ] if l.offloadable else [],
+                }
+                for l in self.prog.loops
+            ],
+        }
+
+    def placement(self, genes: Sequence[int]) -> Dict[str, str]:
+        return self._evaluator.placement(genes)
+
+    def pcast_check(self, genes: Sequence[int]
+                    ) -> Optional[pcast.PcastReport]:
+        hot = RUNNABLE.get(self.prog.name)
+        if hot is None:
+            return None
+        loop_name, pair = hot
+        host = self._evaluator.dests[0].name
+        offloaded = self.placement(genes)[loop_name] != host
+        ref, off = pair(offloaded)
+        return pcast.compare(ref, off, rel_tol=self.spec.rel_tol,
+                             abs_tol=self.spec.abs_tol)
+
+
+class ArchPlanEvaluator:
+    """Analytic per-unit roofline for the framework-level search
+    (moved verbatim from examples/ga_arch_search.py): offloaded units
+    run TP-sharded, baseline units replicated (x16 compute), collectives
+    charged per offloaded unit boundary."""
+
+    def __init__(self, arch: str):
+        from repro.configs import get_arch
+
+        self.arch = arch
+        self.cfg = get_arch(arch)
+
+    def __call__(self, genes: Sequence[int]) -> float:
+        from repro.configs.base import TRAIN_4K
+        from repro.core import analysis
+        from repro.launch.roofline import model_flops
+
+        plan = analysis.build_plan(self.cfg, None, genes=tuple(genes))
+        t = 0.0
+        flops = model_flops(self.cfg, TRAIN_4K) / 256
+        per_unit = flops / max(len(plan.units), 1)
+        for u in plan.units:
+            rate = 197e12
+            t += per_unit / rate / (1.0 if u.offload else 16.0) * 16.0 \
+                if not u.offload else per_unit / rate
+            if u.offload:
+                t += 2 * self.cfg.d_model * 4096 * 2 / 50e9 / 1e3  # reshard
+        return t
+
+    def fingerprint(self) -> str:
+        # kept identical to the pre-redesign closure's fingerprint so
+        # existing persistent caches keep hitting
+        return f"analytic-plan:{self.arch}"
+
+
+class ArchAdapter:
+    """Beyond-paper: genes toggle stage-group offload in an ExecutionPlan.
+
+    The default evaluator is the instant analytic one; the Offloader's
+    ``evaluator=`` injection swaps in a ``CompiledEvaluator`` for real
+    AOT-compile scoring (examples/ga_arch_search.py --compiled).
+    """
+
+    kind = "arch"
+    deterministic = True
+
+    def __init__(self, spec: OffloadSpec,
+                 hw: Optional[ev.HardwareModel] = None):
+        from repro.configs import get_arch
+        from repro.core import analysis
+
+        self.spec = spec
+        self.cfg = get_arch(spec.arch_name)
+        self.units = analysis.build_units(self.cfg, None)
+
+    @property
+    def gene_length(self) -> int:
+        return len(self.units)
+
+    @property
+    def alleles(self) -> int:
+        return 2
+
+    def build_evaluator(self) -> ArchPlanEvaluator:
+        return ArchPlanEvaluator(self.spec.arch_name)
+
+    def baseline_time(self) -> float:
+        return self.build_evaluator()((0,) * self.gene_length)
+
+    def analyze_payload(self) -> Dict[str, Any]:
+        from repro.core import analysis
+
+        return {
+            "program": self.spec.program,
+            "description": f"{self.spec.arch_name} execution plan",
+            "gene_length": self.gene_length,
+            "units": [
+                {"name": u.name, "directive": u.directive.value}
+                for u in self.units
+            ],
+            "applicability": analysis.applicability_notes(self.cfg, None),
+        }
+
+    def placement(self, genes: Sequence[int]) -> Dict[str, str]:
+        return {
+            u.name: "accel" if g else "cpu"
+            for g, u in zip(genes, self.units)
+        }
+
+    def describe_plan(self, genes: Sequence[int]) -> str:
+        from repro.core import analysis
+
+        return analysis.build_plan(
+            self.cfg, None, genes=tuple(genes)
+        ).describe()
+
+    def pcast_check(self, genes: Sequence[int]) -> None:
+        return None  # no runnable reference pair at the plan level
+
+
+def resolve_adapter(spec: OffloadSpec,
+                    hw: Optional[ev.HardwareModel] = None):
+    if spec.is_arch:
+        return ArchAdapter(spec, hw)
+    if spec.mode == "mixed":
+        return MiniappMixedAdapter(spec, hw)
+    return MiniappBinaryAdapter(spec, hw)

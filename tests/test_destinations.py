@@ -42,10 +42,41 @@ def test_admissibility_rules():
     fpga = reg.get("fpga")
     assert fpga.accepts(LoopClass.TIGHT)
     assert fpga.accepts(LoopClass.VECTOR_ONLY)
-    assert not fpga.accepts(LoopClass.NON_TIGHT)  # HLS compile-error analogue
+    # NON_TIGHT compiles only through the DEGRADED fallback (HLS
+    # sequentialization): legal, priced painfully, never clamped away
+    assert fpga.accepts(LoopClass.NON_TIGHT)
+    assert fpga.degraded(LoopClass.NON_TIGHT)
+    assert not fpga.degraded(LoopClass.TIGHT)
     gpu = reg.get("gpu")
     assert gpu.accepts(LoopClass.NON_TIGHT)
+    assert not gpu.degraded(LoopClass.NON_TIGHT)
     assert not gpu.accepts(LoopClass.NOT_OFFLOADABLE)
+
+
+def test_degraded_rate_priced_below_host():
+    """The degraded NON_TIGHT fallback runs below the host's scalar rate
+    and is what rate_for returns for loops of that class."""
+    reg = default_registry()
+    fpga, cpu = reg.get("fpga"), reg.get("cpu")
+    loop = Loop("ragged", LoopClass.NON_TIGHT, 64, 64, 4.0,
+                frozenset(), frozenset({"x"}))
+    assert fpga.rate_for(loop) < cpu.rate_for(loop)
+    # degraded classes don't get the II=1 sequential-carry bonus either
+    carry = Loop("ragged_seq", LoopClass.NON_TIGHT, 64, 64, 4.0,
+                 frozenset(), frozenset({"x"}), sequential_carry=True)
+    assert fpga.rate_for(carry) == fpga.rate_for(loop)
+
+
+def test_fingerprint_tracks_degraded_rates():
+    import dataclasses
+
+    fpga = default_registry().get("fpga")
+    tweaked = dataclasses.replace(
+        fpga, degraded_rates=((LoopClass.NON_TIGHT, 2.0e9),)
+    )
+    assert tweaked.fingerprint() != fpga.fingerprint()
+    stripped = dataclasses.replace(fpga, degraded_rates=())
+    assert stripped.fingerprint() != fpga.fingerprint()
 
 
 def test_registry_fingerprint_tracks_constants():
@@ -151,16 +182,76 @@ def test_mixed_k2_matches_binary_bulk_evaluator(app):
         assert mixed(g) == pytest.approx(binary(g), rel=1e-12)
 
 
+def _strict_registry():
+    """The default registry with the fpga's degraded NON_TIGHT fallback
+    stripped: a hard compile error again (exercises the clamp path)."""
+    import dataclasses
+
+    from repro.destinations import profiles
+
+    reg = default_registry()
+    strict_fpga = dataclasses.replace(reg.get("fpga"), degraded_rates=())
+    return profiles.Registry(
+        name="strict",
+        destinations=tuple(
+            strict_fpga if d.name == "fpga" else d for d in reg.destinations
+        ),
+        links=reg.links,
+    )
+
+
 def test_inadmissible_placement_falls_back_to_host():
+    """A class a destination supports through NEITHER rate table (hard
+    compile error) is clamped to the host; degraded classes are NOT."""
     prog = miniapps.nasft_program()
-    e = MixedEvaluator(prog, ("cpu", "gpu", "fpga"))
+    e = MixedEvaluator(prog, ("cpu", "gpu", "fpga"),
+                       registry=_strict_registry())
     genes = tuple(2 for _ in range(prog.gene_length))  # everything -> fpga
     adm = e.admissible(genes)
     for g, loop in zip(adm, prog.offloadable_loops):
         if loop.klass == LoopClass.NON_TIGHT:
-            assert g == 0  # fpga rejects ragged tiles -> host
+            assert g == 0  # strict fpga rejects ragged tiles -> host
         else:
             assert g == 2
+
+
+def test_degraded_placement_stands_and_costs():
+    """With the degraded fallback, a NON_TIGHT loop PLACED on the fpga
+    stays there (no clamping) and prices worse than leaving it home."""
+    prog = miniapps.nasft_program()
+    e = MixedEvaluator(prog, ("cpu", "gpu", "fpga"))
+    genes = tuple(2 for _ in range(prog.gene_length))
+    adm = e.admissible(genes)
+    assert all(g == 2 for g in adm)  # nothing clamped any more
+    # pricing: flipping ONE ragged loop from host to fpga on an
+    # otherwise-host placement must cost more than keeping it home
+    idx = next(i for i, l in enumerate(prog.offloadable_loops)
+               if l.klass == LoopClass.NON_TIGHT)
+    host_only = [0] * prog.gene_length
+    degraded = list(host_only)
+    degraded[idx] = 2
+    assert e(tuple(degraded)) > e(tuple(host_only))
+
+
+def test_ga_avoids_degraded_placement_when_host_cheaper():
+    """The GA prices the painful-but-legal fallback and routes around
+    it: on a tiny program whose only searchable choice is one ragged
+    loop, the best placement keeps it on the host."""
+    # compute-bound: the degraded flop rate (below the host's) decides,
+    # not the fpga's better memory bandwidth
+    vars_ = [Var("x", 1 << 20), Var("y", 1 << 20)]
+    loops = (
+        Loop("ragged", LoopClass.NON_TIGHT, 256, 256, 2000.0,
+             frozenset({"x"}), frozenset({"y"}), parent_seq="it"),
+    )
+    prog = LoopProgram("oneragged", loops, tuple(vars_),
+                       (SeqRegion("it", 10),))
+    e = MixedEvaluator(prog, ("cpu", "fpga"))
+    params = ga.GAParams(population=4, generations=6, seed=0,
+                         timeout_s=1e6, alleles=e.k)
+    res = ga.run_ga(e, prog.gene_length, params)
+    assert e.admissible(res.best_genes) == (0,)  # stays home
+    assert res.best_time_s == pytest.approx(e((0,)))
 
 
 def test_cache_key_is_subset_independent():
@@ -337,9 +428,11 @@ def test_one_cache_object_serves_pools_over_different_subsets():
 
 def test_clamped_duplicates_share_one_measurement():
     """Two genomes whose placements clamp to the same admissible plan
-    canonicalize identically and must be measured once per generation."""
+    canonicalize identically and must be measured once per generation
+    (strict registry: degraded acceptance would keep them distinct)."""
     prog = miniapps.nasft_program()
-    e = MixedEvaluator(prog, ("cpu", "gpu", "fpga"))
+    e = MixedEvaluator(prog, ("cpu", "gpu", "fpga"),
+                       registry=_strict_registry())
     i = next(
         i for i, l in enumerate(prog.offloadable_loops)
         if l.klass == LoopClass.NON_TIGHT
