@@ -13,6 +13,7 @@ import time
 from benchmarks import (
     fig4_convergence,
     fig5_speedup,
+    fig_capacity,
     fig_mixed_destinations,
     kernel_bench,
     roofline_table,
@@ -73,6 +74,9 @@ SECTIONS = {
     "roofline": lambda args: roofline_table.main([]),
     "evalpool": _evalpool_section,
     "mixed": lambda args: fig_mixed_destinations.main(
+        ["--workers", str(args.workers)]
+    ),
+    "capacity": lambda args: fig_capacity.main(
         ["--workers", str(args.workers)]
     ),
 }

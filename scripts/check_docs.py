@@ -1,0 +1,130 @@
+"""Docs reference checker: every internal link and referenced module
+path in ``docs/*.md`` (and ``README.md``) must resolve.
+
+Checked, per file:
+
+- markdown links ``[text](target)`` whose target is not an external URL:
+  the target (fragment stripped) must exist relative to the file;
+- inline-code path references like ``src/repro/destinations/schedule.py``
+  or ``benchmarks/fig_capacity.py`` (root-relative, brace groups like
+  ``src/repro/{models,kernels}`` expanded): every expansion must exist;
+- inline-code dotted module references like ``repro.offload.spec`` or
+  ``benchmarks.run``: must map to a module file. A dotted name whose
+  PREFIX maps to a module is accepted as an attribute reference (e.g.
+  ``repro.destinations.REGISTRIES``) — attributes can't be verified
+  without importing, and importing docs-referenced modules here would
+  drag jax into the checker;
+- ``python -m <module>`` invocations inside fenced code blocks: the
+  module must resolve the same way.
+
+Exit 0 when clean; exit 1 listing every dangling reference (the CI fast
+tier runs this, and tests/test_docs.py runs it as a pytest).
+
+  python scripts/check_docs.py
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+from typing import List
+
+REPO = Path(__file__).resolve().parent.parent
+
+_LINK = re.compile(r"\[[^\]]+\]\(([^)\s]+)\)")
+_FENCE = re.compile(r"```.*?```", re.DOTALL)
+_INLINE = re.compile(r"`([^`\n]+)`")
+_DASH_M = re.compile(r"-m\s+((?:repro|benchmarks|scripts|tests)(?:\.\w+)+"
+                     r"|repro\.\w+|benchmarks\.\w+)")
+_PATHLIKE = re.compile(r"^(?:src|docs|benchmarks|scripts|tests|examples)/"
+                       r"[\w./{},-]*$")
+_MODLIKE = re.compile(r"^(?:repro|benchmarks|scripts|tests)(?:\.\w+)+$")
+
+
+def _expand_braces(token: str) -> List[str]:
+    m = re.search(r"\{([^{}]+)\}", token)
+    if not m:
+        return [token]
+    out = []
+    for alt in m.group(1).split(","):
+        out += _expand_braces(token[:m.start()] + alt + token[m.end():])
+    return out
+
+
+def _module_exists(dotted: str) -> bool:
+    parts = dotted.split(".")
+    base = REPO / "src" if parts[0] == "repro" else REPO
+    stem = base.joinpath(*parts)
+    return stem.with_suffix(".py").is_file() or \
+        (stem / "__init__.py").is_file()
+
+
+def _module_or_attr_exists(dotted: str) -> bool:
+    """True when the dotted name, or any prefix of it, is a module —
+    the remainder is then an (unverifiable) attribute reference."""
+    parts = dotted.split(".")
+    return any(_module_exists(".".join(parts[:i]))
+               for i in range(len(parts), 0, -1))
+
+
+def check_file(path: Path) -> List[str]:
+    text = path.read_text(encoding="utf-8")
+    try:
+        rel = path.relative_to(REPO)
+    except ValueError:  # a file outside the repo (tests use tmp dirs)
+        rel = path
+    errors: List[str] = []
+
+    # markdown links (external schemes skipped)
+    for target in _LINK.findall(text):
+        if "://" in target or target.startswith("mailto:"):
+            continue
+        local = target.split("#", 1)[0]
+        if not local:
+            continue  # same-file fragment
+        if not (path.parent / local).exists():
+            errors.append(f"{rel}: dangling link target {target!r}")
+
+    prose = _FENCE.sub("", text)
+    for token in _INLINE.findall(prose):
+        token = token.strip()
+        if _PATHLIKE.match(token):
+            for variant in _expand_braces(token):
+                if not (REPO / variant.rstrip("/")).exists():
+                    errors.append(
+                        f"{rel}: referenced path {variant!r} does not exist"
+                    )
+        elif _MODLIKE.match(token):
+            if not _module_or_attr_exists(token):
+                errors.append(
+                    f"{rel}: referenced module {token!r} does not resolve"
+                )
+
+    for dotted in _DASH_M.findall(text):
+        if not _module_exists(dotted):
+            errors.append(
+                f"{rel}: `-m {dotted}` does not resolve to a module"
+            )
+    return errors
+
+
+def check_all() -> List[str]:
+    files = sorted((REPO / "docs").glob("*.md")) + [REPO / "README.md"]
+    errors: List[str] = []
+    for f in files:
+        errors += check_file(f)
+    return errors
+
+
+def main() -> int:
+    errors = check_all()
+    for e in errors:
+        print(f"error: {e}", file=sys.stderr)
+    n = len(list((REPO / 'docs').glob('*.md'))) + 1
+    print(f"check_docs: {n} files, "
+          f"{len(errors)} dangling reference(s)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

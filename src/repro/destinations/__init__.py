@@ -12,7 +12,10 @@ core without changing binary-search behavior:
   topology between memories (device->device routes through the host).
 - schedule: N-memory residency tracking (the BULK mode of
   ``core.transfer`` generalized from one device to N), per-link byte and
-  batch accounting priced by the topology.
+  batch accounting priced by the topology. Destinations with a bounded
+  ``memory_bytes`` get capacity-aware residency: furthest-next-use
+  eviction with writeback traffic, and a per-execution streaming
+  fallback for loops whose working set exceeds the device.
 - mixed: :class:`MixedEvaluator` — k-ary genes (destination indices,
   ``core.genome``'s generalized operators with ``GAParams.alleles=k``)
   -> predicted seconds, with a destination-set-independent
@@ -27,13 +30,18 @@ from repro.destinations.mixed import (
     mixed_loop_time,
 )
 from repro.destinations.profiles import (
+    REGISTRIES,
     Destination,
     Link,
     Registry,
+    constrained_registry,
     default_registry,
     fpga_destination,
+    get_registry,
     gpu_destination,
     host_destination,
+    tpu_destination,
+    tpu_host_registry,
 )
 from repro.destinations.schedule import MixedSchedule, build_mixed_schedule
 
@@ -43,14 +51,19 @@ __all__ = [
     "MixedBreakdown",
     "MixedEvaluator",
     "MixedSchedule",
+    "REGISTRIES",
     "Registry",
     "build_mixed_schedule",
+    "constrained_registry",
     "default_registry",
     "fpga_destination",
+    "get_registry",
     "gpu_destination",
     "host_destination",
     "mixed",
     "mixed_loop_time",
     "profiles",
     "schedule",
+    "tpu_destination",
+    "tpu_host_registry",
 ]

@@ -9,11 +9,17 @@ evaluator composes
   class-dependent effective rates + launch latency),
 - the cross-destination transfer schedule
   (:func:`~repro.destinations.schedule.build_mixed_schedule`'s N-memory
-  residency tracking, priced through the registry topology), and
+  residency tracking, priced through the registry topology — including,
+  on destinations with a bounded ``memory_bytes``, the eviction
+  writebacks/re-fetches and per-execution streaming traffic of
+  capacity-aware residency, so the GA learns to split working sets
+  across destinations or retreat to the host), and
 - one-time per-kernel setup costs (the FPGA configuration charge).
 
 Caching: ``fingerprint()`` identifies the program + the WHOLE modeled
-machine (every profile + link constant) but deliberately not the searched
+machine (every profile + link constant, memory capacities included — a
+constrained machine never shares cached times with its unbounded twin)
+but deliberately not the searched
 destination subset, and ``cache_key()`` renders a genome as the
 destination *names* of its admissible placement. Together these make the
 PR-1 persistent JSONL fitness cache shareable across searches over

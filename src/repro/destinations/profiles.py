@@ -31,9 +31,9 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
-from typing import Dict, Optional, Sequence, Tuple
+from typing import Callable, Dict, Optional, Sequence, Tuple
 
-from repro.core.evaluator import QUADRO_P4000, HardwareModel
+from repro.core.evaluator import QUADRO_P4000, TPU_V5E_HOST, HardwareModel
 from repro.core.loopir import Loop, LoopClass
 
 
@@ -61,6 +61,16 @@ class Destination:
     launch_latency: float = 0.0  # per kernel launch
     setup_latency: float = 0.0  # ONE-TIME per distinct loop placed here
     degraded_rates: Tuple[Tuple[LoopClass, float], ...] = ()
+    # device memory capacity in bytes; 0.0 = unbounded (the pre-capacity
+    # model, and the host's backing store). When set, the N-memory
+    # residency schedule evicts (furthest-next-use) once live tensors
+    # exceed it, and a loop whose own working set does not fit streams
+    # from the host instead of becoming resident.
+    memory_bytes: float = 0.0
+
+    @property
+    def bounded(self) -> bool:
+        return self.memory_bytes > 0.0
 
     def accepts(self, klass: LoopClass) -> bool:
         return any(k == klass for k, _ in self.rates) or self.degraded(klass)
@@ -85,11 +95,15 @@ class Destination:
     def fingerprint(self) -> str:
         rates = ",".join(f"{k.value}={r:.6g}" for k, r in self.rates)
         deg = ",".join(f"{k.value}={r:.6g}" for k, r in self.degraded_rates)
+        # the capacity term appears only when bounded, so every
+        # pre-capacity fingerprint (and the persistent fitness caches
+        # keyed on it) stays byte-identical for unbounded profiles
+        mem = f"|mem={self.memory_bytes:.6g}" if self.bounded else ""
         return (
             f"{self.name}[{self.kind}|{rates}|seq={self.sequential_rate:.6g}"
             f"|bw={self.membw:.6g}|launch={self.launch_latency:.6g}"
             f"|setup={self.setup_latency:.6g}"
-            f"{'|deg=' + deg if deg else ''}]"
+            f"{'|deg=' + deg if deg else ''}{mem}]"
         )
 
 
@@ -97,7 +111,8 @@ def host_destination(
     hw: HardwareModel = QUADRO_P4000, name: str = "cpu"
 ) -> Destination:
     """The host CPU as a destination: accepts everything (it is where
-    loops already live), no launch or setup cost."""
+    loops already live), no launch or setup cost. Host RAM is the
+    backing store of the residency protocol and stays unbounded."""
     return Destination(
         name=name,
         kind="host",
@@ -113,7 +128,8 @@ def host_destination(
 
 
 def gpu_destination(
-    hw: HardwareModel = QUADRO_P4000, name: str = "gpu"
+    hw: HardwareModel = QUADRO_P4000, name: str = "gpu",
+    memory_bytes: float = 0.0,
 ) -> Destination:
     """The paper's GPU path as a destination (same class->directive->rate
     mapping as :func:`repro.core.evaluator.loop_time`)."""
@@ -128,10 +144,12 @@ def gpu_destination(
         sequential_rate=hw.accel_flops_vector,
         membw=hw.accel_membw,
         launch_latency=hw.launch_latency,
+        memory_bytes=memory_bytes,
     )
 
 
-def fpga_destination(name: str = "fpga") -> Destination:
+def fpga_destination(name: str = "fpga",
+                     memory_bytes: float = 0.0) -> Destination:
     """FPGA-like profile (HLS flow on a mid-range PCIe card).
 
     - TIGHT nests: clock-limited, ~10x below the GPU's kernels rate.
@@ -165,6 +183,33 @@ def fpga_destination(name: str = "fpga") -> Destination:
         membw=4.3e10,
         launch_latency=1.2e-5,
         setup_latency=1.8e-3,
+        memory_bytes=memory_bytes,
+    )
+
+
+def tpu_destination(
+    hw: HardwareModel = TPU_V5E_HOST, name: str = "tpu0",
+    memory_bytes: float = 0.0,
+) -> Destination:
+    """One TPU-like device fed from host RAM.
+
+    XLA compiles every loop class, but the paper's classification still
+    maps onto the chip: tight nests hit the MXU rate, ragged-tile nests
+    a bit below it, and vectorizable-only / sequential-carry loops run at
+    the VPU lane rate (the chip has no II=1 pipeline trick — a carried
+    dependence serializes it just like on the GPU)."""
+    return Destination(
+        name=name,
+        kind="tpu",
+        rates=(
+            (LoopClass.TIGHT, hw.accel_flops_kernels),
+            (LoopClass.NON_TIGHT, hw.accel_flops_parallel),
+            (LoopClass.VECTOR_ONLY, hw.accel_flops_vector),
+        ),
+        sequential_rate=hw.accel_flops_vector,
+        membw=hw.accel_membw,
+        launch_latency=hw.launch_latency,
+        memory_bytes=memory_bytes,
     )
 
 
@@ -262,3 +307,84 @@ def default_registry(hw: HardwareModel = QUADRO_P4000) -> Registry:
             ("fpga", "cpu", pcie_fpga),
         ),
     )
+
+
+# device capacities of the CONSTRAINED variant of the paper machine: the
+# GPU gets a card so small (45 MB) that even one hetero stencil's working
+# set (three 16.8 MB planes) cannot sit resident — stencils placed there
+# fall into the per-execution streaming fallback — while the FPGA's
+# on-card DDR is slower but spacious. Under these capacities the TRUE
+# optimum (verified exhaustively over all 3^12 placements) moves the
+# stencil pipeline off the GPU: eviction pressure, not compute rate,
+# decides placement (arXiv:2004.08548's small-memory-destination
+# motivation). benchmarks/fig_capacity.py is the divergence demo.
+CONSTRAINED_GPU_BYTES = 4.5e7
+CONSTRAINED_FPGA_BYTES = 1.28e8
+
+
+def constrained_registry(hw: HardwareModel = QUADRO_P4000) -> Registry:
+    """The paper machine with *bounded* device memories: identical rates
+    and links to :func:`default_registry`, but the schedule must now fit
+    live tensors into each card (evicting when they don't)."""
+    base = default_registry(hw)
+    caps = {"gpu": CONSTRAINED_GPU_BYTES, "fpga": CONSTRAINED_FPGA_BYTES}
+    return Registry(
+        name="p4000-constrained",
+        destinations=tuple(
+            dataclasses.replace(d, memory_bytes=caps[d.name])
+            if d.name in caps else d
+            for d in base.destinations
+        ),
+        links=base.links,
+    )
+
+
+# per-device capacity of the TPU-host machine: two accelerator devices
+# whose individual memory is TIGHT (below the hetero working set), so a
+# capacity-aware search learns to SPLIT the working set across devices
+# where the unbounded model would happily pile everything onto one.
+TPU_DEVICE_BYTES = 6.4e7
+
+
+def tpu_host_registry(hw: HardwareModel = TPU_V5E_HOST) -> Registry:
+    """Second machine registry: a TPU host with two small-memory devices.
+
+    Both devices share the host link bandwidth class (each fed from host
+    RAM over its own PCIe-style path); device->device traffic stages
+    through the host. Same search, different machine: on this registry
+    the capacity pressure — not the compute rates — decides placement."""
+    pcie = Link(bw=hw.link_bw, latency=hw.link_latency)
+    return Registry(
+        name="tpu-v5e-host",
+        destinations=(
+            host_destination(hw),
+            tpu_destination(hw, "tpu0", memory_bytes=TPU_DEVICE_BYTES),
+            tpu_destination(hw, "tpu1", memory_bytes=TPU_DEVICE_BYTES),
+        ),
+        links=(
+            ("cpu", "tpu0", pcie),
+            ("tpu0", "cpu", pcie),
+            ("cpu", "tpu1", pcie),
+            ("tpu1", "cpu", pcie),
+        ),
+    )
+
+
+# named machine registries, selectable as ``OffloadSpec.hw`` in mixed
+# mode — capacities are profile constants, so naming the registry in the
+# frozen spec makes them part of the artifact/cache identity.
+# "quadro-p4000" doubles as the HardwareModel name (binary mode) and the
+# unbounded default machine (mixed mode), preserving pre-capacity specs.
+REGISTRIES: Dict[str, Callable[[], Registry]] = {
+    "quadro-p4000": default_registry,
+    "p4000-constrained": constrained_registry,
+    "tpu-v5e-host": tpu_host_registry,
+}
+
+
+def get_registry(name: str) -> Registry:
+    if name not in REGISTRIES:
+        raise ValueError(
+            f"unknown machine registry {name!r}; have {sorted(REGISTRIES)}"
+        )
+    return REGISTRIES[name]()

@@ -22,11 +22,43 @@ Costs are counted per directed link (bytes + batch events) and priced by
 the :class:`~repro.destinations.profiles.Registry`'s topology, so
 asymmetric H2D/D2H links and routed device->device hops fall out of the
 same accounting.
+
+Capacity-aware residency (``Destination.memory_bytes > 0``): residency
+at a bounded destination is no longer free. Before a loop executes on
+``d``, its working set must fit next to what already lives there:
+
+- **eviction** — when live tensors at ``d`` plus the loop's working set
+  exceed the capacity, resident variables the loop does not touch are
+  evicted by *furthest next use* on ``d`` over the linearized event
+  sequence (ties broken by name, so the plan is deterministic). A victim
+  for which ``d`` holds the only valid copy is written back through the
+  topology first (the extra device->host leg the unbounded model never
+  paid); a re-read later re-fetches it (host->device), so thrash shows
+  up as priced transfer traffic.
+- **streaming fallback** — a loop whose own working set exceeds the
+  capacity can never become resident (evicting everything would not
+  help, and must not loop forever). It executes in streaming mode: reads
+  staged host->device and writes returned device->host on EVERY
+  execution, nothing cached. Host RAM is the backing store and is never
+  bounded.
+
+Both effects reuse the existing per-link accounting, so the
+``MixedEvaluator`` prices them with zero extra plumbing. With every
+capacity unset the simulation follows the exact pre-capacity code path:
+schedules (and therefore searches) are byte-identical to the unbounded
+model — regression-tested against a verbatim copy in
+tests/test_capacity.py.
+
+Steady-state caveat: like the unbounded protocol, the weighted replay is
+exact when the residency state is periodic after one region iteration.
+Eviction decisions are deterministic functions of that state, so a
+thrash cycle (evict at loop L, re-fetch at loop M, every iteration) is
+charged once per iteration — exactly what a real run pays.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Mapping, Set, Tuple
+from typing import Dict, List, Mapping, Set, Tuple
 
 from repro.core.loopir import LoopProgram
 from repro.core.transfer import dynamic_events
@@ -41,6 +73,17 @@ class MixedSchedule:
 
     bytes_by_link: Dict[Pair, float] = dataclasses.field(default_factory=dict)
     events_by_link: Dict[Pair, float] = dataclasses.field(default_factory=dict)
+    # capacity-pressure accounting (empty when every capacity is unset):
+    # bytes forced out of each bounded destination (whether or not the
+    # eviction needed a writeback), and bytes streamed per execution by
+    # loops whose working set exceeds their destination's capacity
+    evict_bytes_by_dest: Dict[str, float] = dataclasses.field(
+        default_factory=dict
+    )
+    spill_bytes_by_dest: Dict[str, float] = dataclasses.field(
+        default_factory=dict
+    )
+    oversubscribed: List[str] = dataclasses.field(default_factory=list)
 
     @property
     def total_bytes(self) -> float:
@@ -49,6 +92,14 @@ class MixedSchedule:
     @property
     def total_events(self) -> float:
         return sum(self.events_by_link.values())
+
+    @property
+    def total_evicted_bytes(self) -> float:
+        return sum(self.evict_bytes_by_dest.values())
+
+    @property
+    def total_spilled_bytes(self) -> float:
+        return sum(self.spill_bytes_by_dest.values())
 
     def _add(self, pair: Pair, nbytes: float) -> None:
         self.bytes_by_link[pair] = self.bytes_by_link.get(pair, 0.0) + nbytes
@@ -79,7 +130,20 @@ class MixedSchedule:
                 f"{self.bytes_by_link[pair]/1e6:.1f} MB"
                 f"/{self.events_by_link.get(pair, 0.0):.0f} batches"
             )
-        return ", ".join(rows) if rows else "no transfers"
+        out = ", ".join(rows) if rows else "no transfers"
+        if self.total_evicted_bytes:
+            out += (
+                f"; evicted {self.total_evicted_bytes/1e6:.1f} MB ["
+                + ", ".join(f"{d} {b/1e6:.1f}" for d, b in
+                            sorted(self.evict_bytes_by_dest.items()))
+                + "]"
+            )
+        if self.total_spilled_bytes:
+            out += (
+                f"; streamed {self.total_spilled_bytes/1e6:.1f} MB "
+                f"(oversubscribed: {', '.join(self.oversubscribed)})"
+            )
+        return out
 
 
 def build_mixed_schedule(
@@ -97,17 +161,137 @@ def build_mixed_schedule(
     valid: Dict[str, Set[str]] = {v.name: {host} for v in prog.vars}
     dirty_dev: Dict[str, str] = {}  # var -> device holding the only copy
 
-    for kind, loop, times in dynamic_events(prog, boundaries=False):
+    # bounded device memories; the host's RAM is the backing store and
+    # never participates in eviction
+    caps: Dict[str, float] = {
+        d.name: d.memory_bytes
+        for d in registry.destinations
+        if d.bounded and d.kind != "host"
+    }
+    events = list(dynamic_events(prog, boundaries=False))
+    # placement-independent lookups, hoisted out of the per-genome hot
+    # path (LoopProgram.var rebuilds its name->Var dict on every call)
+    nbytes_of: Dict[str, float] = {v.name: float(v.nbytes)
+                                   for v in prog.vars}
+    touched_of = {l.name: l.touched() for l in prog.loops}
+    ws_bytes: Dict[str, float] = {
+        l.name: sum(nbytes_of[vn] for vn in touched_of[l.name])
+        for l in prog.loops
+    }
+
+    def next_use(vn: str, dest: str, idx: int) -> int:
+        """Index of the next RESIDENT loop event on ``dest`` touching
+        ``vn`` (len(events) = never again = evicted first). Streaming
+        (oversubscribed) loops don't count: they stage from the host on
+        every execution and never read the device copy, so keeping a
+        variable resident for them would protect it for nothing."""
+        cap = caps[dest]
+        for j in range(idx + 1, len(events)):
+            l2 = events[j][1]
+            if l2 is not None and placement[l2.name] == dest \
+                    and vn in touched_of[l2.name] \
+                    and ws_bytes[l2.name] <= cap:
+                return j
+        return len(events)
+
+    def make_room(dest: str, cap: float, need: Set[str], idx: int,
+                  times: float, moved: Dict[Pair, float]) -> None:
+        """Evict furthest-next-use residents until ``need`` fits next to
+        what stays. Terminates: victims come from resident-minus-need,
+        and need alone fits (the caller checked)."""
+        while True:
+            resident = {vn for vn, mems in valid.items() if dest in mems}
+            projected = sum(nbytes_of[vn] for vn in resident | need)
+            if projected <= cap:
+                return
+            candidates = sorted(resident - need)
+            if not candidates:  # need alone fits; defensive only
+                return
+            victim = max(
+                candidates, key=lambda vn: (next_use(vn, dest, idx), vn)
+            )
+            nbytes = nbytes_of[victim]
+            if valid[victim] == {dest}:
+                # only valid copy lives here: write it back before
+                # dropping it (the transfer the unbounded model never
+                # paid); a later re-read re-fetches host->device
+                for hop in registry.route(dest, host):
+                    moved[hop] = moved.get(hop, 0.0) + nbytes
+                    valid[victim].add(hop[1])
+                dirty_dev.pop(victim, None)
+            valid[victim].discard(dest)
+            if dirty_dev.get(victim) == dest:
+                # other memories still hold the copy (a direct
+                # device-device link spread it without staging a host
+                # copy): the end-of-program flush must route from one
+                # that still has it
+                rest = valid[victim]
+                if host in rest:
+                    dirty_dev.pop(victim, None)
+                else:
+                    dirty_dev[victim] = sorted(rest)[0]
+            sched.evict_bytes_by_dest[dest] = (
+                sched.evict_bytes_by_dest.get(dest, 0.0) + nbytes * times
+            )
+
+    def stream(loop, dest: str, times: float,
+               moved: Dict[Pair, float]) -> None:
+        """Working set larger than the device: execute in streaming
+        mode — reads staged in and writes returned home on EVERY
+        execution, no residency established (and none disturbed)."""
+        streamed = 0.0
+        for vn in sorted(loop.reads):
+            nbytes = nbytes_of[vn]
+            if host not in valid[vn]:
+                # materialize a host copy from the current owner. The
+                # ``times`` scaling at the flush is exact under the
+                # first+steady replay: a var owned by a device BEFORE
+                # the region materializes during the first-iteration
+                # event (times=1) and host validity persists into the
+                # steady event; only a writer re-invalidating it every
+                # iteration re-triggers this, and then per-iteration
+                # re-materialization is what a real run pays
+                src = sorted(valid[vn])[0]
+                for hop in registry.route(src, host):
+                    moved[hop] = moved.get(hop, 0.0) + nbytes
+                    valid[vn].add(hop[1])
+            for hop in registry.route(host, dest):
+                moved[hop] = moved.get(hop, 0.0) + nbytes
+            streamed += nbytes
+        for vn in sorted(loop.writes):
+            nbytes = nbytes_of[vn]
+            for hop in registry.route(dest, host):
+                moved[hop] = moved.get(hop, 0.0) + nbytes
+            valid[vn] = {host}
+            dirty_dev.pop(vn, None)
+            streamed += nbytes
+        sched.spill_bytes_by_dest[dest] = (
+            sched.spill_bytes_by_dest.get(dest, 0.0) + streamed * times
+        )
+        if loop.name not in sched.oversubscribed:
+            sched.oversubscribed.append(loop.name)
+
+    for idx, (kind, loop, times) in enumerate(events):
         if kind != "loop":
             continue
         assert loop is not None
         dest = placement[loop.name]
         moved: Dict[Pair, float] = {}
+        cap = caps.get(dest)
+        if cap is not None:
+            need = set(touched_of[loop.name])
+            if ws_bytes[loop.name] > cap:
+                stream(loop, dest, times, moved)
+                for pair, b in moved.items():
+                    sched._add(pair, b * times)
+                    sched._add_event(pair, times)
+                continue
+            make_room(dest, cap, need, idx, times, moved)
         for vn in sorted(loop.reads):
             if dest in valid[vn]:
                 continue
             src = host if host in valid[vn] else sorted(valid[vn])[0]
-            nbytes = prog.var(vn).nbytes
+            nbytes = nbytes_of[vn]
             for hop in registry.route(src, dest):
                 moved[hop] = moved.get(hop, 0.0) + nbytes
                 # a routed transfer stages a valid copy at each hop's end
@@ -127,7 +311,7 @@ def build_mixed_schedule(
     for vn in sorted(dirty_dev):
         if host in valid[vn]:
             continue
-        nbytes = prog.var(vn).nbytes
+        nbytes = nbytes_of[vn]
         for hop in registry.route(dirty_dev[vn], host):
             end_moved[hop] = end_moved.get(hop, 0.0) + nbytes
     for pair, b in end_moved.items():

@@ -240,9 +240,13 @@ class Offloader:
         finally:
             if cache is not None:
                 cache.close()
+        stats_fn = getattr(adapter, "schedule_stats", None)
+        residency = stats_fn(res.best_genes) if stats_fn is not None \
+            else None
         return {
             "best_genes": [int(g) for g in res.best_genes],
             "best_time_s": float(res.best_time_s),
+            **({"residency": residency} if residency is not None else {}),
             "wall_s": float(res.wall_s),
             "evaluations": int(tot.evaluated),
             "cache_hits": int(tot.cache_hits),
@@ -394,6 +398,17 @@ def render_report(result: OffloadResult) -> str:
                     "offloaded")
         for u, d in moved.items():
             rows.append(f"    {u:24s} -> {d}")
+        r = p.get("residency")
+        if r and r.get("capacities"):
+            caps = ", ".join(f"{n} {b/1e6:.0f} MB"
+                             for n, b in sorted(r["capacities"].items()))
+            line = (f"residency: evicted {r['evicted_bytes']/1e6:.1f} MB, "
+                    f"streamed {r['spilled_bytes']/1e6:.1f} MB "
+                    f"under capacities [{caps}]")
+            if r.get("oversubscribed"):
+                line += ("; oversubscribed: "
+                         + ", ".join(r["oversubscribed"]))
+            rows.append(line)
     if "verify" in result.stages:
         v = result.stages["verify"]
         pc = v.payload.get("pcast", {})

@@ -183,7 +183,12 @@ class MiniappMixedAdapter:
 
     def __init__(self, spec: OffloadSpec,
                  hw: Optional[ev.HardwareModel] = None):
-        from repro.destinations import MixedEvaluator, default_registry
+        from repro.destinations import (
+            REGISTRIES,
+            MixedEvaluator,
+            default_registry,
+            get_registry,
+        )
 
         if spec.program not in miniapps.MINIAPPS:
             raise ValueError(
@@ -191,9 +196,41 @@ class MiniappMixedAdapter:
                 f"{sorted(miniapps.MINIAPPS)}"
             )
         self.spec = spec
-        self.hw = resolve_hw(spec, hw)
+        # ``spec.hw`` selects the modeled MACHINE here, not just rate
+        # constants: a named Registry carries per-destination memory
+        # capacities, so freezing the name in the spec freezes them too.
+        # ``self.machine`` is the spec-facing name: for spec-resolved
+        # machines it can be fed straight back into ``OffloadSpec.hw``
+        # (the registry's INTERNAL name may differ, e.g. "p4000-fpga" —
+        # renaming it would move every unbounded cache fingerprint); an
+        # injected HardwareModel (calibration sweeps) is process-local
+        # and not name-addressable, so its artifact says so explicitly
+        # instead of claiming a name the spec would reject.
+        if hw is not None:
+            self.registry = default_registry(hw)
+            self.machine = f"injected:{hw.name}"
+        elif spec.hw in REGISTRIES:
+            self.registry = get_registry(spec.hw)
+            self.machine = spec.hw
+        elif spec.hw in HW_MODELS:
+            self.registry = default_registry(HW_MODELS[spec.hw])
+            self.machine = spec.hw
+        else:
+            raise ValueError(
+                f"unknown machine {spec.hw!r} for mixed mode; have "
+                f"registries {sorted(REGISTRIES)} and hardware models "
+                f"{sorted(HW_MODELS)}"
+            )
+        known = {d.name for d in self.registry.destinations}
+        missing = [n for n in spec.destinations if n not in known]
+        if missing:
+            raise ValueError(
+                f"destinations {missing} do not exist on machine "
+                f"{self.machine!r} (its destinations: {sorted(known)}); "
+                "set OffloadSpec.destinations (CLI: --destinations) to "
+                "match the registry"
+            )
         self.prog: LoopProgram = miniapps.MINIAPPS[spec.program]()
-        self.registry = default_registry(self.hw)
         self._mixed_cls = MixedEvaluator
         self._evaluator = MixedEvaluator(
             self.prog, spec.destinations, registry=self.registry
@@ -227,6 +264,14 @@ class MiniappMixedAdapter:
     def baseline_time(self) -> float:
         return self._evaluator.host_only_time()
 
+    def _capacities(self) -> Dict[str, float]:
+        """Bounded device memories of the searched subset (empty when
+        the whole machine is unbounded)."""
+        return {
+            d.name: float(d.memory_bytes)
+            for d in self._evaluator.dests if d.bounded
+        }
+
     def analyze_payload(self) -> Dict[str, Any]:
         dests = {d.name: d for d in self._evaluator.dests}
         return {
@@ -234,7 +279,9 @@ class MiniappMixedAdapter:
             "description": self.prog.description,
             "gene_length": self.gene_length,
             "n_loops": len(self.prog.loops),
+            "machine": self.machine,
             "destinations": [d.name for d in self._evaluator.dests],
+            "capacities": self._capacities(),
             "loops": [
                 {
                     "name": l.name,
@@ -251,6 +298,27 @@ class MiniappMixedAdapter:
 
     def placement(self, genes: Sequence[int]) -> Dict[str, str]:
         return self._evaluator.placement(genes)
+
+    def schedule_stats(self, genes: Sequence[int]) -> Dict[str, Any]:
+        """Residency pressure of a genome's transfer schedule — recorded
+        in the search payload so the report stage can state eviction and
+        streaming traffic without re-running anything."""
+        bd = self._evaluator.breakdown(genes)
+        s = bd.schedule
+        return {
+            "transfer_s": float(bd.transfer_s),
+            "transfer_bytes": float(s.total_bytes),
+            "evicted_bytes": float(s.total_evicted_bytes),
+            "evict_bytes_by_dest": {
+                k: float(v) for k, v in sorted(s.evict_bytes_by_dest.items())
+            },
+            "spilled_bytes": float(s.total_spilled_bytes),
+            "spill_bytes_by_dest": {
+                k: float(v) for k, v in sorted(s.spill_bytes_by_dest.items())
+            },
+            "oversubscribed": list(s.oversubscribed),
+            "capacities": self._capacities(),
+        }
 
     def pcast_check(self, genes: Sequence[int]
                     ) -> Optional[pcast.PcastReport]:

@@ -69,7 +69,13 @@ class OffloadSpec:
     mode: str = "binary"  # "binary" | "mixed"
     method: str = "proposed"  # binary only: METHODS key
     destinations: Tuple[str, ...] = ("cpu", "gpu", "fpga")  # mixed only
-    hw: str = "quadro-p4000"  # HardwareModel registry name
+    # the modeled machine. Binary/arch: a HardwareModel name (rate
+    # constants). Mixed: a machine Registry name from
+    # ``repro.destinations.REGISTRIES`` — profiles, links AND
+    # per-destination memory capacities, so a capacity-constrained
+    # machine (e.g. "p4000-constrained", "tpu-v5e-host") is frozen into
+    # the spec and its artifact/cache identity.
+    hw: str = "quadro-p4000"
     # -- GA budget ---------------------------------------------------------
     population: Optional[int] = None
     generations: Optional[int] = None

@@ -1,0 +1,427 @@
+"""Capacity-aware residency: per-destination memory limits + eviction.
+
+Covers the PR's hard guarantees:
+
+- with every capacity unset, the N-memory schedule is BYTE-IDENTICAL to
+  the pre-capacity implementation (a verbatim copy of it lives below as
+  the regression oracle) and the unbounded fingerprints don't move, so
+  existing persistent fitness caches stay valid;
+- eviction is deterministic furthest-next-use with writeback traffic
+  priced through the topology;
+- a loop whose working set exceeds its destination's capacity streams
+  per execution (never an infinite evict loop);
+- capacity exactly equal to the working set evicts nothing;
+- the machine-registry knob (``OffloadSpec.hw``) threads capacities
+  through the pipeline, and the capacity-aware GA routes around
+  thrashing on the constrained machine.
+"""
+import dataclasses
+import itertools
+from typing import Dict, Set, Tuple
+
+import numpy as np
+import pytest
+
+from repro.core import ga, miniapps
+from repro.core.loopir import Loop, LoopClass, LoopProgram, SeqRegion, Var
+from repro.core.transfer import dynamic_events
+from repro.destinations import (
+    MixedEvaluator,
+    build_mixed_schedule,
+    constrained_registry,
+    default_registry,
+    get_registry,
+    gpu_destination,
+    host_destination,
+    profiles,
+    tpu_host_registry,
+)
+from repro.destinations.schedule import MixedSchedule
+
+MB = 1 << 20
+
+
+# ---------------------------------------------------------------------------
+# the pre-capacity (PR 3) schedule builder, copied VERBATIM as the
+# unbounded-parity oracle: with every capacity unset, the capacity-aware
+# implementation must reproduce it byte-for-byte
+# ---------------------------------------------------------------------------
+
+
+def _pr3_build_mixed_schedule(prog, placement, registry) -> MixedSchedule:
+    host = registry.host.name
+    sched = MixedSchedule()
+    valid: Dict[str, Set[str]] = {v.name: {host} for v in prog.vars}
+    dirty_dev: Dict[str, str] = {}
+
+    for kind, loop, times in dynamic_events(prog, boundaries=False):
+        if kind != "loop":
+            continue
+        assert loop is not None
+        dest = placement[loop.name]
+        moved: Dict[Tuple[str, str], float] = {}
+        for vn in sorted(loop.reads):
+            if dest in valid[vn]:
+                continue
+            src = host if host in valid[vn] else sorted(valid[vn])[0]
+            nbytes = prog.var(vn).nbytes
+            for hop in registry.route(src, dest):
+                moved[hop] = moved.get(hop, 0.0) + nbytes
+                valid[vn].add(hop[1])
+        for vn in sorted(loop.writes):
+            valid[vn] = {dest}
+            if dest == host:
+                dirty_dev.pop(vn, None)
+            else:
+                dirty_dev[vn] = dest
+        for pair, b in moved.items():
+            sched._add(pair, b * times)
+            sched._add_event(pair, times)
+
+    end_moved: Dict[Tuple[str, str], float] = {}
+    for vn in sorted(dirty_dev):
+        if host in valid[vn]:
+            continue
+        nbytes = prog.var(vn).nbytes
+        for hop in registry.route(dirty_dev[vn], host):
+            end_moved[hop] = end_moved.get(hop, 0.0) + nbytes
+    for pair, b in end_moved.items():
+        sched._add(pair, b)
+        sched._add_event(pair, 1.0)
+    return sched
+
+
+@pytest.mark.parametrize("app", ["himeno", "nasft", "hetero"])
+def test_unbounded_schedule_parity_with_pr3(app):
+    """Every capacity unset: byte-identical per-link totals vs the
+    verbatim pre-capacity builder, over random placements."""
+    prog = miniapps.MINIAPPS[app]()
+    reg = default_registry()
+    names = [d.name for d in reg.destinations]
+    rng = np.random.default_rng(3)
+    for _ in range(25):
+        placement = {
+            l.name: names[int(g)] if l.offloadable else "cpu"
+            for l, g in zip(prog.loops,
+                            rng.integers(0, len(names), len(prog.loops)))
+        }
+        new = build_mixed_schedule(prog, placement, reg)
+        old = _pr3_build_mixed_schedule(prog, placement, reg)
+        assert new.bytes_by_link == old.bytes_by_link
+        assert new.events_by_link == old.events_by_link
+        assert new.total_evicted_bytes == 0.0
+        assert new.total_spilled_bytes == 0.0
+        assert new.seconds(reg) == old.seconds(reg)
+
+
+def test_unbounded_fingerprints_unchanged():
+    """Unbounded profiles fingerprint WITHOUT a capacity term, so the
+    persistent fitness caches keyed before this PR stay valid; bounded
+    profiles (and registries holding them) fingerprint differently."""
+    reg = default_registry()
+    assert all("mem=" not in d.fingerprint() for d in reg.destinations)
+    con = constrained_registry()
+    assert "mem=" in con.get("gpu").fingerprint()
+    assert con.fingerprint() != reg.fingerprint()
+    gpu = reg.get("gpu")
+    bounded = dataclasses.replace(gpu, memory_bytes=1e9)
+    assert bounded.fingerprint() != gpu.fingerprint()
+    # capacity VALUE is covered too
+    assert dataclasses.replace(gpu, memory_bytes=2e9).fingerprint() \
+        != bounded.fingerprint()
+
+
+def test_unbounded_evaluator_parity_search_level():
+    """A default-registry mixed search is unaffected by the capacity
+    machinery: same fitnesses as the PR-3 oracle on every genome the GA
+    visits implies the identical search; spot-check the evaluator."""
+    prog = miniapps.hetero_program()
+    e = MixedEvaluator(prog, ("cpu", "gpu", "fpga"))
+    rng = np.random.default_rng(11)
+    for _ in range(20):
+        g = tuple(int(x) for x in rng.integers(0, 3, prog.gene_length))
+        place = e.placement(g)
+        old = _pr3_build_mixed_schedule(prog, place, e.registry)
+        assert e.breakdown(g).schedule.bytes_by_link == old.bytes_by_link
+
+
+# ---------------------------------------------------------------------------
+# eviction mechanics on hand-built programs
+# ---------------------------------------------------------------------------
+
+
+def _dev_registry(capacity: float, link_bw: float = 7.694e9
+                  ) -> profiles.Registry:
+    """host + one bounded gpu-like device, direct links both ways."""
+    link = profiles.Link(bw=link_bw, latency=2.0e-5)
+    return profiles.Registry(
+        name="captest",
+        destinations=(
+            host_destination(),
+            gpu_destination(name="dev", memory_bytes=capacity),
+        ),
+        links=(("cpu", "dev", link), ("dev", "cpu", link)),
+    )
+
+
+def _prog(loops, vars_, regions=()):
+    return LoopProgram("captest", tuple(loops), tuple(vars_),
+                       tuple(regions))
+
+
+def _L(name, reads, writes, parent=None, klass=LoopClass.TIGHT):
+    return Loop(name, klass, 8, 8, 2.0, frozenset(reads),
+                frozenset(writes), parent_seq=parent)
+
+
+def test_furthest_next_use_eviction_and_writeback():
+    """cap = 2 vars; the victim is the resident var with the furthest
+    next use ON that device, and a sole-copy victim is written back."""
+    vars_ = [Var("a", MB), Var("b", MB), Var("c", MB)]
+    loops = [
+        _L("w_a", [], ["a"]),
+        _L("w_b", [], ["b"]),
+        _L("r_c", ["c"], []),   # overflow: evict a or b
+        _L("r_a", ["a"], []),   # a is used sooner than b -> b evicted
+    ]
+    prog = _prog(loops, vars_)
+    reg = _dev_registry(2 * MB)
+    sched = build_mixed_schedule(
+        prog, {l.name: "dev" for l in loops}, reg
+    )
+    # b (furthest next use: never again) was evicted, written back (sole
+    # copy), and a stayed resident: no re-fetch for a
+    assert sched.evict_bytes_by_dest == {"dev": float(MB)}
+    assert sched.bytes_by_link[("cpu", "dev")] == float(MB)  # c only
+    # b's writeback + end-of-program flush of dirty a
+    assert sched.bytes_by_link[("dev", "cpu")] == float(2 * MB)
+    assert not sched.oversubscribed
+
+    # flip the last reader to b: now a is the furthest-next-use victim
+    loops2 = loops[:3] + [_L("r_b", ["b"], [])]
+    prog2 = _prog(loops2, vars_)
+    sched2 = build_mixed_schedule(
+        prog2, {l.name: "dev" for l in loops2}, reg
+    )
+    assert sched2.evict_bytes_by_dest == {"dev": float(MB)}
+    # a written back on eviction; b never leaves, stays resident; b is
+    # still dirty at the end -> flushed once
+    assert sched2.bytes_by_link[("dev", "cpu")] == float(2 * MB)
+
+
+def test_streaming_loops_do_not_pin_residency():
+    """Furthest-next-use must ignore future touches by oversubscribed
+    (streaming) loops: they stage from the host every execution and
+    never read the device copy, so a var whose only upcoming use is a
+    streaming loop is the furthest-next-use victim."""
+    vars_ = [Var("x", MB), Var("y", MB), Var("mid", MB), Var("big", 3 * MB)]
+    loops = [
+        _L("w_x", [], ["x"]),
+        _L("w_y", [], ["y"]),
+        # overflow: one of x/y must go. x's next touch is only the
+        # STREAMING loop (working set 4 MB > 2 MB cap); y's is resident.
+        _L("r_mid", ["mid"], []),
+        _L("stream_x", ["x", "big"], []),
+        _L("r_y", ["y"], []),
+    ]
+    prog = _prog(loops, vars_)
+    reg = _dev_registry(2 * MB)
+    sched = build_mixed_schedule(prog, {l.name: "dev" for l in loops}, reg)
+    assert sched.oversubscribed == ["stream_x"]
+    # x was evicted (its device copy is useless to stream_x), y stayed
+    # and is never re-fetched: cpu->dev carries mid (1) + stream_x's
+    # staged reads (x + big, 4) and nothing else. Counting the streaming
+    # touch as a use would evict y instead and re-fetch it (6 MB here).
+    assert sched.evict_bytes_by_dest == {"dev": float(MB)}
+    assert sched.spill_bytes_by_dest == {"dev": float(4 * MB)}
+    assert sched.bytes_by_link[("cpu", "dev")] == float(5 * MB)
+
+
+def test_exact_fit_capacity_no_eviction():
+    """Capacity exactly equal to the live working set: zero evictions,
+    and the schedule equals the unbounded one byte-for-byte."""
+    vars_ = [Var("x", MB), Var("y", MB)]
+    loops = [
+        _L("produce", ["x"], ["y"], parent="it"),
+        _L("consume", ["y"], ["y"], parent="it"),
+    ]
+    prog = _prog(loops, vars_, [SeqRegion("it", 4)])
+    placement = {l.name: "dev" for l in loops}
+    tight = build_mixed_schedule(prog, placement, _dev_registry(2 * MB))
+    unbounded = build_mixed_schedule(prog, placement, _dev_registry(0.0))
+    assert tight.total_evicted_bytes == 0.0
+    assert tight.total_spilled_bytes == 0.0
+    assert tight.bytes_by_link == unbounded.bytes_by_link
+    assert tight.events_by_link == unbounded.events_by_link
+
+
+def test_single_tensor_larger_than_capacity_streams():
+    """A working set that can never fit streams per execution — host
+    fallback semantics, priced, and guaranteed to terminate."""
+    vars_ = [Var("big", 8 * MB), Var("out", MB)]
+    loops = [_L("huge", ["big"], ["out"], parent="it")]
+    prog = _prog(loops, vars_, [SeqRegion("it", 5)])
+    reg = _dev_registry(4 * MB)
+    sched = build_mixed_schedule(prog, {"huge": "dev"}, reg)
+    assert sched.oversubscribed == ["huge"]
+    # reads staged in and writes returned on EVERY execution
+    assert sched.bytes_by_link[("cpu", "dev")] == float(5 * 8 * MB)
+    assert sched.bytes_by_link[("dev", "cpu")] == float(5 * MB)
+    assert sched.spill_bytes_by_dest == {"dev": float(5 * 9 * MB)}
+    assert sched.total_evicted_bytes == 0.0
+    # behind a link narrower than the host's own memory bandwidth, the
+    # per-execution streaming prices worse than staying home, and the GA
+    # retreats to the host
+    narrow = _dev_registry(4 * MB, link_bw=2.0e9)
+    e = MixedEvaluator(prog, ("cpu", "dev"), registry=narrow)
+    assert e((1,)) > e((0,))
+    res = ga.run_ga(e, 1, ga.GAParams(population=4, generations=4,
+                                      seed=0, alleles=2))
+    assert e.admissible(res.best_genes) == (0,)
+
+
+def test_thrash_cycle_priced_per_iteration():
+    """Two loops alternately overflowing a 1-var device: the eviction
+    ping-pong recurs every region iteration and is charged that way."""
+    vars_ = [Var("x", MB), Var("y", MB)]
+    loops = [
+        _L("lx", ["x"], ["x"], parent="it"),
+        _L("ly", ["y"], ["y"], parent="it"),
+    ]
+    prog = _prog(loops, vars_, [SeqRegion("it", 5)])
+    reg = _dev_registry(MB)
+    placement = {"lx": "dev", "ly": "dev"}
+    sched = build_mixed_schedule(prog, placement, reg)
+    # first iter: ly evicts x (1). steady iters (x4): lx evicts y, ly
+    # evicts x -> 8. total 9 evictions of 1 MB
+    assert sched.total_evicted_bytes == float(9 * MB)
+    # deterministic: same placement, same schedule
+    again = build_mixed_schedule(prog, placement, reg)
+    assert again.bytes_by_link == sched.bytes_by_link
+    assert again.evict_bytes_by_dest == sched.evict_bytes_by_dest
+    # and strictly more expensive than the unbounded model's view
+    unb = build_mixed_schedule(prog, placement, _dev_registry(0.0))
+    assert sched.seconds(reg) > unb.seconds(reg)
+
+
+# ---------------------------------------------------------------------------
+# machine registries + the spec knob
+# ---------------------------------------------------------------------------
+
+
+def test_get_registry_and_tpu_machine_shape():
+    with pytest.raises(ValueError):
+        get_registry("nonesuch")
+    assert get_registry("quadro-p4000").fingerprint() == \
+        default_registry().fingerprint()
+    tpu = tpu_host_registry()
+    assert tpu.host.kind == "host"
+    devs = [d for d in tpu.destinations if d.kind == "tpu"]
+    assert len(devs) == 2 and all(d.bounded for d in devs)
+    # no direct device-device link: staged through the host
+    assert tpu.route("tpu0", "tpu1") == (("tpu0", "cpu"), ("cpu", "tpu1"))
+
+
+def test_constrained_machine_changes_winning_placement():
+    """The PR's acceptance search: on the constrained machine the GA
+    must beat what the unbounded winner actually achieves there, with a
+    different placement and without the unbounded plan's streaming."""
+    from repro.offload import Offloader, OffloadSpec
+
+    prog = miniapps.hetero_program()
+    con_eval = MixedEvaluator(prog, ("cpu", "gpu", "fpga"),
+                              registry=constrained_registry())
+    # the unbounded search's winner (cold 24x24 seed 0, cf. PR-2/3
+    # figures): stencil pipeline on the GPU
+    g_unb = (1, 0, 1, 1, 1, 2, 2, 2, 2, 2, 2, 0)
+    repriced = con_eval(g_unb)
+    bd_unb = con_eval.breakdown(g_unb).schedule
+    assert bd_unb.total_spilled_bytes > 0  # stencils stream on the 45 MB card
+
+    spec = OffloadSpec(program="hetero", mode="mixed",
+                       hw="p4000-constrained", warm_start=True,
+                       population=24, generations=24)
+    res = Offloader(spec).run(until="search")
+    assert res.best_time_s < repriced
+    assert tuple(res.best_genes) != g_unb
+    r = res.stage("search").payload["residency"]
+    assert r["capacities"] == {
+        "gpu": profiles.CONSTRAINED_GPU_BYTES,
+        "fpga": profiles.CONSTRAINED_FPGA_BYTES,
+    }
+    assert r["spilled_bytes"] == 0.0  # routed around the thrash
+    # the machine name is frozen in the spec -> artifact identity
+    assert res.stage("analyze").payload["machine"] == "p4000-constrained"
+
+
+def test_unknown_machine_name_rejected():
+    from repro.offload import Offloader, OffloadSpec
+
+    spec = OffloadSpec(program="hetero", mode="mixed", hw="nonesuch")
+    with pytest.raises(ValueError, match="unknown machine"):
+        Offloader(spec).adapter
+
+
+def test_destination_registry_mismatch_is_a_spec_error():
+    """hw="tpu-v5e-host" with the default (cpu,gpu,fpga) destinations
+    must fail with a ValueError naming the machine's destinations, not
+    a KeyError from deep inside the evaluator."""
+    from repro.offload import Offloader, OffloadSpec
+
+    spec = OffloadSpec(program="hetero", mode="mixed", hw="tpu-v5e-host")
+    with pytest.raises(ValueError, match="tpu0"):
+        Offloader(spec).adapter
+
+
+def test_eviction_repoints_dirty_owner_over_direct_device_link():
+    """A no-writeback eviction (another device still holds the copy via
+    a direct device-device link, no host copy) must repoint the dirty
+    owner so the end flush routes from a device that still has it."""
+    link = profiles.Link(bw=7.694e9, latency=2.0e-5)
+    fast = profiles.Link(bw=3.0e10, latency=1.0e-6)
+    reg = profiles.Registry(
+        name="dd-link",
+        destinations=(
+            host_destination(),
+            gpu_destination(name="d1", memory_bytes=2 * MB),
+            gpu_destination(name="d2"),
+        ),
+        links=(
+            ("cpu", "d1", link), ("d1", "cpu", link),
+            ("cpu", "d2", link), ("d2", "cpu", link),
+            ("d1", "d2", fast),  # direct: no host staging
+        ),
+    )
+    vars_ = [Var("v", MB), Var("a", MB), Var("b", MB)]
+    loops = [
+        _L("w_v", [], ["v"]),          # d1 writes v: dirty at d1
+        _L("r_v", ["v"], [], ),        # d2 reads v over the direct link
+        _L("w_a", [], ["a"]),          # d1 fills up...
+        _L("w_b", [], ["b"]),          # ...and evicts v (no writeback:
+    ]                                  # d2 still holds it)
+    prog = _prog(loops, vars_)
+    placement = {"w_v": "d1", "r_v": "d2", "w_a": "d1", "w_b": "d1"}
+    sched = build_mixed_schedule(prog, placement, reg)
+    # v was dropped from d1 without a writeback...
+    assert sched.evict_bytes_by_dest == {"d1": float(MB)}
+    # ...and the end flush brings v home from d2 (the surviving owner),
+    # alongside d1's dirty a and b
+    assert sched.bytes_by_link.get(("d2", "cpu")) == float(MB)
+    assert sched.bytes_by_link.get(("d1", "cpu")) == float(2 * MB)
+
+
+def test_report_states_eviction_bytes():
+    """Offload report: the tpu machine's winner accepts bounded thrash
+    and the report stage must state the eviction traffic."""
+    from repro.offload import Offloader, OffloadSpec
+    from repro.offload.pipeline import render_report
+
+    spec = OffloadSpec(program="hetero", mode="mixed", hw="tpu-v5e-host",
+                       destinations=("cpu", "tpu0", "tpu1"),
+                       population=10, generations=8, warm_start=True)
+    res = Offloader(spec).run(until="report")
+    r = res.stage("search").payload["residency"]
+    assert r["evicted_bytes"] > 0
+    text = res.stage("report").payload["text"]
+    assert "evicted" in text and "capacities" in text
+    assert f"{r['evicted_bytes']/1e6:.1f} MB" in text

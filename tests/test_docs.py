@@ -1,0 +1,40 @@
+"""Docs integrity: the suite under docs/ (and README.md) must not
+reference modules, paths or link targets that don't exist — the same
+check the CI fast tier runs via scripts/check_docs.py."""
+import pathlib
+import sys
+
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "scripts"))
+
+import check_docs  # noqa: E402
+
+
+def test_docs_suite_exists():
+    for name in ("architecture.md", "destinations.md", "pipeline.md"):
+        assert (REPO / "docs" / name).is_file(), name
+    # README points into the suite
+    readme = (REPO / "README.md").read_text(encoding="utf-8")
+    assert "docs/pipeline.md" in readme
+    assert "docs/architecture.md" in readme
+
+
+def test_no_dangling_references():
+    errors = check_docs.check_all()
+    assert not errors, "\n".join(errors)
+
+
+def test_checker_catches_dangling_link(tmp_path):
+    """The checker itself must actually fail on a bad reference."""
+    bad = tmp_path / "bad.md"
+    bad.write_text("see [x](does-not-exist.md) and "
+                   "`src/repro/nonesuch.py` and `repro.nonesuch`\n",
+                   encoding="utf-8")
+    errors = check_docs.check_file(bad)
+    # the tmp file is outside the repo; path rendering still works
+    joined = "\n".join(str(e) for e in errors)
+    assert "does-not-exist.md" in joined
+    assert "src/repro/nonesuch.py" in joined
+    assert "repro.nonesuch" in joined
