@@ -14,6 +14,7 @@ from benchmarks import (
     fig4_convergence,
     fig5_speedup,
     fig_capacity,
+    fig_fidelity,
     fig_mixed_destinations,
     kernel_bench,
     roofline_table,
@@ -78,6 +79,11 @@ SECTIONS = {
     ),
     "capacity": lambda args: fig_capacity.main(
         ["--workers", str(args.workers)]
+    ),
+    # calibration probes + calibrated search; --smoke adds the
+    # subprocess measured-search section too (tiny budget)
+    "fidelity": lambda args: fig_fidelity.main(
+        ["--workers", str(args.workers), "--smoke"]
     ),
 }
 

@@ -334,9 +334,12 @@ class EvalPool:
         and ``batch=True``, cache misses go through it in one call (the
         ``CompiledEvaluator`` uses this for its batched AOT-compile path).
     workers:
-        Concurrent measurements for the executor path. 1 = serial
-        in-line execution (no executor; byte-identical to the pre-pool GA
-        loop, and what ``run_ga`` builds when no pool is passed).
+        Concurrent measurements for the executor path. 1 with the thread
+        executor = serial in-line execution (no executor; byte-identical
+        to the pre-pool GA loop, and what ``run_ga`` builds when no pool
+        is passed). A process pool runs through the executor even at
+        workers=1: its subprocess isolation is semantic, not just
+        parallelism.
     executor:
         "thread" (default) or "process". Threads suit the analytic and
         compiled evaluators (numpy/XLA release the GIL); processes suit
@@ -462,7 +465,11 @@ class EvalPool:
                 return [(float(t), False) for t in batch_fn(misses)]
             except Exception:
                 pass  # batch path degraded; fall through to point-wise
-        if self.workers == 1:
+        # the inline shortcut (byte-identical to the pre-pool GA loop)
+        # applies to THREAD pools only: a process pool's subprocess
+        # isolation is the point even at workers=1 — measured-fidelity
+        # searches must never wall-clock inside the driver process
+        if self.workers == 1 and self.executor == "thread":
             out: List[Tuple[float, bool]] = []
             for g in misses:
                 try:

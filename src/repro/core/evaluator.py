@@ -207,16 +207,25 @@ class MiniappEvaluator:
 
 
 class MeasuredEvaluator:
-    """Wall-clocks ``run_fn(genes)``; the GA applies the timeout penalty."""
+    """Wall-clocks ``run_fn(genes)``; the GA applies the timeout penalty.
+
+    Measurements are machine-bound facts: the fingerprint carries the
+    *measurement identity* — run_fn, repeat count, config tag AND the
+    host the clock ran on — so a persistent fitness cache can hold
+    modeled and measured entries side by side without ever serving one
+    host's (or the analytic model's) numbers to another.
+    """
 
     def __init__(self, run_fn: Callable[[Sequence[int]], None],
-                 repeats: int = 1, tag: str = "default"):
+                 repeats: int = 1, tag: str = "default",
+                 host: Optional[str] = None):
         self.run_fn = run_fn
         self.repeats = repeats
         # qualnames don't distinguish lambdas/partials/closures that differ
         # only in captured state; set tag to the app/config identity when
         # sharing a persistent fitness cache
         self.tag = tag
+        self.host = host if host is not None else _local_host()
 
     def __call__(self, genes: Sequence[int]) -> float:
         best = float("inf")
@@ -226,11 +235,28 @@ class MeasuredEvaluator:
             best = min(best, time.perf_counter() - t0)
         return best
 
+    def cache_key(self, genes: Sequence[int]) -> str:
+        """Delegates to the run_fn's canonicalization when it has one
+        (``HimenoRunFn``/``NasftRunFn`` collapse to the genes their
+        implementation actually distinguishes, so equivalent genomes
+        share one real measurement); digit-string otherwise."""
+        ck = getattr(self.run_fn, "cache_key", None)
+        if callable(ck):
+            return str(ck(genes))
+        return "".join(str(int(g)) for g in genes)
+
     def fingerprint(self) -> str:
         name = getattr(self.run_fn, "__qualname__", None) \
             or type(self.run_fn).__name__
         mod = getattr(self.run_fn, "__module__", "")
-        return f"measured:{mod}.{name}:r{self.repeats}:{self.tag}"
+        return (f"measured:{mod}.{name}:r{self.repeats}:{self.tag}"
+                f"@{self.host}")
+
+
+def _local_host() -> str:
+    import platform
+
+    return platform.node() or "localhost"
 
 
 # ---------------------------------------------------------------------------

@@ -20,7 +20,7 @@ the LoopProgram carries the paper-scale sizes for the analytic evaluator.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Sequence, Tuple
+from typing import Any, Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -469,20 +469,20 @@ def _himeno_stencil_np(s: HimenoState, omega: float = 0.8):
     return wrk2, gosa
 
 
-def himeno_run(
-    grid: Tuple[int, int, int] = (17, 17, 33),
-    nn: int = 4,
-    jit_stencil: bool = True,
-    dtype=np.float32,
-):
-    """Run the Jacobi solver; returns (p, gosa). ``jit_stencil`` switches the
-    stencil between the jitted JAX path (offloaded) and numpy (host)."""
-    import jax
-    import jax.numpy as jnp
+# jitted hot-loop implementations, built once and cached at module level:
+# the measured verification environment times the COMPILED kernel's
+# runtime (the paper's measured seconds are post-pgcc-compile runtimes;
+# compile cost is why fitness caching exists, not part of the fitness),
+# and a closure re-jitted per run would re-pay XLA compilation on every
+# single wall-clocked measurement.
+_JITTED: Dict[str, Any] = {}
 
-    s = himeno_init(grid)
 
-    if jit_stencil:
+def _himeno_sweep_jit():
+    fn = _JITTED.get("himeno_sweep")
+    if fn is None:
+        import jax
+
         @jax.jit
         def sweep(p, a, b, c, bnd, wrk1):
             # identical arithmetic through jnp (shape-polymorphic slices)
@@ -508,6 +508,24 @@ def himeno_run(
             wrk2 = p.at[c0, c1, c2].add(0.8 * ss)
             return wrk2, gosa
 
+        _JITTED["himeno_sweep"] = fn = sweep
+    return fn
+
+
+def himeno_run(
+    grid: Tuple[int, int, int] = (17, 17, 33),
+    nn: int = 4,
+    jit_stencil: bool = True,
+    dtype=np.float32,
+):
+    """Run the Jacobi solver; returns (p, gosa). ``jit_stencil`` switches the
+    stencil between the jitted JAX path (offloaded) and numpy (host)."""
+    import jax.numpy as jnp
+
+    s = himeno_init(grid)
+
+    if jit_stencil:
+        sweep = _himeno_sweep_jit()
         pj = jnp.asarray(s.p, dtype)
         aj = jnp.asarray(s.a, dtype)
         bj = jnp.asarray(s.b, dtype)
@@ -527,6 +545,21 @@ def himeno_run(
     return s.p, gosa
 
 
+def _nasft_step_jit():
+    fn = _JITTED.get("nasft_step")
+    if fn is None:
+        import jax
+        import jax.numpy as jnp
+
+        @jax.jit
+        def step(ut, k2, t):
+            twiddle = jnp.exp(-4.0 * jnp.pi**2 * 1e-2 * t * k2)
+            return jnp.fft.ifftn(ut * twiddle)
+
+        _JITTED["nasft_step"] = fn = step
+    return fn
+
+
 def nasft_run(
     grid: Tuple[int, int, int] = (16, 16, 16),
     niter: int = 2,
@@ -536,7 +569,6 @@ def nasft_run(
 
     Returns the per-iteration checksums (complex64 ndarray, shape (niter,)).
     ``jit_fft`` switches the FFT+evolve between jitted JAX and numpy."""
-    import jax
     import jax.numpy as jnp
 
     nx, ny, nz = grid
@@ -555,15 +587,12 @@ def nasft_run(
         return complex(flat.sum() / u1.size)
 
     if jit_fft:
-        @jax.jit
-        def step(ut, t):
-            twiddle = jnp.exp(-4.0 * jnp.pi**2 * alpha * t * jnp.asarray(k2))
-            return jnp.fft.ifftn(ut * twiddle)
-
+        step = _nasft_step_jit()
         ut = jnp.fft.fftn(jnp.asarray(u0))
+        k2j = jnp.asarray(k2)
         sums = []
         for it in range(1, niter + 1):
-            u1 = step(ut, float(it))
+            u1 = step(ut, k2j, jnp.float32(it))
             sums.append(checksum(np.asarray(u1)))
         return np.asarray(sums, np.complex64)
 
@@ -619,6 +648,14 @@ class HimenoRunFn:
         hot = _hot_gene(himeno_program, "jacobi_stencil")
         himeno_run(self.grid, self.nn, jit_stencil=bool(genes[hot]))
 
+    def cache_key(self, genes: Sequence[int]) -> str:
+        """Canonical measurement key: the implementation only branches on
+        the hot-loop gene, so genomes equal there run the *same*
+        computation and share one wall-clock measurement (generation
+        dedup + the persistent cache both collapse on this)."""
+        hot = _hot_gene(himeno_program, "jacobi_stencil")
+        return f"hot={int(bool(genes[hot]))}"
+
     @property
     def tag(self) -> str:
         """Cache tag for MeasuredEvaluator (captures the config)."""
@@ -635,6 +672,11 @@ class NasftRunFn:
     def __call__(self, genes: Sequence[int]) -> None:
         hot = _hot_gene(nasft_program, "evolve")
         nasft_run(self.grid, self.niter, jit_fft=bool(genes[hot]))
+
+    def cache_key(self, genes: Sequence[int]) -> str:
+        """See :meth:`HimenoRunFn.cache_key`."""
+        hot = _hot_gene(nasft_program, "evolve")
+        return f"hot={int(bool(genes[hot]))}"
 
     @property
     def tag(self) -> str:

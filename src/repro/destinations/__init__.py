@@ -34,12 +34,14 @@ from repro.destinations.profiles import (
     Destination,
     Link,
     Registry,
+    calibrated_registry,
     constrained_registry,
     default_registry,
     fpga_destination,
     get_registry,
     gpu_destination,
     host_destination,
+    register_registry,
     tpu_destination,
     tpu_host_registry,
 )
@@ -54,6 +56,7 @@ __all__ = [
     "REGISTRIES",
     "Registry",
     "build_mixed_schedule",
+    "calibrated_registry",
     "constrained_registry",
     "default_registry",
     "fpga_destination",
@@ -63,6 +66,7 @@ __all__ = [
     "mixed",
     "mixed_loop_time",
     "profiles",
+    "register_registry",
     "schedule",
     "tpu_destination",
     "tpu_host_registry",

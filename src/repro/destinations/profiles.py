@@ -381,6 +381,10 @@ REGISTRIES: Dict[str, Callable[[], Registry]] = {
     "tpu-v5e-host": tpu_host_registry,
 }
 
+# the modeled machines above are frozen; register_registry refuses to
+# shadow them (calibrations land under their own entry names)
+_BUILTIN_REGISTRIES = frozenset(REGISTRIES)
+
 
 def get_registry(name: str) -> Registry:
     if name not in REGISTRIES:
@@ -388,3 +392,58 @@ def get_registry(name: str) -> Registry:
             f"unknown machine registry {name!r}; have {sorted(REGISTRIES)}"
         )
     return REGISTRIES[name]()
+
+
+def register_registry(name: str, factory: Callable[[], Registry],
+                      replace: bool = False) -> None:
+    """Add a machine registry at runtime — the plumbing calibrated
+    machines (``repro.offload calibrate``) use to become selectable by
+    name via ``OffloadSpec.hw``. The three built-in machines cannot be
+    replaced: a calibration lands under its own entry name, and every
+    constant is fingerprinted anyway, so replacing a built-in could only
+    ever silently shadow the modeled machine."""
+    if name in _BUILTIN_REGISTRIES:
+        raise ValueError(f"cannot replace built-in registry {name!r}")
+    if name in REGISTRIES and not replace:
+        raise ValueError(
+            f"registry {name!r} already registered; pass replace=True "
+            "to re-register (e.g. after a re-calibration)"
+        )
+    REGISTRIES[name] = factory
+
+
+def calibrated_registry(base: Registry, hw: HardwareModel,
+                        name: str) -> Registry:
+    """``base`` with its host and GPU/TPU-kind destinations rebuilt from
+    the *measured* constants of a calibrated ``HardwareModel``.
+
+    Per-destination memory capacities and every destination the
+    calibration could not observe (FPGA-kind: this container has no HLS
+    flow to time — a real one would contribute its own probe set) are
+    carried over from the base unchanged, so a calibrated
+    ``p4000-constrained`` stays capacity-constrained. Links that touch a
+    calibrated device take the fitted ``link_bw``/``link_latency``;
+    uncalibrated links keep the base constants. ``Registry.fingerprint``
+    digests all of it, so a re-calibration under the same entry name
+    still invalidates caches (by design)."""
+    factories = {"gpu": gpu_destination, "tpu": tpu_destination}
+    dests = []
+    calibrated_names = set()
+    for d in base.destinations:
+        if d.kind == "host":
+            dests.append(host_destination(hw, name=d.name))
+            calibrated_names.add(d.name)
+        elif d.kind in factories:
+            dests.append(factories[d.kind](
+                hw, name=d.name, memory_bytes=d.memory_bytes
+            ))
+            calibrated_names.add(d.name)
+        else:
+            dests.append(d)  # e.g. FPGA: stays at the modeled constants
+    cal_link = Link(bw=hw.link_bw, latency=hw.link_latency)
+    links = tuple(
+        (a, b, cal_link)
+        if (a in calibrated_names and b in calibrated_names) else (a, b, l)
+        for a, b, l in base.links
+    )
+    return Registry(name=name, destinations=tuple(dests), links=links)

@@ -14,7 +14,10 @@ This package is that sequence as a reusable surface:
   and resumes (completed stages skip; interrupted searches resume warm
   through the persistent JSONL fitness cache);
 - ``python -m repro.offload`` — the CLI (``run`` / ``resume`` /
-  ``report``, ``--smoke`` for CI).
+  ``report`` / ``calibrate``, ``--smoke`` for CI);
+- :mod:`repro.offload.calibrate` — measured model calibration behind
+  ``OffloadSpec.fidelity`` (imported lazily: modeled pipelines never
+  touch it).
 
 Every example, benchmark and calibration script drives this facade; with
 spec defaults its searches are byte-identical to the pre-redesign
@@ -27,9 +30,10 @@ from repro.offload.result import (
     StageFailure,
     StageRecord,
 )
-from repro.offload.spec import METHODS, MODES, OffloadSpec
+from repro.offload.spec import FIDELITIES, METHODS, MODES, OffloadSpec
 
 __all__ = [
+    "FIDELITIES",
     "METHODS",
     "MODES",
     "Offloader",

@@ -3,17 +3,26 @@
   python -m repro.offload run --program himeno --mode binary
   python -m repro.offload run --program hetero --mode mixed \\
       --destinations cpu,gpu,fpga --warm-start --cache /tmp/hetero.jsonl
+  python -m repro.offload run --program himeno --fidelity measured \\
+      --workers 2 --population 4 --generations 2
   python -m repro.offload run --program himeno --smoke   # CI gate
+  python -m repro.offload calibrate --base quadro-p4000 \\
+      --out p4000.calib.json
+  python -m repro.offload run --program hetero --mode mixed \\
+      --calibration p4000.calib.json --hw quadro-p4000-calibrated
   python -m repro.offload resume --artifact himeno-binary.offload.json
   python -m repro.offload report --artifact himeno-binary.offload.json
 
-``run`` executes every stage (analyze -> seed -> search -> verify ->
-report) and saves the artifact after each one; a failed stage (e.g. the
-PCAST result-difference check) exits non-zero with the failure recorded
-in the artifact. ``resume`` continues a saved artifact, skipping its
-completed stages — an interrupted *search* additionally resumes warm
+``run`` executes every stage (calibrate -> analyze -> seed -> search ->
+verify -> report) and saves the artifact after each one; a failed stage
+(e.g. the PCAST result-difference check) exits non-zero with the failure
+recorded in the artifact. ``resume`` continues a saved artifact, skipping
+its completed stages — an interrupted *search* additionally resumes warm
 through the spec's persistent fitness cache. ``report`` pretty-prints an
-artifact (partial ones included) without running anything.
+artifact (partial ones included) without running anything. ``calibrate``
+measures the probe set, fits the machine constants, and saves a
+``.calib.json`` that ``--calibration`` installs in later invocations
+(docs/fidelity.md).
 """
 from __future__ import annotations
 
@@ -24,6 +33,7 @@ from typing import List, Optional
 from repro.offload.pipeline import Offloader, render_report
 from repro.offload.result import STAGES, OffloadResult, StageFailure
 from repro.offload.spec import (
+    FIDELITIES,
     METHODS,
     MIXED_SMOKE_BUDGET,
     MODES,
@@ -37,19 +47,26 @@ def _default_artifact(spec: OffloadSpec) -> str:
 
 
 def _spec_from_args(args: argparse.Namespace) -> OffloadSpec:
+    # --executor defaults per fidelity: measured wall-clocks in spawned
+    # subprocesses (spec validation enforces it), everything else threads
+    executor = args.executor or (
+        "process" if args.fidelity == "measured" else "thread"
+    )
     kw = dict(
         program=args.program,
         mode=args.mode,
         method=args.method,
         destinations=tuple(args.destinations.split(",")),
         hw=args.hw,
+        fidelity=args.fidelity,
+        repeats=args.repeats,
         population=args.population,
         generations=args.generations,
         seed=args.seed,
         timeout_s=args.timeout_s,
         warm_start=args.warm_start,
         workers=args.workers,
-        executor=args.executor,
+        executor=executor,
         cache=args.cache,
         rel_tol=args.rel_tol,
         abs_tol=args.abs_tol,
@@ -85,6 +102,18 @@ def main(argv: Optional[List[str]] = None) -> int:
     run.add_argument("--destinations", default="cpu,gpu,fpga",
                      help="mixed-mode destination subset (host first)")
     run.add_argument("--hw", default="quadro-p4000")
+    run.add_argument("--fidelity", choices=list(FIDELITIES),
+                     default="modeled",
+                     help="how candidates are priced: the analytic model "
+                          "(modeled), real subprocess wall clocks "
+                          "(measured), or the model under constants "
+                          "fitted to this machine (calibrated)")
+    run.add_argument("--repeats", type=int, default=1,
+                     help="measurement repeats per individual/probe "
+                          "(measured/calibrated fidelity)")
+    run.add_argument("--calibration", default=None, metavar="PATH",
+                     help="install a saved .calib.json before building "
+                          "the spec, so --hw can name its entry")
     run.add_argument("--population", type=int, default=None)
     run.add_argument("--generations", type=int, default=None)
     run.add_argument("--seed", type=int, default=0)
@@ -94,7 +123,9 @@ def main(argv: Optional[List[str]] = None) -> int:
                           "single-destination bests")
     run.add_argument("--workers", type=int, default=1)
     run.add_argument("--executor", choices=("thread", "process"),
-                     default="thread")
+                     default=None,
+                     help="measurement executor (default: thread; "
+                          "process under --fidelity measured)")
     run.add_argument("--cache", default=None, metavar="PATH",
                      help="persistent JSONL fitness cache (resume rides "
                           "on it)")
@@ -113,12 +144,64 @@ def main(argv: Optional[List[str]] = None) -> int:
     res = sub.add_parser("resume", help="continue a saved artifact")
     res.add_argument("--artifact", required=True, metavar="PATH")
     res.add_argument("--until", choices=STAGES, default="report")
+    res.add_argument("--calibration", default=None, metavar="PATH",
+                     help="install a saved .calib.json first (needed when "
+                          "the artifact's spec names a calibrated machine "
+                          "that is not embedded in the artifact itself)")
     res.add_argument("--quiet", action="store_true")
 
     rep = sub.add_parser("report", help="pretty-print a saved artifact")
     rep.add_argument("--artifact", required=True, metavar="PATH")
 
+    cal = sub.add_parser(
+        "calibrate",
+        help="measure the probe set, fit machine constants, save a "
+             ".calib.json entry usable via --calibration/--hw",
+    )
+    cal.add_argument("--base", default="quadro-p4000",
+                     help="base machine registry to calibrate")
+    cal.add_argument("--name", default=None,
+                     help="entry name (default <base>-calibrated)")
+    cal.add_argument("--repeats", type=int, default=3,
+                     help="wall-clock repeats per probe (min kept; >1 "
+                          "excludes one-time jit compiles)")
+    cal.add_argument("--out", default=None, metavar="PATH",
+                     help="where to save (default <name>.calib.json)")
+
     args = ap.parse_args(argv)
+
+    if args.cmd == "calibrate":
+        from repro.offload import calibrate as cal_mod
+
+        name = args.name or f"{args.base}-calibrated"
+        try:
+            cal_res = cal_mod.run_calibration(
+                base=args.base, repeats=args.repeats, name=name
+            )
+        except ValueError as e:
+            ap.error(str(e))
+        out = args.out or f"{name}.calib.json"
+        cal_res.save(out)
+        r = cal_res.residuals()
+        print(f"calibrated {cal_res.base} -> {cal_res.name} "
+              f"(hw {cal_res.hw_name}) on {cal_res.host}")
+        for p in cal_res.probes:
+            print(f"  {p['app']:7s} {p['dest']:5s} "
+                  f"{'x'.join(map(str, p['grid'])):>10s} x{p['steps']}: "
+                  f"measured {p['measured_s']:.4g}s fitted "
+                  f"{p['fitted_s']:.4g}s ({p['rel_err']:+.1%})")
+        print(f"residuals: max |{r['max_abs_rel']:.1%}| mean "
+              f"|{r['mean_abs_rel']:.1%}| over {r['n']} probes; "
+              f"pinned: {', '.join(cal_res.pinned)}")
+        print(f"saved: {out}")
+        print(f"use it:  python -m repro.offload run ... "
+              f"--calibration {out} --hw {cal_res.name}")
+        return 0
+
+    if getattr(args, "calibration", None):
+        from repro.offload import calibrate as cal_mod
+
+        cal_mod.load_and_install(args.calibration)
 
     if args.cmd == "report":
         art = OffloadResult.load(args.artifact)

@@ -2,9 +2,14 @@
 
 Stages (in order, each recorded into the :class:`OffloadResult` artifact):
 
+- **calibrate** — fidelity="calibrated" only: measure the designed probe
+  set on this machine, fit per-destination constants by least squares
+  (:mod:`repro.offload.calibrate`), install the resulting named machine
+  entry, and record the fit residuals. Every other fidelity records the
+  stage as not applicable.
 - **analyze** — load the program, assign directives per loop/unit (the
   paper's Clang-parse + pgcc-classification step), price the all-host
-  baseline.
+  baseline (a REAL wall-clocked run under fidelity="measured").
 - **seed** — build the initial-population seeds. With
   ``spec.warm_start`` (mixed mode), runs one quick binary GA per
   non-host destination and re-expresses each single-destination best in
@@ -33,6 +38,7 @@ same RNG stream.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, Callable, Dict, Optional, Sequence
 
 from repro.core import ga
@@ -77,6 +83,11 @@ class Offloader:
         Injected :class:`HardwareModel` overriding the ``spec.hw``
         registry lookup (calibration sweeps score unregistered
         candidate models).
+    calibration:
+        A pre-built ``CalibrationResult`` for fidelity="calibrated"
+        specs: the calibrate stage records and installs it instead of
+        re-measuring the probe set (calibrate once, search many apps).
+        Its ``base`` must match ``spec.hw``.
     on_generation:
         Optional per-generation callback forwarded to ``run_ga``.
     """
@@ -88,6 +99,7 @@ class Offloader:
         artifact_path: Optional[str] = None,
         evaluator: Optional[Callable[[Sequence[int]], float]] = None,
         hw: Optional[HardwareModel] = None,
+        calibration=None,
         on_generation: Optional[Callable[[ga.GenerationStats], None]] = None,
     ):
         if artifact is not None and artifact.spec != spec:
@@ -101,6 +113,15 @@ class Offloader:
         self._hw = hw
         self._on_generation = on_generation
         self._adapter = None  # built lazily (adapters may import jax-side)
+        # CalibrationResult (fidelity="calibrated" only); an injected one
+        # is recorded by the calibrate stage in place of a fresh sweep
+        if calibration is not None and calibration.base != spec.hw:
+            raise ValueError(
+                f"injected calibration was fitted for base "
+                f"{calibration.base!r}, spec.hw is {spec.hw!r}"
+            )
+        self._injected_cal = calibration
+        self._cal = None
 
     @classmethod
     def resume(
@@ -121,8 +142,45 @@ class Offloader:
     @property
     def adapter(self):
         if self._adapter is None:
-            self._adapter = programs.resolve_adapter(self.spec, self._hw)
+            self._adapter = programs.resolve_adapter(
+                self._effective_spec(), self._hw
+            )
         return self._adapter
+
+    def _effective_spec(self) -> OffloadSpec:
+        """The spec the adapters see. fidelity="calibrated" resolves to a
+        MODELED spec pointing at the installed calibrated machine entry —
+        downstream stages price candidates exactly like any other modeled
+        search, just under the fitted constants (whose fingerprints carry
+        the calibration digest). The artifact keeps the original spec."""
+        if self.spec.fidelity != "calibrated":
+            return self.spec
+        cal = self._ensure_calibration()
+        return dataclasses.replace(
+            self.spec, fidelity="modeled", hw=cal.name
+        )
+
+    def _ensure_calibration(self):
+        """The CalibrationResult for this run, installed in-process.
+        After the calibrate stage it is cached; on resume it is rebuilt
+        from the stage payload (same constants -> same digest -> same
+        fingerprints, so resumed searches keep their cache hits) without
+        re-measuring anything."""
+        if self._cal is not None:
+            return self._cal
+        from repro.offload import calibrate
+
+        if not self.result.completed("calibrate"):
+            raise StageFailure(
+                "calibrate",
+                "fidelity='calibrated' needs the calibrate stage to run "
+                "before any adapter-facing stage (run() orders this)",
+            )
+        payload = self.result.stage("calibrate").payload
+        cal = calibrate.CalibrationResult.from_dict(payload["calibration"])
+        calibrate.install(cal, replace=True)
+        self._cal = cal
+        return cal
 
     def _search_evaluator(self):
         return self._evaluator if self._evaluator is not None \
@@ -168,6 +226,31 @@ class Offloader:
             raise StageFailure(name, error)
 
     # -- stages ------------------------------------------------------------
+
+    def _stage_calibrate(self) -> Dict[str, Any]:
+        if self.spec.fidelity != "calibrated":
+            return {"fidelity": self.spec.fidelity, "applicable": False}
+        from repro.offload import calibrate
+
+        cal = self._injected_cal
+        if cal is None:
+            cal = calibrate.run_calibration(
+                base=self.spec.hw, repeats=self.spec.repeats
+            )
+        calibrate.install(cal, replace=True)
+        self._cal = cal
+        return {
+            "fidelity": "calibrated",
+            "applicable": True,
+            "provided": self._injected_cal is not None,
+            "base": cal.base,
+            "entry": cal.name,
+            "hw_name": cal.hw_name,
+            "host": cal.host,
+            "pinned": list(cal.pinned),
+            "residuals": cal.residuals(),
+            "calibration": cal.to_dict(),
+        }
 
     def _stage_analyze(self) -> Dict[str, Any]:
         payload = self.adapter.analyze_payload()
@@ -335,6 +418,9 @@ class Offloader:
                 "n_leaves": len(report.leaves),
                 "detail": report.describe(),
             }
+        fid = self._fidelity_section(best, best_t)
+        if fid is not None:
+            payload["fidelity"] = fid
         if not consistent:
             payload["_error"] = (
                 f"winner re-measurement drifted: "
@@ -348,6 +434,121 @@ class Offloader:
             )
         return payload
 
+    def _fidelity_section(self, best, best_t: float) -> Optional[Dict]:
+        """Predicted-vs-measured honesty check of the winner (and the
+        all-host baseline), one row per destination involved. Modeled
+        runs skip it (nothing was measured, and the pipeline must stay
+        byte-identical to the pre-fidelity artifacts); programs without
+        a runnable implementation record why.
+
+        - fidelity="measured": predicted comes from the analytic model
+          of the spec's machine AT THE MEASURED SCALE; measured numbers
+          are the search's own wall clocks (no extra runs).
+        - fidelity="calibrated": predicted comes from the calibrated
+          model at the measured scale; the winner and baseline are
+          freshly wall-clocked in-process.
+        """
+        from repro.core import evaluator as ev
+        from repro.core import transfer as tr
+        from repro.offload.spec import MEASURED_PROGRAMS
+
+        spec = self.spec
+        if spec.fidelity == "modeled":
+            return None
+        if spec.program not in MEASURED_PROGRAMS:
+            return {
+                "level": spec.fidelity,
+                "skipped": "no runnable implementation to measure "
+                           "(calibration residuals still recorded in the "
+                           "calibrate stage)",
+            }
+        adapter = self.adapter
+        n = adapter.gene_length
+        zeros = (0,) * n
+        run_fn = programs.MEASURED_RUN_FNS[spec.program]()
+
+        if spec.fidelity == "measured":
+            model = adapter.model_evaluator()
+            reference = f"model:{adapter.hw.name}"
+            meas_host = float(
+                self.result.stage("analyze").payload["baseline_s"]
+            )
+            meas_win = float(best_t)
+        else:  # calibrated
+            scale_prog = programs.measured_scale_program(spec.program)
+            eff = self._effective_spec()
+            if spec.mode == "mixed":
+                from repro.destinations import MixedEvaluator, get_registry
+
+                model = MixedEvaluator(scale_prog, eff.destinations,
+                                       registry=get_registry(eff.hw))
+            else:
+                method = programs.METHODS[eff.method]
+                model = ev.MiniappEvaluator(
+                    scale_prog,
+                    tr.TransferMode(method["transfer"]),
+                    staged=method["staged"],
+                    hw=programs.resolve_hw(eff),
+                    kernels_only=method["kernels_only"],
+                )
+            reference = f"calibrated:{self._ensure_calibration().hw_name}"
+            m = ev.MeasuredEvaluator(run_fn, repeats=spec.repeats,
+                                     tag=run_fn.tag)
+            meas_host = float(m(zeros))
+            meas_win = float(m(best))
+
+        # the runnable implementations realize exactly ONE placement
+        # switch (the hot loop on the generic jit/accelerator path), so
+        # the winner row compares the model and the clock on the
+        # REALIZABLE projection of the winner — anything else would
+        # price loops (or backends, for k-ary genomes: the run_fn jits
+        # for ANY nonzero allele) the measurement cannot move
+        hot = programs.hot_gene_index(spec.program)
+        hot_name = programs.RUNNABLE[spec.program][0]
+        host = "cpu"
+        hot_offloaded = adapter.placement(best).get(hot_name, host) != host
+        if spec.mode == "mixed":
+            dests = adapter.build_evaluator().dests
+            accel = next((i for i, d in enumerate(dests)
+                          if d.kind in ("gpu", "tpu")), None)
+        else:
+            dests, accel = None, 1
+
+        def row(dest: str, label: str, pred: float, meas: float) -> Dict:
+            return {
+                "destination": dest,
+                "placement": label,
+                "predicted_s": float(pred),
+                "measured_s": float(meas),
+                "ratio": float(pred / meas) if meas > 0 else float("inf"),
+            }
+
+        rows = [row(host, "all-host", model(zeros), meas_host)]
+        if hot_offloaded and accel is None:
+            # e.g. a cpu+fpga subset: the jit path the clock runs has no
+            # counterpart destination in the model — say so, don't fake it
+            rows.append({
+                "destination": "?",
+                "placement": "winner:hot-loop",
+                "skipped": "searched subset has no gpu/tpu-kind "
+                           "destination matching the jit measurement",
+            })
+        else:
+            allele = accel if hot_offloaded else 0
+            realized = tuple(
+                allele if i == hot else 0 for i in range(n)
+            )
+            win_dest = dests[allele].name if dests is not None \
+                else ("gpu" if allele else host)
+            rows.append(row(win_dest, "winner:hot-loop",
+                            model(realized), meas_win))
+        return {
+            "level": spec.fidelity,
+            "scale": run_fn.tag,
+            "reference": reference,
+            "rows": rows,
+        }
+
     def _stage_report(self) -> Dict[str, Any]:
         return {"text": render_report(self.result)}
 
@@ -360,8 +561,20 @@ def render_report(result: OffloadResult) -> str:
     tag = spec.method if spec.mode == "binary" and not spec.is_arch \
         else "+".join(spec.destinations) if spec.mode == "mixed" \
         else "plan-search"
+    if spec.fidelity != "modeled":
+        tag += f"/{spec.fidelity}"
     rows = [f"== repro.offload report: {spec.program} [{spec.mode}/{tag}] =="]
 
+    if result.completed("calibrate"):
+        c = result.stage("calibrate").payload
+        if c.get("applicable"):
+            r = c["residuals"]
+            rows.append(
+                f"calibrate: {c['base']} -> {c['entry']} on {c['host']} "
+                f"({r['n']} probes, |resid| max {r['max_abs_rel']:.1%} / "
+                f"mean {r['mean_abs_rel']:.1%}; "
+                f"pinned: {', '.join(c['pinned'])})"
+            )
     if result.completed("analyze"):
         a = result.stage("analyze").payload
         rows.append(
@@ -425,4 +638,21 @@ def render_report(result: OffloadResult) -> str:
         re_txt = "re-measurement skipped" if re_t is None \
             else f"re-measured {re_t:.4g}s"
         rows.append(f"verify: {ok}; {re_txt}; {pc_txt}")
+        fid = v.payload.get("fidelity")
+        if fid and "skipped" in fid:
+            rows.append(f"fidelity[{fid['level']}]: skipped "
+                        f"({fid['skipped']})")
+        elif fid:
+            parts = ", ".join(
+                f"{r['destination']}/{r['placement']} "
+                f"{r['ratio']:.2f}x ({r['predicted_s']:.4g}s vs "
+                f"{r['measured_s']:.4g}s)"
+                if "ratio" in r else
+                f"{r['placement']} skipped ({r['skipped']})"
+                for r in fid["rows"]
+            )
+            rows.append(
+                f"fidelity[{fid['level']} @ {fid['scale']}]: "
+                f"predicted/measured {parts}"
+            )
     return "\n".join(rows)

@@ -30,7 +30,7 @@ from repro.core import miniapps
 from repro.core import pcast
 from repro.core import transfer as tr
 from repro.core.loopir import LoopClass, LoopProgram
-from repro.offload.spec import METHODS, OffloadSpec
+from repro.offload.spec import MEASURED_PROGRAMS, METHODS, OffloadSpec
 
 # HardwareModel registry (spec.hw); Offloader may inject an unregistered
 # candidate model (calibration sweeps) via its ``hw=`` override.
@@ -38,6 +38,25 @@ HW_MODELS: Dict[str, ev.HardwareModel] = {
     ev.QUADRO_P4000.name: ev.QUADRO_P4000,
     ev.TPU_V5E_HOST.name: ev.TPU_V5E_HOST,
 }
+
+_BUILTIN_HW_MODELS = frozenset(HW_MODELS)
+
+
+def register_hw_model(hw: ev.HardwareModel, name: Optional[str] = None,
+                      replace: bool = False) -> None:
+    """Make a :class:`HardwareModel` selectable as ``OffloadSpec.hw`` in
+    binary/arch mode (calibrated machines register here under their
+    entry name; the model's OWN name carries the constants digest that
+    keys fitness-cache fingerprints). Built-ins cannot be replaced."""
+    name = name or hw.name
+    if name in _BUILTIN_HW_MODELS:
+        raise ValueError(f"cannot replace built-in hardware model {name!r}")
+    if name in HW_MODELS and not replace:
+        raise ValueError(
+            f"hardware model {name!r} already registered; pass "
+            "replace=True to re-register"
+        )
+    HW_MODELS[name] = hw
 
 # paper directive per pgcc-style loop class (§3.3)
 DIRECTIVES: Dict[LoopClass, str] = {
@@ -89,6 +108,33 @@ RUNNABLE: Dict[str, Tuple[str, Callable[[bool], Tuple[Any, Any]]]] = {
     "himeno": ("jacobi_stencil", _himeno_pair),
     "nasft": ("evolve", _nasft_pair),
 }
+
+# measured-fidelity plumbing: the picklable run_fn class per runnable
+# program, and the LoopProgram at the RUN FN's (scaled-down) config — the
+# scale real measurements and their model predictions must both use, so
+# predicted-vs-measured ratios compare like with like (docs/fidelity.md).
+MEASURED_RUN_FNS: Dict[str, Callable[[], Any]] = {
+    "himeno": miniapps.HimenoRunFn,
+    "nasft": miniapps.NasftRunFn,
+}
+
+assert set(MEASURED_RUN_FNS) == set(RUNNABLE) == set(MEASURED_PROGRAMS), \
+    "spec.MEASURED_PROGRAMS must list exactly the runnable miniapps"
+
+
+def measured_scale_program(name: str) -> LoopProgram:
+    """The program's LoopProgram at its runnable (measured) scale."""
+    fn = MEASURED_RUN_FNS[name]()
+    if name == "himeno":
+        return miniapps.himeno_program(grid=fn.grid, nn=fn.nn)
+    return miniapps.nasft_program(grid=fn.grid, niter=fn.niter)
+
+
+def hot_gene_index(name: str) -> int:
+    """Gene index of the runnable implementation's hot loop — the one
+    gene the measured path actually realizes (docs/fidelity.md)."""
+    prog = miniapps.MINIAPPS[name]()
+    return miniapps._gene_index(prog, RUNNABLE[name][0])
 
 
 # ---------------------------------------------------------------------------
@@ -169,6 +215,107 @@ class MiniappBinaryAdapter:
         if hot is None:
             return None
         loop_name, pair = hot
+        offloaded = self.placement(genes)[loop_name] != "cpu"
+        ref, off = pair(offloaded)
+        return pcast.compare(ref, off, rel_tol=self.spec.rel_tol,
+                             abs_tol=self.spec.abs_tol)
+
+
+class MiniappMeasuredAdapter:
+    """Measured fidelity: the paper's REAL measurement loop — every
+    candidate wall-clocked by running the miniapp's implementation, not
+    priced by the analytic model.
+
+    The genome still indexes the paper-scale LoopProgram (gene length
+    13/65), but fitness comes from ``MeasuredEvaluator`` wall-clocking
+    the picklable run_fn at its scaled-down config inside the spec's
+    ``executor="process"`` EvalPool (spawn context — subprocess
+    isolation is what makes the clock honest). The run_fn's
+    ``cache_key`` collapses genomes to the genes the implementation
+    actually distinguishes (the hot loop), so equivalent placements
+    share one real measurement exactly as the paper's §5.2 cache
+    intends. ``model_evaluator()`` exposes the analytic model AT THE
+    MEASURED SCALE for the verify stage's predicted-vs-measured
+    fidelity section.
+    """
+
+    kind = "miniapp-measured"
+    deterministic = False  # wall clocks jitter; re-measure can't be exact
+
+    def __init__(self, spec: OffloadSpec,
+                 hw: Optional[ev.HardwareModel] = None):
+        assert spec.fidelity == "measured", spec.fidelity
+        self.spec = spec
+        self.hw = resolve_hw(spec, hw)  # the MODEL the fidelity section
+        # compares against; never used to price candidates
+        self.prog: LoopProgram = miniapps.MINIAPPS[spec.program]()
+        self.run_fn = MEASURED_RUN_FNS[spec.program]()
+        self.method = METHODS[spec.method]
+
+    @property
+    def gene_length(self) -> int:
+        return self.prog.gene_length
+
+    @property
+    def alleles(self) -> int:
+        return 2
+
+    def build_evaluator(self) -> ev.MeasuredEvaluator:
+        return ev.MeasuredEvaluator(
+            self.run_fn, repeats=self.spec.repeats, tag=self.run_fn.tag
+        )
+
+    def model_evaluator(self) -> ev.MiniappEvaluator:
+        """The analytic model at the measured scale, under the spec's
+        method configuration and modeled machine."""
+        return ev.MiniappEvaluator(
+            measured_scale_program(self.spec.program),
+            tr.TransferMode(self.method["transfer"]),
+            staged=self.method["staged"],
+            hw=self.hw,
+            kernels_only=self.method["kernels_only"],
+        )
+
+    def baseline_time(self) -> float:
+        # a REAL all-host measurement (in-process: the analyze stage is
+        # not pooled, and the number is compared against other wall
+        # clocks, not against model output)
+        return float(self.build_evaluator()((0,) * self.gene_length))
+
+    def analyze_payload(self) -> Dict[str, Any]:
+        e = self.build_evaluator()
+        return {
+            "program": self.prog.name,
+            "description": self.prog.description,
+            "gene_length": self.gene_length,
+            "n_loops": len(self.prog.loops),
+            "fidelity": "measured",
+            "measured_scale": self.run_fn.tag,
+            "host": e.host,
+            "repeats": self.spec.repeats,
+            "loops": [
+                {
+                    "name": l.name,
+                    "class": l.klass.value,
+                    "directive": DIRECTIVES[l.klass],
+                    "offloadable": l.offloadable,
+                }
+                for l in self.prog.loops
+            ],
+        }
+
+    def placement(self, genes: Sequence[int]) -> Dict[str, str]:
+        # raw gene -> path mapping: measured fidelity has no admissibility
+        # model to mask through — the implementation either jits the loop
+        # or it doesn't
+        out = {l.name: "cpu" for l in self.prog.loops}
+        for g, l in zip(genes, self.prog.offloadable_loops):
+            out[l.name] = "gpu" if int(g) else "cpu"
+        return out
+
+    def pcast_check(self, genes: Sequence[int]
+                    ) -> Optional[pcast.PcastReport]:
+        loop_name, pair = RUNNABLE[self.prog.name]
         offloaded = self.placement(genes)[loop_name] != "cpu"
         ref, off = pair(offloaded)
         return pcast.compare(ref, off, rel_tol=self.spec.rel_tol,
@@ -437,6 +584,8 @@ def resolve_adapter(spec: OffloadSpec,
                     hw: Optional[ev.HardwareModel] = None):
     if spec.is_arch:
         return ArchAdapter(spec, hw)
+    if spec.fidelity == "measured":
+        return MiniappMeasuredAdapter(spec, hw)
     if spec.mode == "mixed":
         return MiniappMixedAdapter(spec, hw)
     return MiniappBinaryAdapter(spec, hw)

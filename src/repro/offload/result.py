@@ -24,8 +24,14 @@ from repro.offload.spec import OffloadSpec
 
 _ARTIFACT_VERSION = 1
 
-# pipeline order; Offloader runs exactly these, in this order
-STAGES: Tuple[str, ...] = ("analyze", "seed", "search", "verify", "report")
+# pipeline order; Offloader runs exactly these, in this order. The
+# calibrate stage comes FIRST: with spec.fidelity="calibrated" it
+# measures + fits the machine the analyze baseline and the search both
+# price against; for every other fidelity it records itself as not
+# applicable (so artifacts stay uniform and resume stays positional).
+STAGES: Tuple[str, ...] = (
+    "calibrate", "analyze", "seed", "search", "verify", "report"
+)
 
 
 class StageFailure(RuntimeError):
@@ -119,6 +125,14 @@ class OffloadResult:
             return self.baseline_time_s / self.best_time_s
         return None
 
+    @property
+    def calibration(self) -> Optional[Dict[str, Any]]:
+        """The embedded calibration dict (constants, probes, residuals)
+        when this artifact ran at fidelity='calibrated'; None otherwise."""
+        if not self.completed("calibrate"):
+            return None
+        return self.stage("calibrate").payload.get("calibration")
+
     # -- persistence --------------------------------------------------------
 
     def to_dict(self) -> Dict[str, Any]:
@@ -136,14 +150,7 @@ class OffloadResult:
         if path is None:
             return None
         self.path = path
-        d = os.path.dirname(os.path.abspath(path))
-        os.makedirs(d, exist_ok=True)
-        tmp = f"{path}.tmp.{os.getpid()}"
-        with open(tmp, "w", encoding="utf-8") as fh:
-            json.dump(self.to_dict(), fh, indent=1, sort_keys=True)
-            fh.write("\n")
-        os.replace(tmp, path)
-        return path
+        return atomic_json_save(path, self.to_dict())
 
     @classmethod
     def load(cls, path: str) -> "OffloadResult":
@@ -174,6 +181,20 @@ class OffloadResult:
             else:
                 rows.append(f"  {s:8s} -")
         return "\n".join(rows)
+
+
+def atomic_json_save(path: str, obj: Dict[str, Any]) -> str:
+    """Write ``obj`` as pretty JSON via tmp-file + rename, so readers
+    never observe a torn file (shared by OffloadResult and
+    CalibrationResult saves)."""
+    d = os.path.dirname(os.path.abspath(path))
+    os.makedirs(d, exist_ok=True)
+    tmp = f"{path}.tmp.{os.getpid()}"
+    with open(tmp, "w", encoding="utf-8") as fh:
+        json.dump(obj, fh, indent=1, sort_keys=True)
+        fh.write("\n")
+    os.replace(tmp, path)
+    return path
 
 
 def timed(fn, *args, **kw):

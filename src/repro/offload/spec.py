@@ -43,6 +43,20 @@ METHODS: Dict[str, Dict[str, Any]] = {
 
 MODES = ("binary", "mixed")
 
+# How candidates are priced, end to end (docs/fidelity.md):
+# - "modeled"    — the analytic HardwareModel/MixedEvaluator (default;
+#                  byte-identical to every pre-fidelity search);
+# - "measured"   — real wall-clocked subprocess runs of the runnable
+#                  miniapps through MeasuredEvaluator + a process EvalPool;
+# - "calibrated" — a calibrate stage measures a designed probe set, fits
+#                  per-destination constants by least squares, and the
+#                  search runs the analytic model under the fitted machine.
+FIDELITIES = ("modeled", "measured", "calibrated")
+
+# programs with a runnable implementation the measured/calibrated levels
+# can wall-clock; programs.RUNNABLE must stay in sync (asserted there)
+MEASURED_PROGRAMS = ("himeno", "nasft")
+
 # mixed-mode GA budgets (population, generations): the k=3 space needs
 # ~24x24 to find the mixed optimum on every seed; the smoke budget is
 # the CI-sized trim that still shows the win on the default seed. The
@@ -76,6 +90,18 @@ class OffloadSpec:
     # machine (e.g. "p4000-constrained", "tpu-v5e-host") is frozen into
     # the spec and its artifact/cache identity.
     hw: str = "quadro-p4000"
+    # -- fidelity: how candidates are priced (FIDELITIES) ------------------
+    # "measured" requires a runnable program (MEASURED_PROGRAMS), binary
+    # mode, and executor="process" (real subprocess measurements);
+    # "calibrated" requires ``hw`` to name a known base registry — both
+    # validated here at spec time, never mid-search.
+    fidelity: str = "modeled"
+    # measurement repeats per individual/probe (measured + calibrated).
+    # The minimum over repeats is kept, so with the default of 2 the
+    # first repeat absorbs any one-time jit compile (a fresh spawn
+    # worker re-jits) and the clock bills the COMPILED kernel; set 1
+    # only if you explicitly want cold-start costs in the fitness.
+    repeats: int = 2
     # -- GA budget ---------------------------------------------------------
     population: Optional[int] = None
     generations: Optional[int] = None
@@ -113,6 +139,49 @@ class OffloadSpec:
                              f"{self.executor!r}")
         if self.warm_start and self.mode != "mixed":
             raise ValueError("warm_start is a mixed-mode (k-ary) feature")
+        if self.fidelity not in FIDELITIES:
+            raise ValueError(
+                f"fidelity must be one of {FIDELITIES}: {self.fidelity!r}"
+            )
+        if self.repeats < 1:
+            raise ValueError(f"repeats must be >= 1: {self.repeats}")
+        if self.fidelity == "measured":
+            if self.program not in MEASURED_PROGRAMS:
+                raise ValueError(
+                    f"fidelity='measured' needs a program with a runnable "
+                    f"implementation {MEASURED_PROGRAMS}; {self.program!r} "
+                    "has none to wall-clock"
+                )
+            if self.mode != "binary":
+                raise ValueError(
+                    "fidelity='measured' is a binary-mode feature (the "
+                    "runnable implementations switch one CPU/accelerator "
+                    "path); use mode='binary'"
+                )
+            if self.executor != "process":
+                raise ValueError(
+                    "fidelity='measured' wall-clocks real subprocess runs; "
+                    "set executor='process' (the CLI --fidelity measured "
+                    "does this for you)"
+                )
+        if self.fidelity == "calibrated":
+            if self.is_arch:
+                raise ValueError(
+                    "fidelity='calibrated' calibrates a machine registry; "
+                    "arch:<name> searches use the analytic plan evaluator "
+                    "and have no machine to calibrate"
+                )
+            # lazy import: destinations never imports repro.offload, so
+            # this cannot cycle — and it keeps spec importable without
+            # dragging the destinations subsystem in for modeled specs
+            from repro.destinations import REGISTRIES
+
+            if self.hw not in REGISTRIES:
+                raise ValueError(
+                    f"fidelity='calibrated' needs a known base registry "
+                    f"to calibrate; unknown hw {self.hw!r} (have "
+                    f"{sorted(REGISTRIES)})"
+                )
         # normalize list -> tuple for from_dict round-trips
         object.__setattr__(self, "destinations", tuple(self.destinations))
 
