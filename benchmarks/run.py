@@ -3,6 +3,7 @@
   PYTHONPATH=src python -m benchmarks.run            # everything fast
   PYTHONPATH=src python -m benchmarks.run --section fig5 --ablate
   PYTHONPATH=src python -m benchmarks.run --section evalpool --workers 8
+  PYTHONPATH=src python -m benchmarks.run --section sweep
 """
 from __future__ import annotations
 
@@ -20,6 +21,19 @@ from benchmarks import (
     roofline_table,
     transfer_ablation,
 )
+
+
+def _forward(args, *, workers=True, cache=True, smoke=True) -> list:
+    """Render the shared flags (benchmarks.common.add_common_args) back
+    into an argv for a section that accepts them."""
+    argv = []
+    if workers:
+        argv += ["--workers", str(args.workers)]
+    if cache and args.cache:
+        argv += ["--cache", args.cache]
+    if smoke and args.smoke:
+        argv += ["--smoke"]
+    return argv
 
 
 def _evalpool_section(args) -> None:
@@ -59,32 +73,55 @@ def _evalpool_section(args) -> None:
               f"{tot.cache_hits},{tot.hit_rate:.3f},{r.best_time_s:.4f}")
 
 
+def _sweep_section(args) -> None:
+    """The model-zoo sweep driver (docs/benchmarks.md) at the smoke
+    budget: the fixed 3-cell matrix through the full pipeline, one
+    trajectory point + leaderboard into a scratch file — the committed
+    BENCH_sweep.json is never touched from here."""
+    import tempfile
+
+    from repro.offload.__main__ import main as offload_main
+
+    with tempfile.TemporaryDirectory(prefix="bench-sweep-") as tmp:
+        argv = ["sweep", "--smoke",
+                "--dir", f"{tmp}/cells",
+                "--out", f"{tmp}/BENCH_sweep.json",
+                ] + _forward(args, smoke=False)
+        rc = offload_main(argv)
+        if rc:
+            raise SystemExit(rc)
+
+
 SECTIONS = {
     "fig4": lambda args: fig4_convergence.main(
-        ["--workers", str(args.workers)]
+        _forward(args, smoke=False)
     ),
     "fig5": lambda args: fig5_speedup.main(
         (["--ablate"] if args.ablate else [])
-        + ["--workers", str(args.workers)]
+        + _forward(args, smoke=False)
     ),
-    "transfer": lambda args: transfer_ablation.main([]),
+    "transfer": lambda args: transfer_ablation.main(
+        _forward(args, workers=False, cache=False)
+    ),
     "kernels": lambda args: kernel_bench.main(
         (["--check-kernel"] if args.check_kernel else [])
-        + ["--workers", str(args.workers)]
+        + _forward(args, cache=False, smoke=False)
     ),
     "roofline": lambda args: roofline_table.main([]),
     "evalpool": _evalpool_section,
     "mixed": lambda args: fig_mixed_destinations.main(
-        ["--workers", str(args.workers)]
+        _forward(args)
     ),
     "capacity": lambda args: fig_capacity.main(
-        ["--workers", str(args.workers)]
+        _forward(args)
     ),
     # calibration probes + calibrated search; --smoke adds the
-    # subprocess measured-search section too (tiny budget)
+    # subprocess measured-search section too (tiny budget), so the
+    # driver always passes it
     "fidelity": lambda args: fig_fidelity.main(
-        ["--workers", str(args.workers), "--smoke"]
+        _forward(args, smoke=False) + ["--smoke"]
     ),
+    "sweep": _sweep_section,
 }
 
 
@@ -95,7 +132,7 @@ def main() -> None:
     ap.add_argument("--section", choices=list(SECTIONS), default=None)
     ap.add_argument("--ablate", action="store_true")
     ap.add_argument("--check-kernel", action="store_true")
-    add_common_args(ap, seed=False, cache=False, smoke=False)
+    add_common_args(ap, seed=False)
     args = ap.parse_args()
 
     picks = [args.section] if args.section else list(SECTIONS)

@@ -1,5 +1,6 @@
 """Docs reference checker: every internal link and referenced module
-path in ``docs/*.md`` (and ``README.md``) must resolve.
+path in ``docs/*.md`` (plus ``README.md`` and ``ROADMAP.md``) must
+resolve.
 
 Checked, per file:
 
@@ -108,10 +109,17 @@ def check_file(path: Path) -> List[str]:
     return errors
 
 
+def checked_files() -> List[Path]:
+    """Every file the checker covers: the docs suite, the README, and
+    the ROADMAP (whose references to repo paths drift just as easily)."""
+    return sorted((REPO / "docs").glob("*.md")) + [
+        REPO / "README.md", REPO / "ROADMAP.md"
+    ]
+
+
 def check_all() -> List[str]:
-    files = sorted((REPO / "docs").glob("*.md")) + [REPO / "README.md"]
     errors: List[str] = []
-    for f in files:
+    for f in checked_files():
         errors += check_file(f)
     return errors
 
@@ -120,8 +128,7 @@ def main() -> int:
     errors = check_all()
     for e in errors:
         print(f"error: {e}", file=sys.stderr)
-    n = len(list((REPO / 'docs').glob('*.md'))) + 1
-    print(f"check_docs: {n} files, "
+    print(f"check_docs: {len(checked_files())} files, "
           f"{len(errors)} dangling reference(s)")
     return 1 if errors else 0
 

@@ -14,7 +14,12 @@ This package is that sequence as a reusable surface:
   and resumes (completed stages skip; interrupted searches resume warm
   through the persistent JSONL fitness cache);
 - ``python -m repro.offload`` — the CLI (``run`` / ``resume`` /
-  ``report`` / ``calibrate``, ``--smoke`` for CI);
+  ``report`` / ``calibrate`` / ``sweep``, ``--smoke`` for CI; every
+  verb's ``--help`` epilog documents its exit codes);
+- :mod:`repro.offload.sweep` — the model-zoo sweep driver: the
+  programs x machines x modes matrix run resumably cell-by-cell, the
+  append-only ``BENCH_sweep.json`` trajectory, the leaderboard and the
+  regression flagger (docs/benchmarks.md);
 - :mod:`repro.offload.calibrate` — measured model calibration behind
   ``OffloadSpec.fidelity`` (imported lazily: modeled pipelines never
   touch it).

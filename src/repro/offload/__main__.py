@@ -12,6 +12,8 @@
       --calibration p4000.calib.json --hw quadro-p4000-calibrated
   python -m repro.offload resume --artifact himeno-binary.offload.json
   python -m repro.offload report --artifact himeno-binary.offload.json
+  python -m repro.offload sweep --smoke            # CI fast tier
+  python -m repro.offload sweep --workers 4        # the full model zoo
 
 ``run`` executes every stage (calibrate -> analyze -> seed -> search ->
 verify -> report) and saves the artifact after each one; a failed stage
@@ -22,13 +24,20 @@ through the spec's persistent fitness cache. ``report`` pretty-prints an
 artifact (partial ones included) without running anything. ``calibrate``
 measures the probe set, fits the machine constants, and saves a
 ``.calib.json`` that ``--calibration`` installs in later invocations
-(docs/fidelity.md).
+(docs/fidelity.md). ``sweep`` runs the programs x machines x modes
+matrix cell-by-cell (resumable), appends one trajectory point to
+``BENCH_sweep.json``, renders the leaderboard, and flags regressions
+against the previous point (docs/benchmarks.md).
+
+Every verb documents its exit codes in its ``--help`` epilog; the table
+itself lives in :data:`EXIT_CODES` (asserted in tests/test_docs.py).
+Argparse usage errors exit 2 on every verb, as usual.
 """
 from __future__ import annotations
 
 import argparse
 import sys
-from typing import List, Optional
+from typing import Dict, List, Optional, Tuple
 
 from repro.offload.pipeline import Offloader, render_report
 from repro.offload.result import STAGES, OffloadResult, StageFailure
@@ -39,6 +48,56 @@ from repro.offload.spec import (
     MODES,
     OffloadSpec,
 )
+
+
+# exit codes per verb, rendered into each subparser's --help epilog and
+# asserted verbatim in tests/test_docs.py. 2 is argparse's own usage-
+# error code on every verb; the sweep's regression flag deliberately
+# takes a code of its own (3) so nightly CI can tell "a cell's pipeline
+# broke" (1) from "everything ran but got slower" (3).
+EXIT_CODES: Dict[str, Tuple[Tuple[int, str], ...]] = {
+    "run": (
+        (0, "every stage up to --until completed"),
+        (1, "a stage failed (PCAST mismatch, verify drift, ...); the "
+            "failure is recorded in the artifact"),
+        (2, "usage error"),
+    ),
+    "resume": (
+        (0, "every remaining stage up to --until completed"),
+        (1, "a stage failed; the failure is recorded in the artifact"),
+        (2, "usage error"),
+    ),
+    "report": (
+        (0, "artifact loaded and printed (partial artifacts included)"),
+        (2, "usage error"),
+    ),
+    "calibrate": (
+        (0, "probe set measured, constants fitted, .calib.json saved"),
+        (2, "usage error (incl. an unknown --base registry)"),
+    ),
+    "sweep": (
+        (0, "every cell ran (or resumed complete); no regression vs the "
+            "previous trajectory point"),
+        (1, "at least one cell's pipeline failed (its error is recorded "
+            "in the trajectory point; remaining cells still ran)"),
+        (2, "usage error"),
+        (3, "all cells ok, but at least one regressed beyond --tolerance "
+            "vs the previous trajectory point"),
+    ),
+}
+
+
+def _epilog(verb: str) -> str:
+    rows = "\n".join(f"  {code}  {what}" for code, what in EXIT_CODES[verb])
+    return f"exit codes:\n{rows}"
+
+
+def _add_verb(sub, name: str, help_: str) -> argparse.ArgumentParser:
+    """A subparser whose --help epilog is the verb's exit-code table."""
+    return sub.add_parser(
+        name, help=help_, epilog=_epilog(name),
+        formatter_class=argparse.RawDescriptionHelpFormatter,
+    )
 
 
 def _default_artifact(spec: OffloadSpec) -> str:
@@ -84,6 +143,62 @@ def _progress(stats) -> None:
           f"(hit-rate {stats.hit_rate:.0%})")
 
 
+def _cmd_sweep(ap: argparse.ArgumentParser, args: argparse.Namespace) -> int:
+    """The sweep verb: enumerate the matrix, run it resumably, append a
+    trajectory point, print the leaderboard, exit by EXIT_CODES."""
+    from repro.offload import sweep as sw
+
+    out = args.out or sw.DEFAULT_TRAJECTORY
+    tol = args.tolerance if args.tolerance is not None \
+        else sw.DEFAULT_REL_TOLERANCE
+    if args.report_only:
+        try:
+            traj = sw.Trajectory.load(out)
+        except ValueError as e:
+            ap.error(str(e))
+        print(sw.render_leaderboard(traj, tol))
+        if traj.last is None:
+            return 0
+        return 3 if sw.flag_regressions(traj.previous, traj.last, tol) \
+            else 0
+
+    if args.smoke:
+        cells, skipped = sw.smoke_matrix()
+    else:
+        try:
+            cells, skipped = sw.enumerate_matrix(
+                args.programs.split(",") if args.programs else None,
+                args.machines.split(",") if args.machines else None,
+                tuple(args.modes.split(",")),
+            )
+        except ValueError as e:
+            ap.error(str(e))
+    if not cells:
+        ap.error("matrix has no feasible cells (every combination was "
+                 "skipped); widen --programs/--machines/--modes")
+    sweep_dir = args.sweep_dir or (
+        sw.DEFAULT_SMOKE_DIR if args.smoke else sw.DEFAULT_SWEEP_DIR
+    )
+    point = sw.run_sweep(
+        cells, skipped, out_dir=sweep_dir, cache=args.cache,
+        workers=args.workers, smoke=args.smoke, seed=args.seed,
+        label=args.label, progress=None if args.quiet else print,
+    )
+    if args.no_append:
+        traj = sw.Trajectory.load(out)
+        prev = traj.last  # the point was not persisted; compare to last
+        traj.points.append(point)  # in-memory, for the leaderboard only
+    else:
+        traj = sw.append_point(out, point)
+        prev = traj.previous
+    print(sw.render_leaderboard(traj, tol))
+    if not args.no_append:
+        print(f"trajectory: {out} ({len(traj.points)} points)")
+    if point["totals"]["n_failed"]:
+        return 1
+    return 3 if sw.flag_regressions(prev, point, tol) else 0
+
+
 def main(argv: Optional[List[str]] = None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.offload",
@@ -92,7 +207,7 @@ def main(argv: Optional[List[str]] = None) -> int:
     )
     sub = ap.add_subparsers(dest="cmd", required=True)
 
-    run = sub.add_parser("run", help="run the pipeline for a new spec")
+    run = _add_verb(sub, "run", "run the pipeline for a new spec")
     run.add_argument("--program", required=True,
                      help="miniapp name (himeno/nasft/hetero) or "
                           "arch:<name>")
@@ -141,7 +256,7 @@ def main(argv: Optional[List[str]] = None) -> int:
                      help="CI-sized budget (small GA)")
     run.add_argument("--quiet", action="store_true")
 
-    res = sub.add_parser("resume", help="continue a saved artifact")
+    res = _add_verb(sub, "resume", "continue a saved artifact")
     res.add_argument("--artifact", required=True, metavar="PATH")
     res.add_argument("--until", choices=STAGES, default="report")
     res.add_argument("--calibration", default=None, metavar="PATH",
@@ -150,13 +265,13 @@ def main(argv: Optional[List[str]] = None) -> int:
                           "that is not embedded in the artifact itself)")
     res.add_argument("--quiet", action="store_true")
 
-    rep = sub.add_parser("report", help="pretty-print a saved artifact")
+    rep = _add_verb(sub, "report", "pretty-print a saved artifact")
     rep.add_argument("--artifact", required=True, metavar="PATH")
 
-    cal = sub.add_parser(
-        "calibrate",
-        help="measure the probe set, fit machine constants, save a "
-             ".calib.json entry usable via --calibration/--hw",
+    cal = _add_verb(
+        sub, "calibrate",
+        "measure the probe set, fit machine constants, save a "
+        ".calib.json entry usable via --calibration/--hw",
     )
     cal.add_argument("--base", default="quadro-p4000",
                      help="base machine registry to calibrate")
@@ -168,7 +283,56 @@ def main(argv: Optional[List[str]] = None) -> int:
     cal.add_argument("--out", default=None, metavar="PATH",
                      help="where to save (default <name>.calib.json)")
 
+    swp = _add_verb(
+        sub, "sweep",
+        "run the model-zoo matrix (programs x machines x modes), append "
+        "a BENCH trajectory point, render the leaderboard, flag "
+        "regressions",
+    )
+    swp.add_argument("--programs", default=None,
+                     help="comma-separated programs (default: every "
+                          "miniapp + every arch:<name>)")
+    swp.add_argument("--machines", default=None,
+                     help="comma-separated machine registries (default: "
+                          "all)")
+    swp.add_argument("--modes", default=",".join(MODES),
+                     help="comma-separated modes (default: binary,mixed)")
+    swp.add_argument("--smoke", action="store_true",
+                     help="the fixed 3-cell CI matrix at smoke budgets "
+                          "(overrides --programs/--machines/--modes)")
+    swp.add_argument("--dir", dest="sweep_dir", default=None, metavar="DIR",
+                     help="per-cell artifact + fitness-cache directory "
+                          "(default .sweep, .sweep-smoke under --smoke); "
+                          "re-running against the same directory resumes: "
+                          "complete cells are skipped outright")
+    swp.add_argument("--cache", default=None, metavar="PATH",
+                     help="shared JSONL fitness cache (default "
+                          "<dir>/fitness.jsonl)")
+    swp.add_argument("--out", default=None, metavar="PATH",
+                     help="trajectory file to append to (default "
+                          "BENCH_sweep.json)")
+    swp.add_argument("--label", default=None,
+                     help="free-form label recorded in the point")
+    swp.add_argument("--tolerance", type=float, default=None,
+                     help="relative regression tolerance vs the previous "
+                          "point (default 0.05; strictly-beyond flags)")
+    swp.add_argument("--workers", type=int, default=1)
+    swp.add_argument("--seed", type=int, default=0)
+    swp.add_argument("--no-append", action="store_true",
+                     help="run + report but leave the trajectory file "
+                          "untouched (regressions compare against its "
+                          "LAST point instead of the previous one)")
+    swp.add_argument("--report-only", action="store_true",
+                     help="no searches: render the leaderboard of the "
+                          "saved trajectory's last point (vs its "
+                          "previous) and exit by the regression verdict")
+    swp.add_argument("--quiet", action="store_true",
+                     help="suppress per-cell progress lines")
+
     args = ap.parse_args(argv)
+
+    if args.cmd == "sweep":
+        return _cmd_sweep(ap, args)
 
     if args.cmd == "calibrate":
         from repro.offload import calibrate as cal_mod

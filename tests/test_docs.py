@@ -13,12 +13,58 @@ import check_docs  # noqa: E402
 
 
 def test_docs_suite_exists():
-    for name in ("architecture.md", "destinations.md", "pipeline.md"):
+    for name in ("architecture.md", "destinations.md", "pipeline.md",
+                 "benchmarks.md"):
         assert (REPO / "docs" / name).is_file(), name
     # README points into the suite
     readme = (REPO / "README.md").read_text(encoding="utf-8")
     assert "docs/pipeline.md" in readme
     assert "docs/architecture.md" in readme
+    assert "docs/benchmarks.md" in readme
+
+
+def test_benchmarks_doc_is_cross_linked_and_complete():
+    """The sweep cookbook must stay wired into the doc suite and keep
+    documenting the trajectory schema + regression semantics."""
+    bench = (REPO / "docs" / "benchmarks.md").read_text(encoding="utf-8")
+    for required in ("BENCH_sweep.json", "--smoke", "leaderboard",
+                     "best_time_s", "rel_tolerance", "exit code"):
+        assert required.lower() in bench.lower(), required
+    for doc in ("architecture.md", "pipeline.md"):
+        text = (REPO / "docs" / doc).read_text(encoding="utf-8")
+        assert "benchmarks.md" in text, f"{doc} must link benchmarks.md"
+
+
+def test_roadmap_is_reference_checked():
+    """ROADMAP.md is in the checker's file set (its stale /root/related
+    references were the ISSUE-6 docs fix; keep it honest), and no doc
+    points at the /root/related mirror that doesn't exist in checkouts."""
+    checked = {p.name for p in check_docs.checked_files()}
+    assert "ROADMAP.md" in checked
+    for f in check_docs.checked_files():
+        assert "/root/related" not in f.read_text(encoding="utf-8"), f
+
+
+def test_cli_verbs_document_exit_codes(capsys):
+    """Every `python -m repro.offload` verb documents its exit codes in
+    its --help epilog, from the one EXIT_CODES table."""
+    from repro.offload.__main__ import EXIT_CODES, main
+
+    assert set(EXIT_CODES) == {"run", "resume", "report", "calibrate",
+                               "sweep"}
+    for verb, codes in EXIT_CODES.items():
+        assert codes[0][0] == 0, f"{verb} must document success"
+        assert any(c == 2 for c, _ in codes), \
+            f"{verb} must document the argparse usage-error exit"
+        with pytest.raises(SystemExit) as ei:
+            main([verb, "--help"])
+        assert ei.value.code == 0
+        out = capsys.readouterr().out
+        assert "exit codes:" in out, verb
+        for code, meaning in codes:
+            assert f"\n  {code}  " in out, (verb, code)
+    # the sweep regression verdict keeps its own, documented code
+    assert any(c == 3 for c, _ in EXIT_CODES["sweep"])
 
 
 def test_no_dangling_references():

@@ -1,0 +1,336 @@
+"""Model-zoo sweep driver + BENCH trajectory artifact
+(src/repro/offload/sweep.py, `python -m repro.offload sweep`).
+
+Covers the ISSUE-6 acceptance surface: schema round-trip, append-only
+merge onto a pre-existing trajectory, regression-flagger tolerance
+edges, resume-mid-sweep (completed cells skipped with zero fresh
+measurements), and the CLI end to end — two smoke invocations append
+two points, the leaderboard renders deltas, and an injected regression
+exits nonzero.
+"""
+import json
+import math
+
+import pytest
+
+from repro.offload import sweep as sw
+from repro.offload.__main__ import EXIT_CODES, main
+from repro.offload.spec import MIXED_SMOKE_BUDGET
+
+# ---------------------------------------------------------------------------
+# fabricated points (unit tests never run searches)
+# ---------------------------------------------------------------------------
+
+
+def _cell(cid, best, status="ok", fresh=5):
+    prog, hw, mode = cid.rsplit(":", 2)
+    return {
+        "id": cid, "program": prog, "hw": hw, "mode": mode,
+        "status": status, "resumed": False, "fresh_measurements": fresh,
+        "wall_s": 0.1, "error": None if status == "ok" else "boom",
+        "best_time_s": best, "baseline_s": (best or 1.0) * 10.0,
+        "speedup": 10.0 if best else None,
+        "search": {"evaluations": fresh, "cache_hits": 3,
+                   "hit_rate": 0.375, "wall_s": 0.05,
+                   "generations": 4, "population": 6} if best else None,
+        "residency": None,
+    }
+
+
+def _point(cells, git="abcdef123456", ts="2026-01-01T00:00:00Z",
+           label=None, smoke=True):
+    recs = [_cell(cid, best) if not isinstance(best, dict) else best
+            for cid, best in cells.items()]
+    ok = [c for c in recs if c["status"] == "ok"]
+    speedups = [c["speedup"] for c in ok if c["speedup"]]
+    return {
+        "git": git, "timestamp": ts, "label": label, "smoke": smoke,
+        "matrix": {"cells": list(cells), "skipped": []},
+        "cells": recs,
+        "totals": {
+            "n_cells": len(recs), "n_ok": len(ok),
+            "n_failed": len(recs) - len(ok), "n_resumed": 0,
+            "fresh_measurements": sum(c["fresh_measurements"]
+                                      for c in recs),
+            "cache_hits": 0, "hit_rate": 0.0,
+            "geomean_speedup": math.exp(
+                sum(math.log(s) for s in speedups) / len(speedups)
+            ) if speedups else None,
+            "wall_s": 1.0,
+        },
+    }
+
+
+CID_A = "himeno:quadro-p4000:binary"
+CID_B = "hetero:quadro-p4000:mixed"
+
+
+# ---------------------------------------------------------------------------
+# trajectory schema + persistence
+# ---------------------------------------------------------------------------
+
+
+def test_point_schema_roundtrip(tmp_path):
+    path = str(tmp_path / "BENCH_sweep.json")
+    p = _point({CID_A: 1.0, CID_B: 2.0})
+    sw.validate_point(p)  # writer-side gate accepts it
+    sw.append_point(path, p)
+    loaded = sw.Trajectory.load(path)
+    assert loaded.points == [p]  # byte-faithful through JSON
+    d = json.loads((tmp_path / "BENCH_sweep.json").read_text())
+    assert d["schema"] == sw.SWEEP_SCHEMA
+    assert d["v"] == sw.SWEEP_SCHEMA_VERSION
+
+
+def test_append_only_merge_preserves_existing_points(tmp_path):
+    path = str(tmp_path / "BENCH_sweep.json")
+    p1 = _point({CID_A: 1.0}, ts="2026-01-01T00:00:00Z")
+    p2 = _point({CID_A: 0.9}, ts="2026-01-02T00:00:00Z")
+    sw.append_point(path, p1)
+    traj = sw.append_point(path, p2)
+    assert [pt["timestamp"] for pt in traj.points] == [
+        "2026-01-01T00:00:00Z", "2026-01-02T00:00:00Z"
+    ]
+    assert traj.points[0] == p1  # the old point is never rewritten
+    assert traj.previous == p1 and traj.last == p2
+
+
+def test_load_missing_file_is_empty_trajectory(tmp_path):
+    traj = sw.Trajectory.load(str(tmp_path / "nope.json"))
+    assert traj.points == [] and traj.last is None
+
+
+def test_load_rejects_foreign_schema(tmp_path):
+    bad = tmp_path / "BENCH_sweep.json"
+    bad.write_text(json.dumps({"schema": "something-else", "v": 1,
+                               "points": []}))
+    with pytest.raises(ValueError, match="not a repro.offload.sweep"):
+        sw.Trajectory.load(str(bad))
+    bad.write_text(json.dumps({"schema": sw.SWEEP_SCHEMA, "v": 999,
+                               "points": []}))
+    with pytest.raises(ValueError, match="v=999"):
+        sw.Trajectory.load(str(bad))
+
+
+def test_validate_point_names_every_missing_field():
+    p = _point({CID_A: 1.0})
+    del p["git"]
+    del p["cells"][0]["speedup"]
+    p["cells"][0]["status"] = "weird"
+    with pytest.raises(ValueError) as ei:
+        sw.validate_point(p)
+    msg = str(ei.value)
+    assert "'git'" in msg and "'speedup'" in msg and "weird" in msg
+
+
+def test_append_rejects_invalid_point(tmp_path):
+    path = str(tmp_path / "BENCH_sweep.json")
+    p = _point({CID_A: 1.0})
+    del p["totals"]
+    with pytest.raises(ValueError):
+        sw.append_point(path, p)
+    assert not (tmp_path / "BENCH_sweep.json").exists()  # nothing written
+
+
+# ---------------------------------------------------------------------------
+# regression flagging
+# ---------------------------------------------------------------------------
+
+
+def test_regression_tolerance_edges():
+    prev = _point({CID_A: 1.0})
+    tol = 0.05
+    # exactly AT the boundary: not a regression (strictly-beyond flags)
+    at_edge = _point({CID_A: 1.0 * (1 + tol)})
+    assert sw.flag_regressions(prev, at_edge, tol) == []
+    # one ulp beyond: flagged
+    beyond = _point({CID_A: math.nextafter(1.0 * (1 + tol), 2.0)})
+    flags = sw.flag_regressions(prev, beyond, tol)
+    assert [f["id"] for f in flags] == [CID_A]
+    assert flags[0]["prev_best_s"] == 1.0
+    assert flags[0]["ratio"] > 1.05
+    # improvements never flag, whatever their size
+    assert sw.flag_regressions(prev, _point({CID_A: 0.01}), tol) == []
+
+
+def test_regression_skips_failed_and_new_cells():
+    prev = _point({CID_A: 1.0,
+                   CID_B: _cell(CID_B, None, status="failed")})
+    # CID_B failed before: its (now-ok) time has no baseline to regress
+    # from; a brand-new cell id likewise
+    new = _point({CID_A: 1.0, CID_B: 99.0,
+                  "nasft:quadro-p4000:binary": 123.0})
+    assert sw.flag_regressions(prev, new, 0.05) == []
+    # a cell that FAILED in the new point is a failure, not a regression
+    new2 = _point({CID_A: _cell(CID_A, None, status="failed")})
+    assert sw.flag_regressions(prev, new2, 0.05) == []
+
+
+def test_regression_no_previous_point_and_bad_tolerance():
+    assert sw.flag_regressions(None, _point({CID_A: 9.0})) == []
+    with pytest.raises(ValueError, match="rel_tolerance"):
+        sw.flag_regressions(_point({CID_A: 1.0}), _point({CID_A: 1.0}),
+                            rel_tolerance=-0.1)
+
+
+# ---------------------------------------------------------------------------
+# matrix enumeration + cell specs
+# ---------------------------------------------------------------------------
+
+
+def test_matrix_covers_the_whole_cross_product():
+    programs = sw.default_programs()
+    machines = sw.default_machines()
+    cells, skipped = sw.enumerate_matrix(programs, machines)
+    assert len(cells) + len(skipped) == len(programs) * len(machines) * 2
+    ids = {c.id for c in cells} | {s["id"] for s in skipped}
+    assert len(ids) == len(cells) + len(skipped)  # no dup, no overlap
+    # every skip carries a reason; arch programs never appear mixed
+    assert all(s["reason"] for s in skipped)
+    assert not any(c.program.startswith("arch:") and c.mode == "mixed"
+                   for c in cells)
+
+
+def test_matrix_validates_inputs():
+    with pytest.raises(ValueError, match="unknown programs"):
+        sw.enumerate_matrix(["nope"], None)
+    with pytest.raises(ValueError, match="unknown machines"):
+        sw.enumerate_matrix(None, ["nope"])
+    with pytest.raises(ValueError, match="unknown mode"):
+        sw.enumerate_matrix(None, None, ("ternary",))
+
+
+def test_cell_spec_budgets_and_destinations():
+    mixed = sw.cell_spec(sw.SweepCell("hetero", "tpu-v5e-host", "mixed"),
+                         smoke=True, cache="/tmp/c.jsonl")
+    # the machine's full destination set, host first
+    assert mixed.destinations == ("cpu", "tpu0", "tpu1")
+    assert (mixed.population, mixed.generations) == MIXED_SMOKE_BUDGET
+    assert mixed.warm_start and mixed.cache == "/tmp/c.jsonl"
+    full = sw.cell_spec(sw.SweepCell("hetero", "quadro-p4000", "mixed"))
+    assert full.population is None  # spec default = full MIXED_BUDGET
+    binary = sw.cell_spec(sw.SweepCell("himeno", "quadro-p4000", "binary"))
+    assert binary.mode == "binary" and not binary.warm_start
+
+
+# ---------------------------------------------------------------------------
+# the driver: resume-mid-sweep
+# ---------------------------------------------------------------------------
+
+
+def _progress_sink(lines):
+    return lines.append
+
+
+def test_resume_mid_sweep_skips_completed_cells(tmp_path):
+    out_dir = str(tmp_path / "sweep")
+    a = sw.SweepCell("himeno", "quadro-p4000", "binary")
+    b = sw.SweepCell("arch:stablelm-3b", "quadro-p4000", "binary")
+    p1 = sw.run_sweep([a], out_dir=out_dir, smoke=True)
+    assert p1["cells"][0]["status"] == "ok"
+    assert p1["cells"][0]["fresh_measurements"] > 0
+    # a killed sweep re-invoked over the full matrix: the completed cell
+    # is skipped outright — zero fresh measurements — and only the new
+    # cell pays
+    p2 = sw.run_sweep([a, b], out_dir=out_dir, smoke=True)
+    rec_a, rec_b = p2["cells"]
+    assert rec_a["resumed"] and rec_a["fresh_measurements"] == 0
+    assert rec_a["best_time_s"] == p1["cells"][0]["best_time_s"]
+    assert not rec_b["resumed"] and rec_b["fresh_measurements"] > 0
+    assert p2["totals"]["n_resumed"] == 1
+    sw.validate_point(p2)
+
+
+def test_sweep_survives_a_failing_cell(tmp_path, monkeypatch):
+    # a cell whose pipeline raises must be recorded, not lose the sweep
+    out_dir = str(tmp_path / "sweep")
+    a = sw.SweepCell("himeno", "quadro-p4000", "binary")
+    bad = sw.SweepCell("nasft", "quadro-p4000", "binary")
+
+    def boom(self, name):
+        if self.spec.program == "nasft" and name == "search":
+            raise RuntimeError("injected")
+        return orig(self, name)
+
+    from repro.offload.pipeline import Offloader
+    orig = Offloader.run_stage
+    monkeypatch.setattr(Offloader, "run_stage", boom)
+    point = sw.run_sweep([bad, a], out_dir=out_dir, smoke=True)
+    rec_bad, rec_a = point["cells"]
+    assert rec_bad["status"] == "failed" and "injected" in rec_bad["error"]
+    assert rec_a["status"] == "ok"  # the sweep finished the matrix
+    assert point["totals"]["n_failed"] == 1
+    sw.validate_point(point)
+
+
+# ---------------------------------------------------------------------------
+# CLI end to end
+# ---------------------------------------------------------------------------
+
+
+def _smoke_argv(tmp_path, *extra):
+    return ["sweep", "--smoke", "--quiet",
+            "--dir", str(tmp_path / "cells"),
+            "--out", str(tmp_path / "BENCH_sweep.json"), *extra]
+
+
+def test_cli_smoke_twice_appends_and_renders_deltas(tmp_path, capsys):
+    assert main(_smoke_argv(tmp_path)) == 0
+    d = json.loads((tmp_path / "BENCH_sweep.json").read_text())
+    assert d["schema"] == sw.SWEEP_SCHEMA and len(d["points"]) == 1
+    for c in d["points"][0]["cells"]:
+        assert c["status"] == "ok" and c["best_time_s"] > 0
+    capsys.readouterr()
+
+    # second invocation: all cells resume complete, a second point
+    # appends, and the leaderboard shows per-cell deltas vs point 1
+    assert main(_smoke_argv(tmp_path)) == 0
+    out = capsys.readouterr().out
+    d = json.loads((tmp_path / "BENCH_sweep.json").read_text())
+    assert len(d["points"]) == 2
+    p2 = d["points"][1]
+    assert all(c["resumed"] and c["fresh_measurements"] == 0
+               for c in p2["cells"])
+    assert "BENCH leaderboard" in out
+    assert "+0.0%" in out  # deterministic searches: delta exactly zero
+    assert "regressions (tolerance 5%): none" in out
+
+
+def test_cli_injected_regression_exits_3(tmp_path, capsys):
+    assert main(_smoke_argv(tmp_path)) == 0
+    # tamper the recorded point: pretend the previous sweep was 2x
+    # faster, so the (identical) re-run reads as a regression
+    path = tmp_path / "BENCH_sweep.json"
+    d = json.loads(path.read_text())
+    for c in d["points"][0]["cells"]:
+        c["best_time_s"] *= 0.5
+    path.write_text(json.dumps(d))
+    capsys.readouterr()
+    assert main(_smoke_argv(tmp_path)) == 3
+    out = capsys.readouterr().out
+    assert "REGRESSIONS" in out and "2.000x" in out
+    # report-only re-reads the saved trajectory and agrees
+    assert main(["sweep", "--report-only",
+                 "--out", str(path)]) == 3
+    # ...and a loose tolerance un-flags it
+    assert main(["sweep", "--report-only", "--tolerance", "1.5",
+                 "--out", str(path)]) == 0
+
+
+def test_cli_report_only_on_empty_trajectory(tmp_path, capsys):
+    assert main(["sweep", "--report-only",
+                 "--out", str(tmp_path / "none.json")]) == 0
+    assert "empty" in capsys.readouterr().out
+
+
+def test_cli_no_append_leaves_trajectory_untouched(tmp_path):
+    assert main(_smoke_argv(tmp_path)) == 0
+    before = (tmp_path / "BENCH_sweep.json").read_text()
+    assert main(_smoke_argv(tmp_path, "--no-append")) == 0
+    assert (tmp_path / "BENCH_sweep.json").read_text() == before
+
+
+def test_exit_codes_table_matches_cli_behavior():
+    # the sweep verdicts asserted above are the documented ones
+    codes = {c for c, _ in EXIT_CODES["sweep"]}
+    assert codes == {0, 1, 2, 3}
