@@ -17,6 +17,7 @@ from benchmarks import (
     fig_capacity,
     fig_fidelity,
     fig_mixed_destinations,
+    fig_quality,
     kernel_bench,
     roofline_table,
     transfer_ablation,
@@ -122,6 +123,11 @@ SECTIONS = {
         _forward(args, smoke=False) + ["--smoke"]
     ),
     "sweep": _sweep_section,
+    # search-quality observability (docs/observability.md): pass@k
+    # winner stability, rank fidelity, and the ga.diversity ablation
+    "quality": lambda args: fig_quality.main(
+        _forward(args)
+    ),
 }
 
 

@@ -248,6 +248,12 @@ class GenTelemetry:
         }
 
 
+# the long-form name the pipeline/trace observability layer uses for
+# this record (persisted per generation in the search payload and
+# carried on every per-generation trace event)
+GenerationTelemetry = GenTelemetry
+
+
 def _run_with_executor(
     executor_kind: str,
     workers: int,

@@ -35,7 +35,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -61,6 +61,12 @@ class GAParams:
     # (byte-identical to the pre-k-ary GA); >2 = mixed-destination search
     # (arXiv:2011.12431) where each gene is a destination index
     alleles: int = 2
+    # fitness-sharing strength: an individual's roulette fitness is
+    # divided by (copies of its genome in the generation) ** diversity,
+    # so a converged majority stops amplifying itself. 0.0 = off — the
+    # historical selection, byte-identical (the sharing block is never
+    # entered). Exposed as OffloadSpec.ga.diversity.
+    diversity: float = 0.0
 
     @classmethod
     def for_gene_length(cls, n: int, **kw) -> "GAParams":
@@ -84,6 +90,12 @@ class GenerationStats:
     gen_wall_s: float = 0.0
     dedup_ratio: float = 0.0
     hit_rate: float = 0.0
+    # full generation snapshot (observability): the evaluated population
+    # and its per-individual times, in population order — what the trace
+    # layer computes allele entropy / median fitness from and what the
+    # pipeline persists as the search's final population
+    times: Optional[List[float]] = None
+    population: Optional[List[Genes]] = None
 
 
 @dataclasses.dataclass
@@ -133,6 +145,8 @@ def run_ga(
         if evaluate is None:
             raise ValueError("run_ga needs either evaluate or pool")
         pool = EvalPool(evaluate)
+    if params.diversity < 0.0:
+        raise ValueError(f"diversity must be >= 0: {params.diversity}")
     rng = np.random.default_rng(params.seed)
     evals0, hits0 = pool.totals().evaluated, pool.totals().cache_hits
 
@@ -172,6 +186,8 @@ def run_ga(
             gen_wall_s=tel.wall_s,
             dedup_ratio=tel.dedup_ratio,
             hit_rate=tel.hit_rate,
+            times=[float(t) for t in times],
+            population=list(pop),
         )
         history.append(gs)
         if on_generation:
@@ -183,6 +199,16 @@ def run_ga(
         if params.fitness_windowing and len(fit) > 1:
             worst = min(fit)
             fit = [f - worst for f in fit]
+        if params.diversity > 0.0:
+            # fitness sharing: divide each individual's roulette share by
+            # (its genome's copy count this generation) ** diversity
+            counts: Dict[Genes, int] = {}
+            for ind in pop:
+                counts[ind] = counts.get(ind, 0) + 1
+            fit = [
+                f / (counts[ind] ** params.diversity)
+                for f, ind in zip(fit, pop)
+            ]
         # elite preservation: the generation's best survive unchanged
         elite_idx = list(order[: params.elites])
         nxt: List[Genes] = [pop[i] for i in elite_idx]

@@ -111,6 +111,12 @@ class MixedEvaluator:
         """Gene alphabet size (pass as ``GAParams.alleles``)."""
         return len(self.dests)
 
+    def allele_names(self) -> Tuple[str, ...]:
+        """Destination name per allele value, host first — what a gene
+        value *means* (surfaced in trace/report tooling so telemetry
+        stays readable without the registry at hand)."""
+        return tuple(d.name for d in self.dests)
+
     # -- genome -> placement ------------------------------------------------
 
     def admissible(self, genes: Sequence[int]) -> Genes:

@@ -14,12 +14,18 @@ This package is that sequence as a reusable surface:
   and resumes (completed stages skip; interrupted searches resume warm
   through the persistent JSONL fitness cache);
 - ``python -m repro.offload`` — the CLI (``run`` / ``resume`` /
-  ``report`` / ``calibrate`` / ``sweep``, ``--smoke`` for CI; every
-  verb's ``--help`` epilog documents its exit codes);
+  ``report`` / ``trace`` / ``calibrate`` / ``sweep``, ``--smoke`` for
+  CI; every verb's ``--help`` epilog documents its exit codes);
 - :mod:`repro.offload.sweep` — the model-zoo sweep driver: the
   programs x machines x modes matrix run resumably cell-by-cell, the
   append-only ``BENCH_sweep.json`` trajectory, the leaderboard and the
   regression flagger (docs/benchmarks.md);
+- :mod:`repro.offload.trace` / :mod:`repro.offload.quality` — the
+  observability layer (docs/observability.md): a deterministic JSONL
+  trace of span/event records written next to every artifact and
+  embedded in it by digest, plus the pass@k winner-stability and
+  modeled-vs-measured rank-correlation metrics the report stage and
+  every sweep cell surface;
 - :mod:`repro.offload.calibrate` — measured model calibration behind
   ``OffloadSpec.fidelity`` (imported lazily: modeled pipelines never
   touch it).
@@ -35,10 +41,17 @@ from repro.offload.result import (
     StageFailure,
     StageRecord,
 )
-from repro.offload.spec import FIDELITIES, METHODS, MODES, OffloadSpec
+from repro.offload.spec import (
+    FIDELITIES,
+    GAControls,
+    METHODS,
+    MODES,
+    OffloadSpec,
+)
 
 __all__ = [
     "FIDELITIES",
+    "GAControls",
     "METHODS",
     "MODES",
     "Offloader",

@@ -12,6 +12,7 @@
       --calibration p4000.calib.json --hw quadro-p4000-calibrated
   python -m repro.offload resume --artifact himeno-binary.offload.json
   python -m repro.offload report --artifact himeno-binary.offload.json
+  python -m repro.offload trace --artifact himeno-binary.offload.json
   python -m repro.offload sweep --smoke            # CI fast tier
   python -m repro.offload sweep --workers 4        # the full model zoo
 
@@ -21,7 +22,11 @@ verify -> report) and saves the artifact after each one; a failed stage
 recorded in the artifact. ``resume`` continues a saved artifact, skipping
 its completed stages — an interrupted *search* additionally resumes warm
 through the spec's persistent fitness cache. ``report`` pretty-prints an
-artifact (partial ones included) without running anything. ``calibrate``
+artifact (partial ones included) without running anything. ``trace``
+loads the structured JSONL trace written next to the artifact
+(docs/observability.md), verifies it against the digest embedded in the
+artifact, and renders the span tree plus a per-stage budget-attribution
+table. ``calibrate``
 measures the probe set, fits the machine constants, and saves a
 ``.calib.json`` that ``--calibration`` installs in later invocations
 (docs/fidelity.md). ``sweep`` runs the programs x machines x modes
@@ -43,6 +48,7 @@ from repro.offload.pipeline import Offloader, render_report
 from repro.offload.result import STAGES, OffloadResult, StageFailure
 from repro.offload.spec import (
     FIDELITIES,
+    GAControls,
     METHODS,
     MIXED_SMOKE_BUDGET,
     MODES,
@@ -69,6 +75,13 @@ EXIT_CODES: Dict[str, Tuple[Tuple[int, str], ...]] = {
     ),
     "report": (
         (0, "artifact loaded and printed (partial artifacts included)"),
+        (2, "usage error"),
+    ),
+    "trace": (
+        (0, "trace loaded, validated, digest-checked against the "
+            "artifact, and rendered"),
+        (1, "trace file missing or malformed, or its digest does not "
+            "match the one embedded in the artifact"),
         (2, "usage error"),
     ),
     "calibrate": (
@@ -135,6 +148,19 @@ def _spec_from_args(args: argparse.Namespace) -> OffloadSpec:
         # analytic evaluator; only the mixed budget needs trimming
         kw["population"] = kw["population"] or MIXED_SMOKE_BUDGET[0]
         kw["generations"] = kw["generations"] or MIXED_SMOKE_BUDGET[1]
+    ga_kw = {}
+    if args.diversity is not None:
+        ga_kw["diversity"] = args.diversity
+    if args.stability_seeds is not None:
+        ga_kw["stability_seeds"] = args.stability_seeds
+    if args.stability_window is not None:
+        ga_kw["stability_window"] = args.stability_window
+    if args.stability_gate is not None:
+        ga_kw["stability_gate"] = args.stability_gate
+    if args.rank_probe:
+        ga_kw["rank_probe"] = True
+    if ga_kw:
+        kw["ga"] = GAControls(**ga_kw)
     return OffloadSpec(**kw)
 
 
@@ -248,12 +274,34 @@ def main(argv: Optional[List[str]] = None) -> int:
                      help="PCAST relative tolerance override")
     run.add_argument("--abs-tol", type=float, default=None,
                      help="PCAST absolute tolerance override")
+    run.add_argument("--diversity", type=float, default=None,
+                     help="fitness-sharing strength for GA selection "
+                          "(default 0 = off, byte-identical to the "
+                          "historical selection)")
+    run.add_argument("--stability-seeds", type=int, default=None,
+                     metavar="K",
+                     help="pass@k winner-stability seeds re-searched by "
+                          "the report stage (default 3; <=1 disables)")
+    run.add_argument("--stability-window", type=float, default=None,
+                     help="relative window a seed's best must land in to "
+                          "'pass' (default 0.02)")
+    run.add_argument("--stability-gate", type=float, default=None,
+                     help="fail the report stage when the winners' "
+                          "relative spread exceeds this (default: no "
+                          "gate)")
+    run.add_argument("--rank-probe", action="store_true",
+                     help="wall-clock the two winner projections so even "
+                          "modeled/calibrated runs record modeled-vs-"
+                          "measured rank correlation")
     run.add_argument("--artifact", default=None, metavar="PATH",
                      help="artifact path (default <program>-<mode>"
                           ".offload.json)")
     run.add_argument("--until", choices=STAGES, default="report")
     run.add_argument("--smoke", action="store_true",
                      help="CI-sized budget (small GA)")
+    run.add_argument("--no-trace", action="store_true",
+                     help="skip writing the JSONL trace next to the "
+                          "artifact")
     run.add_argument("--quiet", action="store_true")
 
     res = _add_verb(sub, "resume", "continue a saved artifact")
@@ -263,10 +311,23 @@ def main(argv: Optional[List[str]] = None) -> int:
                      help="install a saved .calib.json first (needed when "
                           "the artifact's spec names a calibrated machine "
                           "that is not embedded in the artifact itself)")
+    res.add_argument("--no-trace", action="store_true",
+                     help="skip continuing the JSONL trace next to the "
+                          "artifact")
     res.add_argument("--quiet", action="store_true")
 
     rep = _add_verb(sub, "report", "pretty-print a saved artifact")
     rep.add_argument("--artifact", required=True, metavar="PATH")
+
+    trc = _add_verb(
+        sub, "trace",
+        "validate and render an artifact's JSONL trace: span tree, "
+        "per-generation telemetry, budget attribution",
+    )
+    trc.add_argument("--artifact", required=True, metavar="PATH")
+    trc.add_argument("--trace", default=None, metavar="PATH",
+                     help="trace file (default: the artifact path with "
+                          ".json swapped for .trace.jsonl)")
 
     cal = _add_verb(
         sub, "calibrate",
@@ -377,6 +438,24 @@ def main(argv: Optional[List[str]] = None) -> int:
             print(render_report(art))
         return 0
 
+    if args.cmd == "trace":
+        from repro.offload import trace as trace_mod
+
+        art = OffloadResult.load(args.artifact)
+        path = args.trace or trace_mod.default_trace_path(args.artifact)
+        try:
+            tr = trace_mod.load_trace(path)
+        except (trace_mod.TraceError, OSError) as e:
+            print(f"error: {e}", file=sys.stderr)
+            return 1
+        print(trace_mod.render_trace(tr, artifact=art))
+        if art.trace is not None and art.trace.get("digest") != tr.digest:
+            print("error: trace digest does not match the artifact's "
+                  "embedded digest (stale or foreign trace file)",
+                  file=sys.stderr)
+            return 1
+        return 0
+
     on_gen = None if args.quiet else _progress
     if args.cmd == "run":
         try:
@@ -384,9 +463,11 @@ def main(argv: Optional[List[str]] = None) -> int:
         except ValueError as e:
             ap.error(str(e))
         off = Offloader(spec, artifact_path=args.artifact
-                        or _default_artifact(spec), on_generation=on_gen)
+                        or _default_artifact(spec), on_generation=on_gen,
+                        trace=not args.no_trace)
     else:  # resume
-        off = Offloader.resume(args.artifact, on_generation=on_gen)
+        off = Offloader.resume(args.artifact, on_generation=on_gen,
+                               trace=not args.no_trace)
 
     try:
         result = off.run(until=args.until)

@@ -39,6 +39,7 @@ same RNG stream.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from typing import Any, Callable, Dict, Optional, Sequence
 
 from repro.core import ga
@@ -49,6 +50,8 @@ from repro.core.evalpool import (
 )
 from repro.core.evaluator import HardwareModel
 from repro.offload import programs
+from repro.offload import quality as qual
+from repro.offload import trace as trace_mod
 from repro.offload.result import (
     STAGES,
     OffloadResult,
@@ -60,6 +63,55 @@ from repro.offload.spec import OffloadSpec
 # relative mismatch tolerated when re-measuring the winner with a
 # deterministic (analytic) evaluator
 _REMEASURE_RTOL = 1e-9
+
+
+def _spec_digest(spec: OffloadSpec) -> str:
+    """Short content digest of the spec (trace run headers)."""
+    return hashlib.sha256(spec.to_json().encode("utf-8")).hexdigest()[:16]
+
+
+def _span_attrs(name: str, payload: Dict[str, Any]) -> Dict[str, Any]:
+    """Deterministic data attrs for a stage span, derived from the stage
+    payload alone (wall clocks stay out — they belong to span timing,
+    which the trace digest ignores)."""
+    a: Dict[str, Any] = {}
+    if name == "calibrate":
+        a["applicable"] = bool(payload.get("applicable"))
+        if payload.get("entry"):
+            a["entry"] = payload["entry"]
+    elif name == "analyze":
+        if "gene_length" in payload:
+            a["gene_length"] = int(payload["gene_length"])
+        if "baseline_s" in payload:
+            a["baseline_s"] = float(payload["baseline_s"])
+    elif name == "seed":
+        a["seeds"] = len(payload.get("seeds", []))
+    elif name == "search":
+        a["evaluations"] = int(payload.get("evaluations", 0))
+        a["cache_hits"] = int(payload.get("cache_hits", 0))
+        a["timeouts"] = int(payload.get("timeouts", 0))
+        a["generations"] = len(payload.get("history", []))
+        if payload.get("best_time_s") is not None:
+            a["best_time_s"] = float(payload["best_time_s"])
+    elif name == "verify":
+        pc = payload.get("pcast") or {}
+        a["pcast"] = "skipped" if "skipped" in pc else (
+            "ok" if pc.get("ok") else "fail") if pc else "none"
+        a["consistent"] = bool(payload.get("consistent", False))
+    elif name == "report":
+        # NOTE: no "evaluations" attr here — the report span's
+        # stability_search / rank_probe EVENTS carry the measurement
+        # counts, and the budget table counts events only when the
+        # span has no count of its own (else it would double-count)
+        q = payload.get("quality") or {}
+        st = q.get("stability") or {}
+        if "pass_at_k" in st:
+            a["pass_at_k"] = st["pass_at_k"]
+            a["stability_k"] = st["k"]
+        rk = q.get("rank") or {}
+        if rk.get("spearman") is not None:
+            a["spearman"] = round(float(rk["spearman"]), 4)
+    return a
 
 
 class Offloader:
@@ -90,6 +142,19 @@ class Offloader:
         Its ``base`` must match ``spec.hw``.
     on_generation:
         Optional per-generation callback forwarded to ``run_ga``.
+    trace:
+        Write a structured JSONL trace next to the artifact
+        (:mod:`repro.offload.trace`). On by default; a no-op for
+        in-memory artifacts unless ``trace_path`` names a file. The
+        trace never feeds back into any stage, so search results and
+        cache fingerprints are byte-identical with tracing on or off.
+    trace_path:
+        Explicit trace file path (default: artifact path with
+        ``.json`` swapped for ``.trace.jsonl``).
+    trace_clock:
+        Injected monotonic clock for the trace spans (tests pin it to
+        make whole trace files deterministic; timing never enters the
+        trace digest either way).
     """
 
     def __init__(
@@ -101,6 +166,9 @@ class Offloader:
         hw: Optional[HardwareModel] = None,
         calibration=None,
         on_generation: Optional[Callable[[ga.GenerationStats], None]] = None,
+        trace: bool = True,
+        trace_path: Optional[str] = None,
+        trace_clock: Optional[Callable[[], float]] = None,
     ):
         if artifact is not None and artifact.spec != spec:
             raise ValueError("artifact was produced by a different spec; "
@@ -112,6 +180,11 @@ class Offloader:
         self._evaluator = evaluator
         self._hw = hw
         self._on_generation = on_generation
+        self._trace_enabled = trace
+        self._trace_path = trace_path
+        self._trace_clock = trace_clock
+        self._tracer: Optional[trace_mod.TraceWriter] = None
+        self._trace_header_written = False
         self._adapter = None  # built lazily (adapters may import jax-side)
         # CalibrationResult (fidelity="calibrated" only); an injected one
         # is recorded by the calibrate stage in place of a fresh sweep
@@ -130,12 +203,19 @@ class Offloader:
         evaluator: Optional[Callable[[Sequence[int]], float]] = None,
         hw: Optional[HardwareModel] = None,
         on_generation: Optional[Callable[[ga.GenerationStats], None]] = None,
+        trace: bool = True,
+        trace_path: Optional[str] = None,
+        trace_clock: Optional[Callable[[], float]] = None,
     ) -> "Offloader":
         """Continue a saved artifact: its spec is authoritative and its
-        completed stages are skipped on the next :meth:`run`."""
+        completed stages are skipped on the next :meth:`run`. An
+        existing trace file is continued, not truncated (the resumed
+        process appends a second run header)."""
         art = OffloadResult.load(artifact_path)
         return cls(art.spec, artifact=art, artifact_path=artifact_path,
-                   evaluator=evaluator, hw=hw, on_generation=on_generation)
+                   evaluator=evaluator, hw=hw, on_generation=on_generation,
+                   trace=trace, trace_path=trace_path,
+                   trace_clock=trace_clock)
 
     # -- plumbing ----------------------------------------------------------
 
@@ -192,6 +272,33 @@ class Offloader:
         return FitnessCache(self.spec.cache,
                             fingerprint=evaluator_fingerprint(evaluator))
 
+    def _trace(self) -> Optional[trace_mod.TraceWriter]:
+        """The lazily-built TraceWriter, or None when tracing is off (or
+        there is nowhere to write: in-memory artifact, no trace_path).
+        Emits exactly one run header per process, flagged ``resumed``
+        when any stage was already complete at construction."""
+        if not self._trace_enabled:
+            return None
+        if self._tracer is None:
+            path = self._trace_path
+            if path is None:
+                if self.result.path is None:
+                    return None
+                path = trace_mod.default_trace_path(self.result.path)
+            self._tracer = trace_mod.TraceWriter(
+                path, clock=self._trace_clock
+            )
+        if not self._trace_header_written:
+            self._tracer.run_header(
+                program=self.spec.program,
+                mode=self.spec.mode,
+                fidelity=self.spec.fidelity,
+                spec_digest=_spec_digest(self.spec),
+                resumed=any(self.result.completed(s) for s in STAGES),
+            )
+            self._trace_header_written = True
+        return self._tracer
+
     # -- driver ------------------------------------------------------------
 
     def run(self, until: str = "report") -> OffloadResult:
@@ -206,12 +313,20 @@ class Offloader:
         return self.result
 
     def run_stage(self, name: str) -> None:
+        tr = self._trace()
+        t0 = tr.clock() if tr is not None else 0.0
         fn = getattr(self, f"_stage_{name}")
         try:
             payload, wall = timed(fn)
-        except StageFailure:
+        except StageFailure as e:
+            if tr is not None:
+                tr.span(name, t0, tr.clock(), "failed", error=str(e))
+                self.result.trace = tr.summary()
             raise
         except Exception as e:  # noqa: BLE001 — record, then propagate
+            if tr is not None:
+                tr.span(name, t0, tr.clock(), "failed", error=repr(e))
+                self.result.trace = tr.summary()
             self.result.record(name, {}, 0.0, status="failed",
                                error=repr(e))
             self.result.save()
@@ -220,6 +335,10 @@ class Offloader:
         error = payload.pop("_error", None)
         if error is not None:
             status = "failed"
+        if tr is not None:
+            tr.span(name, t0, tr.clock(), status,
+                    attrs=_span_attrs(name, payload), error=error)
+            self.result.trace = tr.summary()
         self.result.record(name, payload, wall, status=status, error=error)
         self.result.save()
         if error is not None:
@@ -311,24 +430,78 @@ class Offloader:
         ]
         cache = self._open_cache(evaluator)
         resumed = len(cache) if cache is not None else 0
+        tracer = self._trace()
+        pool: Optional[EvalPool] = None
+
+        def on_generation(gs: ga.GenerationStats) -> None:
+            # per-generation trace event: population shape + the pool's
+            # GenerationTelemetry for this generation. The pool's wall
+            # clock is real time -> "timing" (digest-exempt); everything
+            # else is deterministic data -> "attrs".
+            if tracer is not None:
+                attrs: Dict[str, Any] = {
+                    "generation": int(gs.generation),
+                    "best_time_s": float(gs.best_time_s),
+                    "mean_time_s": float(gs.mean_time_s),
+                    "best_fitness": ga.fitness_of_time(gs.best_time_s),
+                }
+                if gs.times:
+                    med = qual.median(gs.times)
+                    attrs["median_time_s"] = med
+                    attrs["median_fitness"] = ga.fitness_of_time(med)
+                if gs.population is not None:
+                    attrs["allele_entropy"] = round(qual.allele_entropy(
+                        gs.population, params.alleles), 6)
+                timing = None
+                if pool is not None and pool.history:
+                    tel = pool.history[-1]
+                    attrs.update(
+                        submitted=int(tel.submitted),
+                        unique=int(tel.unique),
+                        cache_hits=int(tel.cache_hits),
+                        evaluated=int(tel.evaluated),
+                        timeouts=int(tel.timeouts),
+                        dedup_ratio=round(tel.dedup_ratio, 4),
+                        hit_rate=round(tel.hit_rate, 4),
+                    )
+                    timing = {"wall_s": tel.wall_s}
+                tracer.event("generation", span="search", attrs=attrs,
+                             timing=timing)
+            if self._on_generation is not None:
+                self._on_generation(gs)
+
         try:
             with EvalPool(evaluator, workers=self.spec.workers,
                           executor=self.spec.executor, cache=cache) as pool:
                 res = ga.run_ga(
                     None, n, params, pool=pool,
-                    on_generation=self._on_generation,
+                    on_generation=on_generation,
                     seeds=seeds or None,
                 )
                 tot = pool.totals()
+                telemetry = [t.row() for t in pool.history]
         finally:
             if cache is not None:
                 cache.close()
-        stats_fn = getattr(adapter, "schedule_stats", None)
-        residency = stats_fn(res.best_genes) if stats_fn is not None \
-            else None
+        if res.history:
+            best_genes = [int(g) for g in res.best_genes]
+            best_t: Optional[float] = float(res.best_time_s)
+            placement = adapter.placement(res.best_genes)
+            stats_fn = getattr(adapter, "schedule_stats", None)
+            residency = stats_fn(res.best_genes) if stats_fn is not None \
+                else None
+            last = res.history[-1]
+            final_population = [[int(g) for g in ind]
+                                for ind in (last.population or [])]
+            final_times = [float(t) for t in (last.times or [])]
+        else:
+            # a zero-generation budget evaluates nothing: record an
+            # explicit no-winner search instead of a fake one
+            best_genes, best_t, placement, residency = [], None, {}, None
+            final_population, final_times = [], []
         return {
-            "best_genes": [int(g) for g in res.best_genes],
-            "best_time_s": float(res.best_time_s),
+            "best_genes": best_genes,
+            "best_time_s": best_t,
             **({"residency": residency} if residency is not None else {}),
             "wall_s": float(res.wall_s),
             "evaluations": int(tot.evaluated),
@@ -336,14 +509,20 @@ class Offloader:
             "timeouts": int(tot.timeouts),
             "cache_resumed": int(resumed),
             "evaluator": evaluator_fingerprint(evaluator),
+            "telemetry": telemetry,
+            "final_population": final_population,
+            "final_times_s": final_times,
             "ga": {
                 "population": params.population,
                 "generations": params.generations,
                 "alleles": params.alleles,
+                "allele_names": list(getattr(adapter, "allele_names",
+                                             ()) or ()),
                 "seed": params.seed,
                 "seeded": len(seeds),
+                "diversity": float(params.diversity),
             },
-            "placement": adapter.placement(res.best_genes),
+            "placement": placement,
             "history": [
                 {
                     "generation": h.generation,
@@ -360,6 +539,16 @@ class Offloader:
     def _stage_verify(self) -> Dict[str, Any]:
         adapter = self.adapter
         search = self.result.stage("search").payload
+        if search.get("best_time_s") is None:
+            # zero-generation search: nothing was evaluated, no winner
+            return {
+                "re_measured_s": None,
+                "search_best_s": None,
+                "consistent": True,
+                "note": "search recorded zero generations; "
+                        "no winner to verify",
+                "pcast": {"skipped": "no winner to check"},
+            }
         best = tuple(int(g) for g in search["best_genes"])
         best_t = float(search["best_time_s"])
 
@@ -434,6 +623,33 @@ class Offloader:
             )
         return payload
 
+    def _scale_model(self) -> Callable[[Sequence[int]], float]:
+        """The analytic model of the effective spec's machine AT THE
+        MEASURED SCALE — what fidelity/rank sections compare real wall
+        clocks against (a paper-scale prediction would be off by the
+        problem-size ratio, not by model error)."""
+        from repro.core import evaluator as ev
+        from repro.core import transfer as tr
+
+        spec = self.spec
+        if spec.fidelity == "measured":
+            return self.adapter.model_evaluator()
+        eff = self._effective_spec()
+        scale_prog = programs.measured_scale_program(spec.program)
+        if spec.mode == "mixed":
+            from repro.destinations import MixedEvaluator, get_registry
+
+            return MixedEvaluator(scale_prog, eff.destinations,
+                                  registry=get_registry(eff.hw))
+        method = programs.METHODS[eff.method]
+        return ev.MiniappEvaluator(
+            scale_prog,
+            tr.TransferMode(method["transfer"]),
+            staged=method["staged"],
+            hw=programs.resolve_hw(eff),
+            kernels_only=method["kernels_only"],
+        )
+
     def _fidelity_section(self, best, best_t: float) -> Optional[Dict]:
         """Predicted-vs-measured honesty check of the winner (and the
         all-host baseline), one row per destination involved. Modeled
@@ -449,7 +665,6 @@ class Offloader:
           freshly wall-clocked in-process.
         """
         from repro.core import evaluator as ev
-        from repro.core import transfer as tr
         from repro.offload.spec import MEASURED_PROGRAMS
 
         spec = self.spec
@@ -466,31 +681,15 @@ class Offloader:
         n = adapter.gene_length
         zeros = (0,) * n
         run_fn = programs.MEASURED_RUN_FNS[spec.program]()
+        model = self._scale_model()
 
         if spec.fidelity == "measured":
-            model = adapter.model_evaluator()
             reference = f"model:{adapter.hw.name}"
             meas_host = float(
                 self.result.stage("analyze").payload["baseline_s"]
             )
             meas_win = float(best_t)
         else:  # calibrated
-            scale_prog = programs.measured_scale_program(spec.program)
-            eff = self._effective_spec()
-            if spec.mode == "mixed":
-                from repro.destinations import MixedEvaluator, get_registry
-
-                model = MixedEvaluator(scale_prog, eff.destinations,
-                                       registry=get_registry(eff.hw))
-            else:
-                method = programs.METHODS[eff.method]
-                model = ev.MiniappEvaluator(
-                    scale_prog,
-                    tr.TransferMode(method["transfer"]),
-                    staged=method["staged"],
-                    hw=programs.resolve_hw(eff),
-                    kernels_only=method["kernels_only"],
-                )
             reference = f"calibrated:{self._ensure_calibration().hw_name}"
             m = ev.MeasuredEvaluator(run_fn, repeats=spec.repeats,
                                      tag=run_fn.tag)
@@ -550,13 +749,178 @@ class Offloader:
         }
 
     def _stage_report(self) -> Dict[str, Any]:
-        return {"text": render_report(self.result)}
+        quality = self._quality_section()
+        payload: Dict[str, Any] = {}
+        if quality is not None:
+            payload["quality"] = quality
+        payload["text"] = render_report(self.result, quality=quality)
+        gate = self.spec.ga.stability_gate
+        st = (quality or {}).get("stability") or {}
+        if gate is not None and st.get("rel_spread", 0.0) > gate:
+            payload["_error"] = (
+                f"winner stability gate: relative spread "
+                f"{st['rel_spread']:.1%} across {st['k']} GA seeds exceeds "
+                f"the gate {gate:.1%} (ga.stability_gate)"
+            )
+        return payload
+
+    # -- search-quality metrics (report stage; never feed the search) ------
+
+    def _quality_section(self) -> Optional[Dict[str, Any]]:
+        """pass@k winner stability + modeled-vs-measured rank fidelity
+        (repro.offload.quality), computed in the REPORT stage only: by
+        construction nothing here can perturb the recorded search."""
+        if not self.result.completed("search"):
+            return None
+        search = self.result.stage("search").payload
+        return {
+            "stability": self._stability_section(search),
+            "rank": self._rank_section(search),
+        }
+
+    def _stability_section(self, search: Dict[str, Any]) -> Dict[str, Any]:
+        knobs = self.spec.ga
+        if knobs.stability_seeds <= 1:
+            return {"skipped": "disabled (ga.stability_seeds <= 1)"}
+        if not search.get("history"):
+            return {"skipped": "search recorded zero generations"}
+        if self._evaluator is not None:
+            return {"skipped": "injected evaluator (a re-search could be "
+                               "arbitrarily expensive; call "
+                               "quality.winner_stability directly)"}
+        adapter = self.adapter
+        # re-searches always run the cheap MODELED evaluator: for
+        # fidelity="measured" that is the analytic model at measured
+        # scale, not the wall-clocking run_fn
+        model_fn = getattr(adapter, "model_evaluator", None)
+        evaluator = model_fn() if callable(model_fn) \
+            else self._search_evaluator()
+        fp = evaluator_fingerprint(evaluator)
+        recorded = None
+        if search.get("evaluator") == fp \
+                and search.get("best_time_s") is not None:
+            # the recorded search IS the k=0 member (same evaluator)
+            recorded = (search["best_genes"], search["best_time_s"])
+        n = adapter.gene_length
+        params = self.spec.ga_params(n, adapter.alleles)
+        seeds = [
+            tuple(int(g) for g in s)
+            for s in self.result.stage("seed").payload.get("seeds", [])
+        ]
+        tracer = self._trace()
+
+        def on_search(row: Dict[str, Any]) -> None:
+            if tracer is not None:
+                tracer.event("stability_search", span="report", attrs={
+                    "seed": row["seed"],
+                    "best_time_s": row["best_time_s"],
+                    "evaluations": row["evaluations"],
+                    "cache_hits": row["cache_hits"],
+                })
+
+        st = qual.winner_stability(
+            evaluator, n, params,
+            k=knobs.stability_seeds,
+            window=knobs.stability_window,
+            seeds=seeds or None,
+            workers=self.spec.workers,
+            cache_path=self.spec.cache,
+            recorded=recorded,
+            on_search=on_search,
+        )
+        st["evaluator"] = fp
+        st["reused_recorded"] = recorded is not None
+        return st
+
+    def _rank_section(self, search: Dict[str, Any]) -> Dict[str, Any]:
+        from repro.core import evaluator as ev
+        from repro.offload.spec import MEASURED_PROGRAMS
+
+        spec = self.spec
+        knobs = spec.ga
+        final = search.get("final_population") or []
+        times = search.get("final_times_s") or []
+        if not final:
+            return {"skipped": "no final population recorded "
+                               "(zero generations, or an artifact from "
+                               "before tracing)"}
+        if spec.is_arch or spec.program not in MEASURED_PROGRAMS:
+            return {"skipped": "no runnable implementation to measure "
+                               "against"}
+        if self._evaluator is not None:
+            return {"skipped": "injected evaluator"}
+        if spec.fidelity != "measured" and not knobs.rank_probe:
+            return {"skipped": "rank probe off (ga.rank_probe=false; "
+                               "measured fidelity ranks for free)"}
+        adapter = self.adapter
+        n = adapter.gene_length
+        run_fn = programs.MEASURED_RUN_FNS[spec.program]()
+        model = self._scale_model()
+        pop = [tuple(int(g) for g in ind) for ind in final]
+        modeled = [float(model(g)) for g in pop]
+        tracer = self._trace()
+
+        if spec.fidelity == "measured":
+            # the final generation's times ARE wall clocks — free
+            if len(times) != len(pop):
+                return {"skipped": "final population and times out of "
+                                   "sync in the search payload"}
+            measured = [float(t) for t in times]
+        else:
+            # two wall-clocked projections cover every candidate: the
+            # runnable implementations realize exactly one placement
+            # switch (hot loop on the jit path or not), so measurement
+            # can only ever distinguish those two classes
+            hot = programs.hot_gene_index(spec.program)
+            hot_name = programs.RUNNABLE[spec.program][0]
+            host = "cpu"
+            if spec.mode == "mixed":
+                dests = adapter.build_evaluator().dests
+                accel = next((i for i, d in enumerate(dests)
+                              if d.kind in ("gpu", "tpu")), None)
+            else:
+                accel = 1
+            m = ev.MeasuredEvaluator(run_fn, repeats=spec.repeats,
+                                     tag=run_fn.tag)
+            zeros = (0,) * n
+            t_host = float(m(zeros))
+            if tracer is not None:
+                tracer.event("rank_probe", span="report", attrs={
+                    "projection": "all-host", "evaluations": 1,
+                    "measured_s": t_host,
+                })
+            offloaded = [
+                adapter.placement(g).get(hot_name, host) != host
+                for g in pop
+            ]
+            t_off = None
+            if any(offloaded):
+                on_genome = tuple(
+                    (accel if accel is not None else 1) if i == hot else 0
+                    for i in range(n)
+                )
+                t_off = float(m(on_genome))
+                if tracer is not None:
+                    tracer.event("rank_probe", span="report", attrs={
+                        "projection": "hot-offloaded", "evaluations": 1,
+                        "measured_s": t_off,
+                    })
+            measured = [t_off if off else t_host for off in offloaded]
+        eff = self._effective_spec()
+        return qual.rank_section(
+            modeled, measured,
+            scale=run_fn.tag,
+            reference=f"model:{eff.hw}",
+        )
 
 
-def render_report(result: OffloadResult) -> str:
+def render_report(result: OffloadResult,
+                  quality: Optional[Dict[str, Any]] = None) -> str:
     """Human-readable end-to-end summary from artifact payloads alone
     (used by the report stage AND ``python -m repro.offload report`` on
-    loaded artifacts, partial ones included)."""
+    loaded artifacts, partial ones included). ``quality`` is the
+    search-quality section the report stage just computed; for loaded
+    artifacts it falls back to the recorded report payload."""
     spec = result.spec
     tag = spec.method if spec.mode == "binary" and not spec.is_arch \
         else "+".join(spec.destinations) if spec.mode == "mixed" \
@@ -596,32 +960,39 @@ def render_report(result: OffloadResult) -> str:
             rows.append("seed: random initial population")
     if result.completed("search"):
         p = result.stage("search").payload
-        line = (
-            f"search: best {p['best_time_s']:.4g}s in "
-            f"{p['ga']['generations']} generations "
-            f"({p['evaluations']} measurements, {p['cache_hits']} cache "
-            f"hits, wall {p['wall_s']:.2f}s)"
-        )
-        if result.speedup:
-            line += f"; speedup {result.speedup:.1f}x over all-host"
-        rows.append(line)
-        moved = {u: d for u, d in p["placement"].items()
-                 if d not in ("cpu", "host")}
-        rows.append(f"placement: {len(moved)}/{len(p['placement'])} units "
-                    "offloaded")
-        for u, d in moved.items():
-            rows.append(f"    {u:24s} -> {d}")
-        r = p.get("residency")
-        if r and r.get("capacities"):
-            caps = ", ".join(f"{n} {b/1e6:.0f} MB"
-                             for n, b in sorted(r["capacities"].items()))
-            line = (f"residency: evicted {r['evicted_bytes']/1e6:.1f} MB, "
-                    f"streamed {r['spilled_bytes']/1e6:.1f} MB "
-                    f"under capacities [{caps}]")
-            if r.get("oversubscribed"):
-                line += ("; oversubscribed: "
-                         + ", ".join(r["oversubscribed"]))
+        if p.get("best_time_s") is None:
+            rows.append(
+                "search: no generations run (generations=0 budget); "
+                "nothing evaluated, no winner recorded"
+            )
+        else:
+            line = (
+                f"search: best {p['best_time_s']:.4g}s in "
+                f"{p['ga']['generations']} generations "
+                f"({p['evaluations']} measurements, {p['cache_hits']} cache "
+                f"hits, wall {p['wall_s']:.2f}s)"
+            )
+            if result.speedup:
+                line += f"; speedup {result.speedup:.1f}x over all-host"
             rows.append(line)
+            moved = {u: d for u, d in p["placement"].items()
+                     if d not in ("cpu", "host")}
+            rows.append(f"placement: {len(moved)}/{len(p['placement'])} "
+                        "units offloaded")
+            for u, d in moved.items():
+                rows.append(f"    {u:24s} -> {d}")
+            r = p.get("residency")
+            if r and r.get("capacities"):
+                caps = ", ".join(f"{n} {b/1e6:.0f} MB"
+                                 for n, b in sorted(r["capacities"].items()))
+                line = (f"residency: evicted "
+                        f"{r['evicted_bytes']/1e6:.1f} MB, "
+                        f"streamed {r['spilled_bytes']/1e6:.1f} MB "
+                        f"under capacities [{caps}]")
+                if r.get("oversubscribed"):
+                    line += ("; oversubscribed: "
+                             + ", ".join(r["oversubscribed"]))
+                rows.append(line)
     if "verify" in result.stages:
         v = result.stages["verify"]
         pc = v.payload.get("pcast", {})
@@ -655,4 +1026,37 @@ def render_report(result: OffloadResult) -> str:
                 f"fidelity[{fid['level']} @ {fid['scale']}]: "
                 f"predicted/measured {parts}"
             )
+    q = quality
+    if q is None and "report" in result.stages:
+        q = result.stages["report"].payload.get("quality")
+    if q:
+        st = q.get("stability") or {}
+        if "skipped" in st:
+            rows.append(f"quality: stability skipped ({st['skipped']})")
+        elif st:
+            rows.append(
+                f"quality: winner stability pass@{st['k']} "
+                f"{st['pass_at_k']:.0%} (window {st['window']:.1%}, "
+                f"spread +{st['rel_spread']:.1%}, "
+                f"{st['distinct_winners']} distinct winner(s))"
+            )
+        rk = q.get("rank") or {}
+        if "skipped" in rk:
+            rows.append(f"quality: rank fidelity skipped ({rk['skipped']})")
+        elif rk:
+            if rk.get("spearman") is None:
+                rows.append(
+                    f"quality: rank fidelity undefined over {rk['n']} "
+                    f"final candidates ({rk.get('note', 'degenerate')})"
+                )
+            else:
+                kd = rk.get("kendall")
+                kd_txt = f"{kd:+.2f}" if kd is not None else "n/a"
+                rows.append(
+                    f"quality: rank fidelity spearman "
+                    f"{rk['spearman']:+.2f} / kendall {kd_txt} "
+                    f"over {rk['n']} final candidates vs "
+                    f"{rk.get('reference', 'model')}"
+                    + (f" @ {rk['scale']}" if rk.get("scale") else "")
+                )
     return "\n".join(rows)

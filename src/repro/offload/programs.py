@@ -168,6 +168,10 @@ class MiniappBinaryAdapter:
     def alleles(self) -> int:
         return 2
 
+    @property
+    def allele_names(self) -> Tuple[str, ...]:
+        return ("cpu", "gpu")
+
     def build_evaluator(self) -> ev.MiniappEvaluator:
         return ev.MiniappEvaluator(
             self.prog,
@@ -259,6 +263,10 @@ class MiniappMeasuredAdapter:
     @property
     def alleles(self) -> int:
         return 2
+
+    @property
+    def allele_names(self) -> Tuple[str, ...]:
+        return ("cpu", "gpu")
 
     def build_evaluator(self) -> ev.MeasuredEvaluator:
         return ev.MeasuredEvaluator(
@@ -390,6 +398,10 @@ class MiniappMixedAdapter:
     @property
     def alleles(self) -> int:
         return self._evaluator.k
+
+    @property
+    def allele_names(self) -> Tuple[str, ...]:
+        return self._evaluator.allele_names()
 
     def build_evaluator(self):
         return self._evaluator
@@ -542,6 +554,10 @@ class ArchAdapter:
     @property
     def alleles(self) -> int:
         return 2
+
+    @property
+    def allele_names(self) -> Tuple[str, ...]:
+        return ("cpu", "accel")
 
     def build_evaluator(self) -> ArchPlanEvaluator:
         return ArchPlanEvaluator(self.spec.arch_name)

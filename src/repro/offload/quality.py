@@ -1,0 +1,285 @@
+"""Search-quality metrics: does the search *converge* and does the model
+*discriminate*?
+
+The paper evaluates its GA offload search only by the final speedup it
+finds. That single scalar hides two failure modes this module measures
+(docs/observability.md):
+
+- **winner instability** — the GA is a stochastic search; a different
+  seed may land on a different (worse) placement. :func:`winner_stability`
+  re-runs the *modeled* search across ``k`` seeds (reusing the recorded
+  search for the spec's own seed and sharing the persistent fitness
+  cache, so the extra searches are mostly cache hits) and summarizes
+  them as ``pass@k`` within a relative window, the worst/best spread,
+  and the number of distinct winning genomes. An optional variance gate
+  turns excessive spread into a report-stage failure.
+- **rank infidelity** — PR 5's fidelity section reduced model honesty to
+  one predicted/measured ratio per destination; a model can average out
+  perfectly and still *order* candidates wrongly, which is what the GA
+  actually consumes. :func:`spearman` / :func:`kendall` (tau-b, with tie
+  correction) correlate modeled vs measured fitness over the search's
+  final population.
+
+Population-shape metrics (:func:`allele_entropy`, :func:`median`) feed
+the per-generation trace events in :mod:`repro.offload.trace`.
+
+Everything here is pure math except :func:`winner_stability`, which
+drives :func:`repro.core.ga.run_ga` — it never touches the pipeline, so
+the pipeline can call it for any evaluator it chooses (the modeled one;
+re-running a *measured* search would re-pay real wall-clock).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.core import ga
+from repro.core.evalpool import EvalPool, FitnessCache, evaluator_fingerprint
+
+Genes = Tuple[int, ...]
+
+
+# ---------------------------------------------------------------------------
+# rank statistics (pure; hypothesis-tested in tests/test_quality_properties)
+# ---------------------------------------------------------------------------
+
+
+def ranks(xs: Sequence[float]) -> List[float]:
+    """Fractional (average) ranks, 1-based; ties share their mean rank."""
+    order = sorted(range(len(xs)), key=lambda i: xs[i])
+    out = [0.0] * len(xs)
+    i = 0
+    while i < len(order):
+        j = i
+        while j + 1 < len(order) and xs[order[j + 1]] == xs[order[i]]:
+            j += 1
+        r = (i + j) / 2.0 + 1.0
+        for k in range(i, j + 1):
+            out[order[k]] = r
+        i = j + 1
+    return out
+
+
+def spearman(xs: Sequence[float], ys: Sequence[float]) -> Optional[float]:
+    """Spearman rank correlation (Pearson on fractional ranks, the
+    standard tie handling). ``None`` when undefined: fewer than two
+    pairs, or either side constant (zero rank variance)."""
+    if len(xs) != len(ys):
+        raise ValueError(f"length mismatch: {len(xs)} vs {len(ys)}")
+    n = len(xs)
+    if n < 2:
+        return None
+    rx, ry = ranks(xs), ranks(ys)
+    mx, my = sum(rx) / n, sum(ry) / n
+    sxx = sum((a - mx) ** 2 for a in rx)
+    syy = sum((b - my) ** 2 for b in ry)
+    if sxx == 0.0 or syy == 0.0:
+        return None
+    sxy = sum((a - mx) * (b - my) for a, b in zip(rx, ry))
+    return sxy / math.sqrt(sxx * syy)
+
+
+def kendall(xs: Sequence[float], ys: Sequence[float]) -> Optional[float]:
+    """Kendall rank correlation, tau-b (tie-corrected). ``None`` when
+    undefined (n < 2 or either side constant). O(n^2) — final GA
+    populations are tens of individuals, not millions."""
+    if len(xs) != len(ys):
+        raise ValueError(f"length mismatch: {len(xs)} vs {len(ys)}")
+    n = len(xs)
+    if n < 2:
+        return None
+    concordant = discordant = 0
+    ties_x = ties_y = 0  # pairs tied in x (resp. y), tied-in-both counted in each
+    for i in range(n):
+        for j in range(i + 1, n):
+            dx = xs[i] - xs[j]
+            dy = ys[i] - ys[j]
+            if dx == 0:
+                ties_x += 1
+            if dy == 0:
+                ties_y += 1
+            if dx == 0 or dy == 0:
+                continue
+            if (dx > 0) == (dy > 0):
+                concordant += 1
+            else:
+                discordant += 1
+    n0 = n * (n - 1) // 2
+    denom = math.sqrt((n0 - ties_x) * (n0 - ties_y))
+    if denom == 0.0:
+        return None
+    return (concordant - discordant) / denom
+
+
+def rank_section(
+    modeled: Sequence[float],
+    measured: Sequence[float],
+    *,
+    scale: Optional[str] = None,
+    reference: Optional[str] = None,
+) -> Dict[str, Any]:
+    """The modeled-vs-measured discrimination record the report stage and
+    sweep cells carry: both correlations over one candidate set, plus the
+    distinct-value counts that explain a ``None`` (a side with a single
+    distinct value cannot be ranked)."""
+    out: Dict[str, Any] = {
+        "n": len(modeled),
+        "spearman": spearman(modeled, measured),
+        "kendall": kendall(modeled, measured),
+        "distinct_modeled": len(set(modeled)),
+        "distinct_measured": len(set(measured)),
+    }
+    if scale is not None:
+        out["scale"] = scale
+    if reference is not None:
+        out["reference"] = reference
+    if out["spearman"] is None:
+        out["note"] = (
+            "undefined: fewer than two candidates or a constant side "
+            "(no ranking to correlate)"
+        )
+    return out
+
+
+# ---------------------------------------------------------------------------
+# population-shape metrics (feed the per-generation trace events)
+# ---------------------------------------------------------------------------
+
+
+def median(xs: Sequence[float]) -> float:
+    if not xs:
+        raise ValueError("median of an empty sequence")
+    s = sorted(float(x) for x in xs)
+    mid = len(s) // 2
+    if len(s) % 2:
+        return s[mid]
+    return (s[mid - 1] + s[mid]) / 2.0
+
+
+def allele_entropy(population: Sequence[Sequence[int]], alleles: int) -> float:
+    """Mean per-gene Shannon entropy of the population's allele
+    distribution, normalized by log2(alleles) into [0, 1]: 0 = every
+    gene fixed (converged population), 1 = uniform over all alleles at
+    every gene. Empty populations, empty genomes and single-allele
+    alphabets score 0 (nothing left to vary)."""
+    if not population or alleles < 2:
+        return 0.0
+    n = len(population[0])
+    if n == 0:
+        return 0.0
+    m = len(population)
+    total = 0.0
+    for g in range(n):
+        counts: Dict[int, int] = {}
+        for ind in population:
+            a = int(ind[g])
+            counts[a] = counts.get(a, 0) + 1
+        total -= sum(
+            (c / m) * math.log2(c / m) for c in counts.values() if c
+        )
+    return total / (n * math.log2(alleles))
+
+
+# ---------------------------------------------------------------------------
+# pass@k winner stability
+# ---------------------------------------------------------------------------
+
+
+def stability_metrics(
+    winners: Sequence[Dict[str, Any]], window: float
+) -> Dict[str, Any]:
+    """Summarize per-seed winners as pass@k + spread (pure, testable).
+
+    ``winners`` rows carry at least ``seed``, ``best_time_s`` and
+    ``best_genes``. A seed *passes* when its best time lands within the
+    relative ``window`` of the best seed's best time.
+    """
+    if not winners:
+        raise ValueError("stability_metrics needs at least one winner")
+    if window < 0:
+        raise ValueError(f"window must be >= 0: {window}")
+    times = [float(w["best_time_s"]) for w in winners]
+    best, worst = min(times), max(times)
+    passed = sum(1 for t in times if t <= best * (1.0 + window))
+    return {
+        "k": len(winners),
+        "window": window,
+        "pass_at_k": passed / len(winners),
+        "best_time_s": best,
+        "worst_time_s": worst,
+        "rel_spread": (worst / best - 1.0) if best > 0 else 0.0,
+        "distinct_winners": len(
+            {tuple(int(g) for g in w["best_genes"]) for w in winners}
+        ),
+        "winners": [dict(w) for w in winners],
+    }
+
+
+def winner_stability(
+    evaluator: Callable[[Genes], float],
+    gene_length: int,
+    params: ga.GAParams,
+    *,
+    k: int,
+    window: float,
+    seeds: Optional[Sequence[Genes]] = None,
+    workers: int = 1,
+    cache_path: Optional[str] = None,
+    recorded: Optional[Tuple[Sequence[int], float]] = None,
+    on_search: Optional[Callable[[Dict[str, Any]], None]] = None,
+) -> Dict[str, Any]:
+    """pass@k winner stability: the search at GA seeds ``params.seed ..
+    params.seed + k - 1``, summarized by :func:`stability_metrics`.
+
+    ``recorded`` is the already-run search's ``(best_genes, best_time_s)``
+    for ``params.seed`` itself — reused instead of re-run (pass it only
+    when that search used THIS evaluator). Each re-search opens the
+    persistent ``cache_path`` under the evaluator's fingerprint, so
+    genomes the main search already measured are cache hits. Evaluation
+    runs on a thread pool: the whole point is that the evaluator is the
+    cheap modeled one.
+    """
+    if k < 1:
+        raise ValueError(f"k must be >= 1: {k}")
+    winners: List[Dict[str, Any]] = []
+    for i in range(k):
+        seed = params.seed + i
+        if i == 0 and recorded is not None:
+            genes, t = recorded
+            winners.append({
+                "seed": seed,
+                "best_time_s": float(t),
+                "best_genes": [int(g) for g in genes],
+                "reused": True,
+                "evaluations": 0,
+                "cache_hits": 0,
+            })
+            continue
+        p = dataclasses.replace(params, seed=seed)
+        cache = None
+        if cache_path:
+            cache = FitnessCache(
+                cache_path, fingerprint=evaluator_fingerprint(evaluator)
+            )
+        try:
+            with EvalPool(evaluator, workers=workers, cache=cache) as pool:
+                res = ga.run_ga(
+                    None, gene_length, p, pool=pool, seeds=seeds or None
+                )
+                tot = pool.totals()
+        finally:
+            if cache is not None:
+                cache.close()
+        row = {
+            "seed": seed,
+            "best_time_s": float(res.best_time_s),
+            "best_genes": [int(g) for g in res.best_genes],
+            "reused": False,
+            "evaluations": int(tot.evaluated),
+            "cache_hits": int(tot.cache_hits),
+        }
+        winners.append(row)
+        if on_search is not None:
+            on_search(row)
+    return stability_metrics(winners, window)

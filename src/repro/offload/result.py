@@ -75,6 +75,11 @@ class OffloadResult:
     spec: OffloadSpec
     stages: Dict[str, StageRecord] = dataclasses.field(default_factory=dict)
     path: Optional[str] = None  # where save() writes (None = in-memory)
+    # trace summary ({"path", "digest", "records"}) maintained by the
+    # Offloader when tracing is on: the digest is the trace file's
+    # content digest (timing-stripped; repro.offload.trace), so the
+    # `trace` CLI verb can prove a trace file belongs to this artifact
+    trace: Optional[Dict[str, Any]] = None
 
     # -- stage bookkeeping --------------------------------------------------
 
@@ -111,7 +116,9 @@ class OffloadResult:
     def best_time_s(self) -> Optional[float]:
         if not self.completed("search"):
             return None
-        return float(self.stage("search").payload["best_time_s"])
+        t = self.stage("search").payload["best_time_s"]
+        # a zero-generation search records no winner (best_time_s=None)
+        return float(t) if t is not None else None
 
     @property
     def baseline_time_s(self) -> Optional[float]:
@@ -136,12 +143,15 @@ class OffloadResult:
     # -- persistence --------------------------------------------------------
 
     def to_dict(self) -> Dict[str, Any]:
-        return {
+        out: Dict[str, Any] = {
             "v": _ARTIFACT_VERSION,
             "spec": self.spec.to_dict(),
             "stages": [self.stages[s].to_dict()
                        for s in STAGES if s in self.stages],
         }
+        if self.trace is not None:  # additive: v1 artifacts stay loadable
+            out["trace"] = self.trace
+        return out
 
     def save(self, path: Optional[str] = None) -> Optional[str]:
         """Atomically write the artifact JSON; returns the path written
@@ -160,7 +170,8 @@ class OffloadResult:
             raise ValueError(
                 f"unsupported artifact version {d.get('v')!r} in {path}"
             )
-        out = cls(spec=OffloadSpec.from_dict(d["spec"]), path=path)
+        out = cls(spec=OffloadSpec.from_dict(d["spec"]), path=path,
+                  trace=d.get("trace"))
         for rec in d.get("stages", []):
             sr = StageRecord.from_dict(rec)
             if sr.name in STAGES:

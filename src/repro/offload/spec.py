@@ -69,6 +69,64 @@ _SPEC_VERSION = 1
 
 
 @dataclasses.dataclass(frozen=True)
+class GAControls:
+    """Search-quality knobs (docs/observability.md), nested under
+    ``OffloadSpec.ga``. Every default keeps the search byte-identical to
+    the pre-observability pipeline: ``diversity=0.0`` never enters the
+    fitness-sharing block, and the stability/rank metrics run *after*
+    the search, in the report stage, against the same fitness cache.
+    """
+
+    # fitness-sharing strength (GAParams.diversity): an individual's
+    # roulette fitness is divided by (copies of its genome in the
+    # generation) ** diversity. 0.0 = off, the historical selection.
+    diversity: float = 0.0
+    # pass@k winner stability in the report stage: the modeled search is
+    # re-run at GA seeds seed+1 .. seed+k-1 (the recorded search covers
+    # the spec's own seed), sharing the persistent fitness cache.
+    # <= 1 disables the re-searches.
+    stability_seeds: int = 3
+    # a seed "passes" when its best time lands within this relative
+    # window of the best seed's best
+    stability_window: float = 0.02
+    # when set, the report stage FAILS if the relative spread
+    # (worst/best - 1) across seeds exceeds this gate
+    stability_gate: Optional[float] = None
+    # wall-clock the (at most two) realizable projections of the final
+    # population so modeled/calibrated searches get a modeled-vs-measured
+    # rank correlation too; measured fidelity computes it for free from
+    # the search's own clocks
+    rank_probe: bool = False
+
+    def __post_init__(self):
+        if self.diversity < 0:
+            raise ValueError(f"ga.diversity must be >= 0: {self.diversity}")
+        if self.stability_seeds < 0:
+            raise ValueError(
+                f"ga.stability_seeds must be >= 0: {self.stability_seeds}"
+            )
+        if self.stability_window < 0:
+            raise ValueError(
+                f"ga.stability_window must be >= 0: {self.stability_window}"
+            )
+        if self.stability_gate is not None and self.stability_gate < 0:
+            raise ValueError(
+                f"ga.stability_gate must be >= 0: {self.stability_gate}"
+            )
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "GAControls":
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - known
+        if unknown:
+            raise ValueError(f"unknown GAControls fields {sorted(unknown)}")
+        return cls(**d)
+
+
+@dataclasses.dataclass(frozen=True)
 class OffloadSpec:
     """Declarative input of one end-to-end offload search.
 
@@ -119,8 +177,12 @@ class OffloadSpec:
     # -- verify tolerances (None = repro.core.pcast dtype defaults) --------
     rel_tol: Optional[float] = None
     abs_tol: Optional[float] = None
+    # -- search-quality knobs (docs/observability.md) ----------------------
+    ga: GAControls = dataclasses.field(default_factory=GAControls)
 
     def __post_init__(self):
+        if isinstance(self.ga, dict):  # from_dict round-trip
+            object.__setattr__(self, "ga", GAControls.from_dict(self.ga))
         if self.mode not in MODES:
             raise ValueError(f"mode must be one of {MODES}: {self.mode!r}")
         if self.mode == "binary" and self.method not in METHODS:
@@ -145,6 +207,12 @@ class OffloadSpec:
             )
         if self.repeats < 1:
             raise ValueError(f"repeats must be >= 1: {self.repeats}")
+        if self.population is not None and self.population < 1:
+            raise ValueError(f"population must be >= 1: {self.population}")
+        if self.generations is not None and self.generations < 0:
+            # 0 is allowed: an analyze-only run records an empty search
+            # ("no generations"), which report/verify handle explicitly
+            raise ValueError(f"generations must be >= 0: {self.generations}")
         if self.fidelity == "measured":
             if self.program not in MEASURED_PROGRAMS:
                 raise ValueError(
@@ -201,39 +269,50 @@ class OffloadSpec:
     def ga_params(self, gene_length: int, alleles: int = 2) -> ga.GAParams:
         """Concrete :class:`GAParams` for this spec at a gene length.
 
-        Unset fields resolve to the budget the pre-redesign entry points
-        used, so the facade's searches stay byte-identical to them.
+        Unset (``None``) fields resolve to the budget the pre-redesign
+        entry points used, so the facade's searches stay byte-identical
+        to them; explicit values — including ``generations=0`` — are
+        taken as-is.
         """
         if self.mode == "mixed":
             return ga.GAParams(
-                population=self.population or MIXED_BUDGET[0],
-                generations=self.generations or MIXED_BUDGET[1],
+                population=self.population
+                if self.population is not None else MIXED_BUDGET[0],
+                generations=self.generations
+                if self.generations is not None else MIXED_BUDGET[1],
                 seed=self.seed,
                 timeout_s=self.timeout_s if self.timeout_s is not None
                 else 1e6,
                 penalty_time_s=self.penalty_time_s,
                 alleles=alleles,
+                diversity=self.ga.diversity,
             )
         if self.is_arch:
             return ga.GAParams(
-                population=self.population or min(gene_length, 10),
-                generations=self.generations or min(gene_length, 10),
+                population=self.population
+                if self.population is not None else min(gene_length, 10),
+                generations=self.generations
+                if self.generations is not None else min(gene_length, 10),
                 seed=self.seed,
                 timeout_s=self.timeout_s if self.timeout_s is not None
                 else 1e6,
                 penalty_time_s=self.penalty_time_s,
+                diversity=self.ga.diversity,
             )
         # binary miniapp: the paper rule (fig4/fig5)
         kw: Dict[str, Any] = dict(seed=self.seed,
-                                  penalty_time_s=self.penalty_time_s)
+                                  penalty_time_s=self.penalty_time_s,
+                                  diversity=self.ga.diversity)
         if self.timeout_s is not None:
             kw["timeout_s"] = self.timeout_s
         params = ga.GAParams.for_gene_length(gene_length, **kw)
-        if self.population or self.generations:
+        if self.population is not None or self.generations is not None:
             params = dataclasses.replace(
                 params,
-                population=self.population or params.population,
-                generations=self.generations or params.generations,
+                population=self.population
+                if self.population is not None else params.population,
+                generations=self.generations
+                if self.generations is not None else params.generations,
             )
         return params
 

@@ -61,10 +61,23 @@ from repro.offload.result import (
     StageFailure,
     atomic_json_save,
 )
-from repro.offload.spec import MIXED_SMOKE_BUDGET, MODES, OffloadSpec
+from repro.offload.spec import (
+    GAControls,
+    MEASURED_PROGRAMS,
+    MIXED_SMOKE_BUDGET,
+    MODES,
+    OffloadSpec,
+)
 
 SWEEP_SCHEMA = "repro.offload.sweep"
 SWEEP_SCHEMA_VERSION = 1
+
+# per-POINT schema version (the FILE schema above stays 1 so existing
+# trajectories keep loading). v2 points additionally carry a per-cell
+# "quality" key — the report stage's pass@k winner stability and
+# modeled-vs-measured rank correlation (docs/observability.md) — and
+# append cleanly after v1 points: readers treat a missing "v" as 1.
+SWEEP_POINT_VERSION = 2
 
 # default trajectory file (repo root when invoked from there) and the
 # default per-cell artifact directories; smoke and full matrices get
@@ -226,6 +239,10 @@ def cell_spec(
         kw["warm_start"] = True
         if smoke:
             kw["population"], kw["generations"] = MIXED_SMOKE_BUDGET
+    if cell.program in MEASURED_PROGRAMS:
+        # runnable programs: wall-clock the two winner projections so
+        # every sweep point records modeled-vs-measured rank fidelity
+        kw["ga"] = GAControls(rank_probe=True)
     return OffloadSpec(**kw)
 
 
@@ -244,6 +261,29 @@ def _git_hash() -> Optional[str]:
     except (OSError, subprocess.TimeoutExpired):
         return None
     return out.stdout.strip() or None if out.returncode == 0 else None
+
+
+def _quality_summary(art: Optional[OffloadResult]) -> Optional[Dict]:
+    """Compact per-cell copy of the report stage's quality section
+    (pass@k stability + rank correlation), the v2 trajectory field. A
+    gate-failed report stage still recorded its payload, so its quality
+    numbers surface here too."""
+    if art is None or "report" not in art.stages:
+        return None
+    q = art.stages["report"].payload.get("quality")
+    if not q:
+        return None
+    out: Dict[str, Any] = {}
+    st = q.get("stability") or {}
+    out["stability"] = {"skipped": st["skipped"]} if "skipped" in st else {
+        k: st[k] for k in ("k", "pass_at_k", "rel_spread",
+                           "distinct_winners") if k in st
+    }
+    rk = q.get("rank") or {}
+    out["rank"] = {"skipped": rk["skipped"]} if "skipped" in rk else {
+        k: rk.get(k) for k in ("n", "spearman", "kendall")
+    }
+    return out
 
 
 def _cell_record(
@@ -271,6 +311,7 @@ def _cell_record(
         "speedup": None,
         "search": None,
         "residency": None,
+        "quality": _quality_summary(art),
     }
     if art is None:
         return rec
@@ -395,6 +436,7 @@ def run_sweep(
         else:
             say(f"[{i + 1}/{len(cells)}] {cell.id}: FAILED — {error}")
     return {
+        "v": SWEEP_POINT_VERSION,
         "git": _git_hash(),
         "timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
         "label": label,
@@ -428,12 +470,16 @@ def validate_point(point: Dict[str, Any]) -> None:
     if not isinstance(cells, list):
         problems.append("point 'cells' must be a list")
         cells = []
+    v = point.get("v", 1)  # v1 points predate the "v" key
     for i, c in enumerate(cells):
         problems += [f"cell[{i}] missing key {k!r}" for k in _CELL_KEYS
                      if k not in c]
         if c.get("status") not in ("ok", "failed"):
             problems.append(f"cell[{i}] status must be ok|failed: "
                             f"{c.get('status')!r}")
+        if v >= 2 and "quality" not in c:
+            problems.append(f"cell[{i}] missing key 'quality' "
+                            f"(required for v{v} points)")
     if problems:
         raise ValueError("invalid trajectory point: " + "; ".join(problems))
 
@@ -595,6 +641,24 @@ def render_leaderboard(
                 f"{(c['speedup'] or 0.0):7.1f}x "
                 f"{_delta_text(prev_by_id.get(c['id']), c):>8s}"
             )
+    quality_lines = []
+    for c in ok:
+        q = c.get("quality") or {}
+        st = q.get("stability") or {}
+        rk = q.get("rank") or {}
+        parts = []
+        if "pass_at_k" in st:
+            parts.append(f"pass@{st['k']} {st['pass_at_k']:.0%} "
+                         f"(spread +{st['rel_spread']:.1%}, "
+                         f"{st['distinct_winners']} winners)")
+        if rk.get("spearman") is not None:
+            parts.append(f"spearman {rk['spearman']:+.2f} "
+                         f"over {rk['n']}")
+        if parts:
+            quality_lines.append(f"  {c['id']}: " + ", ".join(parts))
+    if quality_lines:
+        rows.append("search quality (v2 points; docs/observability.md):")
+        rows.extend(quality_lines)
     failed = [c for c in point["cells"] if c["status"] == "failed"]
     for c in failed:
         rows.append(f"FAILED {c['id']}: {c.get('error')}")

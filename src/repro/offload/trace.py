@@ -1,0 +1,471 @@
+"""Structured pipeline tracing: a schema-versioned JSONL trace per run.
+
+Every :class:`~repro.offload.pipeline.Offloader` stage emits one **span**
+record (name, status, injected-clock start/end, deterministic attrs) and
+the search stage additionally emits one **event** per generation carrying
+the :class:`~repro.core.evalpool.GenerationTelemetry` row (cache
+hits/misses, dedup, timeouts, eval wall-clock) plus population stats
+(best/median fitness, allele entropy). The report stage's quality work
+(stability re-searches, rank-probe measurements) events its budget too,
+so the trace attributes *every* measurement the pipeline paid for.
+
+Design rules (docs/observability.md):
+
+- **one JSONL file next to the artifact** (``<artifact>.trace.jsonl`` by
+  default, :func:`default_trace_path`), append-only: a resumed pipeline
+  appends a fresh ``run`` header and keeps going, so the trace is the
+  full biography of the artifact, restarts included;
+- **schema-versioned**: every ``run`` header carries
+  ``schema=repro.offload.trace, v=1``; :func:`load_trace` validates
+  structure and refuses foreign versions;
+- **deterministic modulo the injected clock**: all timestamps come from
+  the writer's ``clock`` callable (default ``time.perf_counter``) and
+  live only under the keys :data:`TIMING_KEYS`; the **content digest**
+  (sha256 over :func:`strip_timing`-stripped canonical JSON) therefore
+  never depends on wall time — two identical modeled runs produce the
+  same digest, which the artifact embeds (``OffloadResult.trace``) so
+  ``python -m repro.offload trace`` can prove a trace file belongs to
+  its artifact.
+
+Record shapes (field tables in docs/observability.md)::
+
+    {"seq": 0, "kind": "run",   "schema": ..., "v": 1, "ts": ...,
+     "program": ..., "mode": ..., "fidelity": ..., "spec_digest": ...,
+     "resumed": ...}
+    {"seq": n, "kind": "span",  "name": "<stage>", "status": ...,
+     "t0": ..., "t1": ..., "attrs": {...}, "error": ...?}
+    {"seq": n, "kind": "event", "name": ..., "span": "<stage>",
+     "ts": ..., "attrs": {...}, "timing": {...}?}
+
+``attrs`` hold deterministic *data* (for measured-fidelity runs, real
+wall clocks ARE data — they enter the digest like any other result);
+``timing`` holds clock-derived bookkeeping that must not (generation
+wall seconds, for example) and is stripped with the timestamps.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import re
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+TRACE_SCHEMA = "repro.offload.trace"
+TRACE_VERSION = 1
+
+# keys excluded from the content digest: everything derived from the
+# writer's clock. "ts"/"t0"/"t1" are timestamps; "timing" is a sub-dict
+# for clock-derived payloads (e.g. a generation's eval wall seconds).
+TIMING_KEYS = ("ts", "t0", "t1", "timing")
+
+_KINDS = ("run", "span", "event")
+
+# the share of a search's fresh measurements the budget-attribution
+# renderer localizes to a leading generation prefix ("this search spent
+# 71% of its measurements in generations 0-3")
+_CONCENTRATION = 2.0 / 3.0
+
+
+class TraceError(ValueError):
+    """A trace file failed validation (corrupt line, bad seq, foreign
+    schema/version)."""
+
+
+def default_trace_path(artifact_path: str) -> str:
+    """``<artifact minus .json>.trace.jsonl``, next to the artifact."""
+    return re.sub(r"\.json$", "", artifact_path) + ".trace.jsonl"
+
+
+def strip_timing(rec: Dict[str, Any]) -> Dict[str, Any]:
+    """The record without its clock-derived keys (what the digest sees)."""
+    return {k: v for k, v in rec.items() if k not in TIMING_KEYS}
+
+
+def _canonical(rec: Dict[str, Any]) -> str:
+    return json.dumps(rec, sort_keys=True, separators=(",", ":"))
+
+
+def trace_digest(records: List[Dict[str, Any]]) -> str:
+    """sha256 over the timing-stripped canonical JSON of every record —
+    the digest the artifact embeds and the CLI re-checks."""
+    h = hashlib.sha256()
+    for rec in records:
+        h.update((_canonical(strip_timing(rec)) + "\n").encode("utf-8"))
+    return h.hexdigest()
+
+
+class TraceWriter:
+    """Append-only JSONL trace writer with an injected clock.
+
+    Construction replays an existing file (a resumed pipeline continues
+    the sequence numbers and the incremental digest); the file handle
+    opens lazily on the first write and every record is flushed, so a
+    killed run leaves at worst one truncated trailing line — which
+    :func:`load_trace` rejects loudly rather than skipping.
+    """
+
+    def __init__(
+        self,
+        path: str,
+        clock: Optional[Callable[[], float]] = None,
+    ):
+        self.path = path
+        self.clock: Callable[[], float] = clock or time.perf_counter
+        self.records = 0
+        self._hash = hashlib.sha256()
+        self._fh = None
+        if os.path.exists(path):
+            for rec in _read_records(path):
+                self._absorb(rec)
+
+    def _absorb(self, rec: Dict[str, Any]) -> None:
+        self._hash.update(
+            (_canonical(strip_timing(rec)) + "\n").encode("utf-8")
+        )
+        self.records += 1
+
+    def write(self, rec: Dict[str, Any]) -> None:
+        rec = {"seq": self.records, **rec}
+        if self._fh is None:
+            d = os.path.dirname(os.path.abspath(self.path))
+            os.makedirs(d, exist_ok=True)
+            self._fh = open(self.path, "a", encoding="utf-8")
+        self._fh.write(json.dumps(rec, sort_keys=True) + "\n")
+        self._fh.flush()
+        self._absorb(rec)
+
+    def run_header(
+        self,
+        *,
+        program: str,
+        mode: str,
+        fidelity: str,
+        spec_digest: str,
+        resumed: bool,
+    ) -> None:
+        self.write({
+            "kind": "run",
+            "schema": TRACE_SCHEMA,
+            "v": TRACE_VERSION,
+            "ts": self.clock(),
+            "program": program,
+            "mode": mode,
+            "fidelity": fidelity,
+            "spec_digest": spec_digest,
+            "resumed": bool(resumed),
+        })
+
+    def span(
+        self,
+        name: str,
+        t0: float,
+        t1: float,
+        status: str,
+        attrs: Optional[Dict[str, Any]] = None,
+        error: Optional[str] = None,
+    ) -> None:
+        rec: Dict[str, Any] = {
+            "kind": "span",
+            "name": name,
+            "status": status,
+            "t0": t0,
+            "t1": t1,
+            "attrs": attrs or {},
+        }
+        if error is not None:
+            rec["error"] = error
+        self.write(rec)
+
+    def event(
+        self,
+        name: str,
+        *,
+        span: str,
+        attrs: Optional[Dict[str, Any]] = None,
+        timing: Optional[Dict[str, float]] = None,
+    ) -> None:
+        rec: Dict[str, Any] = {
+            "kind": "event",
+            "name": name,
+            "span": span,
+            "ts": self.clock(),
+            "attrs": attrs or {},
+        }
+        if timing:
+            rec["timing"] = {k: float(v) for k, v in timing.items()}
+        self.write(rec)
+
+    def digest(self) -> str:
+        return self._hash.hexdigest()
+
+    def summary(self) -> Dict[str, Any]:
+        """What the artifact embeds (``OffloadResult.trace``)."""
+        return {
+            "path": os.path.basename(self.path),
+            "digest": self.digest(),
+            "records": self.records,
+        }
+
+    def close(self) -> None:
+        if self._fh is not None:
+            self._fh.close()
+            self._fh = None
+
+    def __enter__(self) -> "TraceWriter":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+# ---------------------------------------------------------------------------
+# loading + validation
+# ---------------------------------------------------------------------------
+
+
+def _read_records(path: str) -> List[Dict[str, Any]]:
+    out: List[Dict[str, Any]] = []
+    with open(path, "r", encoding="utf-8") as fh:
+        for lineno, line in enumerate(fh, 1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                rec = json.loads(line)
+            except (json.JSONDecodeError, ValueError) as e:
+                raise TraceError(
+                    f"{path}:{lineno}: not valid JSON ({e})"
+                ) from e
+            if not isinstance(rec, dict):
+                raise TraceError(f"{path}:{lineno}: record is not an object")
+            out.append(rec)
+    return out
+
+
+@dataclasses.dataclass
+class Trace:
+    """A loaded, validated trace: the records of one artifact's runs."""
+
+    path: str
+    records: List[Dict[str, Any]]
+
+    @property
+    def digest(self) -> str:
+        return trace_digest(self.records)
+
+    def spans(self) -> List[Dict[str, Any]]:
+        return [r for r in self.records if r["kind"] == "span"]
+
+    def events(self, span: Optional[str] = None) -> List[Dict[str, Any]]:
+        return [
+            r for r in self.records
+            if r["kind"] == "event" and (span is None or r["span"] == span)
+        ]
+
+
+def load_trace(path: str) -> Trace:
+    """Read + validate a trace file. Raises :class:`TraceError` on any
+    malformed line, sequence gap, unknown kind, or a ``run`` header with
+    a foreign schema/version — a trace either validates whole or not at
+    all (it is evidence, not best-effort telemetry)."""
+    records = _read_records(path)
+    if not records:
+        raise TraceError(f"{path}: empty trace")
+    for i, rec in enumerate(records):
+        if rec.get("seq") != i:
+            raise TraceError(
+                f"{path}: record {i} has seq {rec.get('seq')!r} "
+                f"(expected {i}; truncated or interleaved writers?)"
+            )
+        kind = rec.get("kind")
+        if kind not in _KINDS:
+            raise TraceError(f"{path}: record {i} has unknown kind {kind!r}")
+        if kind == "run":
+            if rec.get("schema") != TRACE_SCHEMA or \
+                    rec.get("v") != TRACE_VERSION:
+                raise TraceError(
+                    f"{path}: record {i} is not a {TRACE_SCHEMA}/v"
+                    f"{TRACE_VERSION} run header (schema="
+                    f"{rec.get('schema')!r}, v={rec.get('v')!r})"
+                )
+        if kind == "span" and not isinstance(rec.get("name"), str):
+            raise TraceError(f"{path}: span record {i} has no name")
+        if kind == "event" and not isinstance(rec.get("span"), str):
+            raise TraceError(f"{path}: event record {i} names no span")
+    if records[0].get("kind") != "run":
+        raise TraceError(f"{path}: first record must be a run header")
+    return Trace(path=path, records=records)
+
+
+# ---------------------------------------------------------------------------
+# rendering: tree + budget attribution
+# ---------------------------------------------------------------------------
+
+
+def _span_measurements(span: Dict[str, Any],
+                       events: List[Dict[str, Any]]) -> int:
+    """Fresh measurements attributable to one span: the span's own
+    ``evaluations`` attr when it carries one (the search span totals its
+    generations), else the sum over its events (the report span's
+    stability re-searches and rank probes)."""
+    n = span.get("attrs", {}).get("evaluations")
+    if n is not None:
+        return int(n)
+    return sum(
+        int(e.get("attrs", {}).get(
+            "evaluated", e.get("attrs", {}).get("evaluations", 0)
+        ))
+        for e in events
+    )
+
+
+def _concentration_line(gen_events: List[Dict[str, Any]]) -> Optional[str]:
+    """The smallest leading generation prefix holding at least
+    :data:`_CONCENTRATION` of the search's fresh measurements."""
+    per_gen = [int(e.get("attrs", {}).get("evaluated", 0))
+               for e in gen_events]
+    total = sum(per_gen)
+    if total <= 0:
+        return None
+    acc = 0
+    for g, n in enumerate(per_gen):
+        acc += n
+        if acc >= _CONCENTRATION * total:
+            pct = 100.0 * acc / total
+            span_txt = f"generations 0-{g}" if g else "generation 0"
+            return (
+                f"measurement concentration: this search spent "
+                f"{pct:.0f}% of its measurements in {span_txt} "
+                f"({acc}/{total})"
+            )
+    return None
+
+
+def render_trace(trace: Trace, artifact=None) -> str:
+    """Tree view of the trace plus the per-stage budget-attribution
+    table. ``artifact`` (an ``OffloadResult``) adds the embedded-digest
+    verdict line when it carries one."""
+    rows: List[str] = []
+    runs = [r for r in trace.records if r["kind"] == "run"]
+    head = runs[0]
+    rows.append(
+        f"== repro.offload trace: {head.get('program')} "
+        f"[{head.get('mode')}/{head.get('fidelity')}] — "
+        f"{len(trace.records)} records, {len(runs)} run(s), "
+        f"digest {trace.digest[:12]} =="
+    )
+
+    spans = trace.spans()
+    # nest events under the LAST span of their stage only — a resumed
+    # pipeline may record a failed span and a later done one, but the
+    # events belong to the trace, not to each span line
+    last_span_idx: Dict[str, int] = {}
+    for i, rec in enumerate(trace.records):
+        if rec["kind"] == "span":
+            last_span_idx[rec["name"]] = i
+    run_no = 0
+    for i, rec in enumerate(trace.records):
+        if rec["kind"] == "run":
+            run_no += 1
+            rows.append(
+                f"run {run_no} ({'resumed' if rec.get('resumed') else 'fresh'}"
+                f", spec {str(rec.get('spec_digest'))[:12]})"
+            )
+        elif rec["kind"] == "span":
+            dur = float(rec["t1"]) - float(rec["t0"])
+            attrs = rec.get("attrs", {})
+            extra = ", ".join(
+                f"{k}={_short(v)}" for k, v in sorted(attrs.items())
+            )
+            line = (f"├─ {rec['name']:9s} {rec['status']:6s} "
+                    f"{dur:8.3f}s")
+            if extra:
+                line += f"  {extra}"
+            if rec.get("error"):
+                line += f"  !! {rec['error']}"
+            rows.append(line)
+            if rec["name"] == "search" and last_span_idx["search"] == i:
+                for e in trace.events("search"):
+                    a = e.get("attrs", {})
+                    if e.get("name") != "generation":
+                        continue
+                    rows.append(
+                        f"│    gen {a.get('generation', '?'):>3}: "
+                        f"best {a.get('best_time_s', float('nan')):.4g}s  "
+                        f"evaluated {a.get('evaluated', 0):>3}  "
+                        f"hits {a.get('cache_hits', 0):>3}  "
+                        f"entropy {a.get('allele_entropy', 0.0):.3f}"
+                    )
+            if rec["name"] == "report" and last_span_idx["report"] == i:
+                for e in trace.events("report"):
+                    a = e.get("attrs", {})
+                    if e.get("name") == "stability_search":
+                        rows.append(
+                            f"│    stability seed {a.get('seed')}: best "
+                            f"{a.get('best_time_s', float('nan')):.4g}s "
+                            f"({a.get('evaluations', 0)} measurements, "
+                            f"{a.get('cache_hits', 0)} cache hits)"
+                        )
+                    elif e.get("name") == "rank_probe":
+                        rows.append(
+                            f"│    rank probe {a.get('projection')}: "
+                            f"measured "
+                            f"{a.get('measured_s', float('nan')):.4g}s"
+                        )
+
+    # budget attribution: wall + fresh measurements per stage (summed
+    # over runs — a resumed pipeline's stages add up)
+    by_stage: Dict[str, Dict[str, float]] = {}
+    order: List[str] = []
+    for s in spans:
+        st = by_stage.setdefault(s["name"], {"wall_s": 0.0, "meas": 0,
+                                             "counted": False})
+        if s["name"] not in order:
+            order.append(s["name"])
+        st["wall_s"] += float(s["t1"]) - float(s["t0"])
+        n = s.get("attrs", {}).get("evaluations")
+        if n is not None:
+            st["meas"] += int(n)
+            st["counted"] = True
+    for name in order:
+        st = by_stage[name]
+        if not st["counted"]:
+            # no span-level total: attribute the stage's events (the
+            # report span's stability re-searches and rank probes),
+            # counted once per stage however many spans recorded
+            st["meas"] += _span_measurements({}, trace.events(name))
+    total_wall = sum(st["wall_s"] for st in by_stage.values())
+    total_meas = sum(st["meas"] for st in by_stage.values())
+    rows.append("budget attribution:")
+    rows.append(f"  {'stage':9s} {'wall_s':>9s} {'share':>6s} "
+                f"{'measurements':>13s} {'share':>6s}")
+    for name in order:
+        st = by_stage[name]
+        w_share = st["wall_s"] / total_wall if total_wall > 0 else 0.0
+        m_share = st["meas"] / total_meas if total_meas > 0 else 0.0
+        rows.append(
+            f"  {name:9s} {st['wall_s']:9.3f} {w_share:6.0%} "
+            f"{int(st['meas']):13d} {m_share:6.0%}"
+        )
+    conc = _concentration_line(
+        [e for e in trace.events("search") if e.get("name") == "generation"]
+    )
+    if conc:
+        rows.append(conc)
+
+    if artifact is not None and getattr(artifact, "trace", None):
+        embedded = artifact.trace.get("digest")
+        verdict = "matches" if embedded == trace.digest else "MISMATCH"
+        rows.append(
+            f"artifact digest: {str(embedded)[:12]} — {verdict}"
+        )
+    return "\n".join(rows)
+
+
+def _short(v: Any) -> str:
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    s = str(v)
+    return s if len(s) <= 24 else s[:21] + "..."

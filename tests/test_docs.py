@@ -14,13 +14,28 @@ import check_docs  # noqa: E402
 
 def test_docs_suite_exists():
     for name in ("architecture.md", "destinations.md", "pipeline.md",
-                 "benchmarks.md"):
+                 "benchmarks.md", "observability.md"):
         assert (REPO / "docs" / name).is_file(), name
     # README points into the suite
     readme = (REPO / "README.md").read_text(encoding="utf-8")
     assert "docs/pipeline.md" in readme
     assert "docs/architecture.md" in readme
     assert "docs/benchmarks.md" in readme
+    assert "docs/observability.md" in readme
+
+
+def test_observability_doc_is_cross_linked_and_complete():
+    """docs/observability.md documents the trace schema and the quality
+    metrics, and the rest of the suite points at it."""
+    obs = (REPO / "docs" / "observability.md").read_text(encoding="utf-8")
+    for required in ("trace.jsonl", "digest", "pass@k", "spearman",
+                     "kendall", "allele entropy", "budget",
+                     "ga.diversity"):
+        assert required.lower() in obs.lower(), required
+    for doc in ("architecture.md", "pipeline.md", "benchmarks.md"):
+        text = (REPO / "docs" / doc).read_text(encoding="utf-8")
+        assert "observability.md" in text, \
+            f"{doc} must link observability.md"
 
 
 def test_benchmarks_doc_is_cross_linked_and_complete():
@@ -50,8 +65,8 @@ def test_cli_verbs_document_exit_codes(capsys):
     its --help epilog, from the one EXIT_CODES table."""
     from repro.offload.__main__ import EXIT_CODES, main
 
-    assert set(EXIT_CODES) == {"run", "resume", "report", "calibrate",
-                               "sweep"}
+    assert set(EXIT_CODES) == {"run", "resume", "report", "trace",
+                               "calibrate", "sweep"}
     for verb, codes in EXIT_CODES.items():
         assert codes[0][0] == 0, f"{verb} must document success"
         assert any(c == 2 for c, _ in codes), \

@@ -1,0 +1,246 @@
+"""Property tests for the pure quality math in repro/offload/quality.py:
+rank correlations (Spearman, Kendall tau-b) and allele entropy, at the
+edges the report stage actually hits — ties, constant populations,
+single-element inputs.
+
+Runs under hypothesis when available; the container image may not ship
+it, so a deterministic seeded-case fallback drives the same property
+checkers either way (no new dependencies — the ISSUE's constraint).
+"""
+import math
+import random
+
+import pytest
+
+from repro.offload import quality as qual
+
+try:  # hypothesis is optional; the fallback below covers its absence
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - depends on the environment
+    HAVE_HYPOTHESIS = False
+
+
+# ---------------------------------------------------------------------------
+# property checkers (shared by the hypothesis and fallback drivers)
+# ---------------------------------------------------------------------------
+
+
+def check_rank_properties(xs, ys):
+    """Every property that must hold for ANY equal-length float pair."""
+    n = len(xs)
+    # ranks: a permutation-average of 1..n — bounded, fixed sum
+    r = qual.ranks(xs)
+    assert len(r) == n
+    if n:
+        assert min(r) >= 1.0 and max(r) <= n
+        assert math.isclose(sum(r), n * (n + 1) / 2.0)
+    for fn in (qual.spearman, qual.kendall):
+        c = fn(xs, ys)
+        if n < 2:
+            assert c is None
+            continue
+        if c is not None:
+            assert -1.0 - 1e-9 <= c <= 1.0 + 1e-9, (fn.__name__, c)
+        # symmetry: correlation(x, y) == correlation(y, x)
+        c2 = fn(ys, xs)
+        if c is None:
+            assert c2 is None
+        else:
+            assert math.isclose(c, c2, abs_tol=1e-12)
+    # constant sides are never rankable
+    if n >= 2:
+        assert qual.spearman(xs, [1.0] * n) is None
+        assert qual.kendall([0.0] * n, ys) is None
+
+
+def check_monotone_properties(xs):
+    """Strictly increasing distinct values: perfect agreement with
+    themselves, perfect disagreement with their negation."""
+    if len(xs) < 2:
+        return
+    neg = [-x for x in xs]
+    for fn in (qual.spearman, qual.kendall):
+        assert math.isclose(fn(xs, list(xs)), 1.0, abs_tol=1e-12)
+        assert math.isclose(fn(xs, neg), -1.0, abs_tol=1e-12)
+
+
+def check_entropy_properties(population, alleles):
+    e = qual.allele_entropy(population, alleles)
+    assert 0.0 <= e <= 1.0 + 1e-9, e
+    if population:
+        # a converged population (one genome repeated) has zero entropy
+        converged = [tuple(population[0])] * len(population)
+        assert qual.allele_entropy(converged, alleles) == 0.0
+    # permutation invariance: entropy is a population-level statistic
+    if len(population) > 1:
+        rev = list(reversed(population))
+        assert math.isclose(qual.allele_entropy(rev, alleles), e,
+                            abs_tol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# drivers
+# ---------------------------------------------------------------------------
+
+
+def _fallback_float_pairs(n_cases=200):
+    rng = random.Random(0xC0FFEE)
+    cases = [([], []), ([1.0], [2.0]), ([1.0, 1.0], [2.0, 3.0])]
+    for _ in range(n_cases):
+        n = rng.randrange(0, 12)
+        # coarse grid -> plenty of ties
+        xs = [rng.choice([-2.0, -1.0, 0.0, 0.5, 1.0, 3.0]) for _ in range(n)]
+        ys = [rng.choice([-2.0, -1.0, 0.0, 0.5, 1.0, 3.0]) for _ in range(n)]
+        cases.append((xs, ys))
+    return cases
+
+
+def _fallback_populations(n_cases=200):
+    rng = random.Random(0xBEEF)
+    cases = [([], 2), ([()], 2), ([(0,)], 1), ([(0, 1), (1, 0)], 2)]
+    for _ in range(n_cases):
+        alleles = rng.randrange(1, 5)
+        genes = rng.randrange(0, 6)
+        m = rng.randrange(1, 8)
+        pop = [tuple(rng.randrange(alleles) for _ in range(genes))
+               for _ in range(m)]
+        cases.append((pop, alleles))
+    return cases
+
+
+if HAVE_HYPOTHESIS:
+    floats = st.floats(allow_nan=False, allow_infinity=False,
+                       min_value=-1e6, max_value=1e6)
+
+    @settings(max_examples=200, deadline=None)
+    @given(st.integers(0, 12).flatmap(
+        lambda n: st.tuples(
+            st.lists(floats, min_size=n, max_size=n),
+            st.lists(floats, min_size=n, max_size=n),
+        )
+    ))
+    def test_rank_properties(pair):
+        check_rank_properties(*pair)
+
+    @settings(max_examples=100, deadline=None)
+    @given(st.lists(st.integers(-1000, 1000), min_size=2, max_size=10,
+                    unique=True))
+    def test_monotone_extremes(values):
+        check_monotone_properties(sorted(float(v) for v in values))
+
+    @settings(max_examples=200, deadline=None)
+    @given(
+        st.integers(1, 4).flatmap(
+            lambda k: st.tuples(
+                st.integers(0, 5).flatmap(
+                    lambda g: st.lists(
+                        st.lists(st.integers(0, k - 1),
+                                 min_size=g, max_size=g).map(tuple),
+                        min_size=0, max_size=8,
+                    )
+                ),
+                st.just(k),
+            )
+        )
+    )
+    def test_entropy_properties(case):
+        check_entropy_properties(*case)
+
+else:
+
+    @pytest.mark.parametrize("xs,ys", _fallback_float_pairs())
+    def test_rank_properties(xs, ys):
+        check_rank_properties(xs, ys)
+
+    @pytest.mark.parametrize("xs", [
+        [0.0, 1.0], [-3.0, -1.0, 2.0, 7.0], [1.0, 2.0, 3.0, 4.0, 5.0],
+        [float(v) for v in range(-5, 6)],
+    ])
+    def test_monotone_extremes(xs):
+        check_monotone_properties(xs)
+
+    @pytest.mark.parametrize("pop,alleles", _fallback_populations())
+    def test_entropy_properties(pop, alleles):
+        check_entropy_properties(pop, alleles)
+
+
+# ---------------------------------------------------------------------------
+# pinned edge cases (identical under either driver)
+# ---------------------------------------------------------------------------
+
+
+def test_length_mismatch_raises():
+    with pytest.raises(ValueError):
+        qual.spearman([1.0], [1.0, 2.0])
+    with pytest.raises(ValueError):
+        qual.kendall([1.0, 2.0], [1.0])
+
+
+def test_single_element_and_empty_are_undefined():
+    for fn in (qual.spearman, qual.kendall):
+        assert fn([], []) is None
+        assert fn([3.0], [4.0]) is None
+
+
+def test_ties_tau_b_known_value():
+    # x has one tied pair; tau-b corrects the denominator for it:
+    # pairs = 6, concordant = 5, discordant = 0, ties_x = 1
+    # tau-b = 5 / sqrt((6-1) * 6) ~ 0.9129
+    xs = [1.0, 2.0, 2.0, 3.0]
+    ys = [1.0, 2.0, 3.0, 4.0]
+    assert math.isclose(qual.kendall(xs, ys),
+                        5.0 / math.sqrt(30.0), abs_tol=1e-12)
+
+
+def test_entropy_extremes():
+    # uniform over both alleles at every gene -> exactly 1
+    assert qual.allele_entropy([(0, 0), (1, 1)], 2) == pytest.approx(1.0)
+    # converged -> exactly 0; degenerate alphabets/populations -> 0
+    assert qual.allele_entropy([(1, 1), (1, 1)], 2) == 0.0
+    assert qual.allele_entropy([], 2) == 0.0
+    assert qual.allele_entropy([(0,), (0,)], 1) == 0.0
+    assert qual.allele_entropy([()], 2) == 0.0
+    # a single individual has nothing to vary
+    assert qual.allele_entropy([(0, 1, 0)], 2) == 0.0
+
+
+def test_median():
+    assert qual.median([3.0]) == 3.0
+    assert qual.median([4.0, 1.0, 3.0]) == 3.0
+    assert qual.median([1.0, 2.0, 3.0, 4.0]) == 2.5
+    with pytest.raises(ValueError):
+        qual.median([])
+
+
+def test_stability_metrics_window_edges():
+    winners = [
+        {"seed": 0, "best_time_s": 1.0, "best_genes": [0, 1]},
+        {"seed": 1, "best_time_s": 1.02, "best_genes": [0, 1]},
+        {"seed": 2, "best_time_s": 1.5, "best_genes": [1, 1]},
+    ]
+    m = qual.stability_metrics(winners, window=0.02)
+    # exactly at the window edge still passes (<=)
+    assert m["pass_at_k"] == pytest.approx(2 / 3)
+    assert m["k"] == 3
+    assert m["best_time_s"] == 1.0
+    assert m["worst_time_s"] == 1.5
+    assert m["rel_spread"] == pytest.approx(0.5)
+    assert m["distinct_winners"] == 2
+    with pytest.raises(ValueError):
+        qual.stability_metrics([], window=0.02)
+    with pytest.raises(ValueError):
+        qual.stability_metrics(winners, window=-0.1)
+
+
+def test_rank_section_notes_degenerate_sides():
+    sec = qual.rank_section([1.0, 1.0], [2.0, 3.0])
+    assert sec["spearman"] is None and "note" in sec
+    assert sec["distinct_modeled"] == 1
+    sec = qual.rank_section([1.0, 2.0, 3.0], [10.0, 20.0, 30.0],
+                            scale="small", reference="model:hw")
+    assert sec["spearman"] == pytest.approx(1.0)
+    assert sec["kendall"] == pytest.approx(1.0)
+    assert sec["scale"] == "small" and sec["reference"] == "model:hw"

@@ -132,6 +132,47 @@ def test_append_rejects_invalid_point(tmp_path):
     assert not (tmp_path / "BENCH_sweep.json").exists()  # nothing written
 
 
+def test_v2_point_appends_after_v1_points(tmp_path):
+    """ISSUE 7: the point schema grew a "v" marker and per-cell search
+    quality; v2 points must append cleanly after pre-existing v1 points,
+    and each version validates by its own rules."""
+    path = str(tmp_path / "BENCH_sweep.json")
+    v1 = _point({CID_A: 1.0}, ts="2026-01-01T00:00:00Z")
+    assert "v" not in v1  # fabricated exactly like the committed history
+    sw.append_point(path, v1)
+
+    v2 = _point({CID_A: 0.9}, ts="2026-01-02T00:00:00Z")
+    v2["v"] = sw.SWEEP_POINT_VERSION
+    for c in v2["cells"]:
+        c["quality"] = {"stability": {"k": 3, "pass_at_k": 1.0,
+                                      "rel_spread": 0.009,
+                                      "distinct_winners": 2},
+                        "rank": {"skipped": "rank_probe disabled"}}
+    traj = sw.append_point(path, v2)
+    assert traj.points == [v1, v2]
+    # the file-level schema version did not move — old readers still load
+    d = json.loads((tmp_path / "BENCH_sweep.json").read_text())
+    assert d["v"] == sw.SWEEP_SCHEMA_VERSION == 1
+
+    # a v2 point without per-cell quality is invalid...
+    bad = _point({CID_A: 0.8})
+    bad["v"] = 2
+    with pytest.raises(ValueError, match="quality"):
+        sw.validate_point(bad)
+    # ...but the same shape as an (implicit) v1 point stays valid
+    sw.validate_point(_point({CID_A: 0.8}))
+
+
+def test_run_sweep_emits_v2_points_with_quality(tmp_path):
+    cell = sw.SweepCell("himeno", "quadro-p4000", "binary")
+    p = sw.run_sweep([cell], out_dir=str(tmp_path / "sweep"), smoke=True)
+    assert p["v"] == sw.SWEEP_POINT_VERSION == 2
+    q = p["cells"][0]["quality"]
+    assert q is not None
+    assert q["stability"]["k"] >= 2 and 0.0 <= q["stability"]["pass_at_k"] <= 1.0
+    sw.validate_point(p)
+
+
 # ---------------------------------------------------------------------------
 # regression flagging
 # ---------------------------------------------------------------------------
