@@ -14,6 +14,7 @@ import time
 from benchmarks import (
     fig4_convergence,
     fig5_speedup,
+    fig_blocks,
     fig_capacity,
     fig_fidelity,
     fig_mixed_destinations,
@@ -93,6 +94,12 @@ def _sweep_section(args) -> None:
             raise SystemExit(rc)
 
 
+def _blocks_section(args) -> None:
+    rc = fig_blocks.main(_forward(args))
+    if rc:
+        raise SystemExit(rc)
+
+
 SECTIONS = {
     "fig4": lambda args: fig4_convergence.main(
         _forward(args, smoke=False)
@@ -128,6 +135,9 @@ SECTIONS = {
     "quality": lambda args: fig_quality.main(
         _forward(args)
     ),
+    # function-block substitution vs the best loop-level placement
+    # (docs/blocks.md); the figure's own exit code carries the verdict
+    "blocks": _blocks_section,
 }
 
 

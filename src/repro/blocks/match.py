@@ -1,0 +1,90 @@
+"""Block matching: find maximal loop groups shaped like a library kernel.
+
+A :class:`BlockMatch` is a candidate *function block*: a maximal run of
+consecutive offloadable loops (in program order) that
+
+- all carry the entry's structural atom (:func:`repro.blocks.library.loop_atom`,
+  the same (klass, sequential_carry) rendering ``LoopProgram.fingerprint()``
+  digests),
+- share one enclosing sequential region (``parent_seq``), and
+- form a dataflow chain: each loop reads something the previous loop
+  wrote — the shape of a fusable pipeline stage.
+
+Matching is deterministic and greedy in program order, entries in
+library order; a loop consumed by one match never joins another, so
+matches are non-overlapping by construction. The matcher only proposes
+candidates — whether a block is *substituted*, and on which destination,
+is a genome decision (``repro.blocks.substitute``), priced like any
+other placement and validated by the kernel's oracle in the verify
+stage.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+from repro.core.loopir import LoopProgram
+from repro.blocks.library import KernelLibrary, loop_atom
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockMatch:
+    """One matched candidate region (loops in program order)."""
+
+    entry: str  # library entry name
+    loops: Tuple[str, ...]  # covered loop names
+    parent_seq: Optional[str]
+    atom: str
+
+    def describe(self) -> str:
+        return f"[{self.entry}] {'+'.join(self.loops)}"
+
+
+def match_blocks(
+    prog: LoopProgram, library: KernelLibrary
+) -> Tuple[BlockMatch, ...]:
+    """All non-overlapping maximal matches of ``library`` in ``prog``,
+    ordered by (library entry order, program order)."""
+    consumed: set = set()  # loop indices already covered
+    matches = []
+    loops = prog.loops
+    for entry in library.entries:
+        atom = entry.signature.atom
+        i = 0
+        while i < len(loops):
+            first = loops[i]
+            if (
+                i in consumed
+                or not first.offloadable
+                or loop_atom(first) != atom
+            ):
+                i += 1
+                continue
+            run = [i]
+            j = i + 1
+            while j < len(loops):
+                nxt = loops[j]
+                if (
+                    j in consumed
+                    or not nxt.offloadable
+                    or loop_atom(nxt) != atom
+                    or nxt.parent_seq != first.parent_seq
+                    or not (nxt.reads & loops[j - 1].writes)
+                ):
+                    break
+                run.append(j)
+                j += 1
+            if len(run) >= entry.signature.min_len:
+                matches.append(
+                    BlockMatch(
+                        entry=entry.name,
+                        loops=tuple(loops[x].name for x in run),
+                        parent_seq=first.parent_seq,
+                        atom=atom,
+                    )
+                )
+                consumed.update(run)
+                i = j
+            else:
+                i += 1
+    return tuple(matches)

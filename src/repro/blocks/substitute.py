@@ -1,0 +1,317 @@
+"""Block substitution: the genome dimension that swaps a matched loop
+chain for a library kernel, and its pricing.
+
+:class:`BlockMixedEvaluator` wraps a :class:`~repro.destinations.mixed.
+MixedEvaluator` and extends the genome with one gene per
+:class:`~repro.blocks.match.BlockMatch`:
+
+    genes = (loop gene per offloadable loop) + (block gene per match)
+
+A block gene of 0 keeps the status quo — every covered loop is placed
+individually by its own loop gene. A block gene of v >= 1 substitutes
+the library kernel for the whole chain on ``destinations[v]`` (clamped
+back to 0 when that destination cannot host the kernel), making the
+covered loops' own genes irrelevant. Block genes share the loop genes'
+alphabet, so the GA's k-ary operators and the warm-start
+``reexpress`` mapping apply to the whole genome unchanged.
+
+Pricing builds a *substituted program*: the chain collapses into one
+synthetic TIGHT, carry-free nest whose flops are the chain's total
+divided by the entry's (calibratable) gain, and whose read/write sets
+drop the chain's internal temporaries — so a substitution wins exactly
+where a fused kernel wins on real hardware: one launch instead of N,
+intermediate traffic eliminated, and (for sequential-carry chains) MXU
+rates instead of the lane-bound sequential rate. The substituted
+program is priced by a plain ``MixedEvaluator`` over the same registry,
+so transfer/residency/capacity accounting is identical to loop-level
+placement.
+
+Cache soundness: ``fingerprint()`` prefixes the base evaluator's with
+``blocks:`` and appends the library fingerprint, and ``cache_key()``
+canonicalizes covered loops to the substituting destination and appends
+a ``|blocks=`` rendering of every block decision — block-enabled
+searches never share fitness-cache entries with loop-level ones, and two
+genomes that differ only in a dead (inactive-block) covered-loop gene
+share one entry.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.loopir import Loop, LoopClass, LoopProgram
+from repro.destinations.mixed import MixedEvaluator
+from repro.destinations.profiles import Registry
+from repro.blocks.library import KernelEntry, KernelLibrary, default_library
+from repro.blocks.match import BlockMatch, match_blocks
+
+Genes = Tuple[int, ...]
+
+
+def internal_vars(prog: LoopProgram, match: BlockMatch) -> frozenset:
+    """Chain-internal temporaries: written inside the chain and touched
+    by no loop outside it. A fused kernel keeps these in registers/VMEM,
+    so the substituted nest drops them from its read/write sets (and the
+    residency schedule stops moving them)."""
+    chain = set(match.loops)
+    writes = set()
+    for l in prog.loops:
+        if l.name in chain:
+            writes |= l.writes
+    out = set()
+    for v in writes:
+        touchers = {l.name for l in prog.loops if v in l.touched()}
+        if touchers <= chain:
+            out.add(v)
+    return frozenset(out)
+
+
+def fused_loop(
+    prog: LoopProgram, match: BlockMatch, entry: KernelEntry
+) -> Loop:
+    """The synthetic nest a substitution is priced as: one TIGHT,
+    carry-free launch covering the chain's arithmetic (divided by the
+    entry's gain), reading the chain's external inputs and writing its
+    external outputs."""
+    by_name = {l.name: l for l in prog.loops}
+    chain = [by_name[n] for n in match.loops]
+    internal = internal_vars(prog, match)
+    reads = frozenset().union(*(l.reads for l in chain)) - internal
+    writes = frozenset().union(*(l.writes for l in chain)) - internal
+    flops = sum(l.total_flops for l in chain) / entry.gain
+    return Loop(
+        name=f"block:{entry.name}:{chain[0].name}",
+        klass=LoopClass.TIGHT,
+        trip=1,
+        inner_trip=1,
+        flops_per_iter=flops,
+        reads=reads,
+        writes=writes,
+        file=chain[0].file,
+        parent_seq=chain[0].parent_seq,
+        sequential_carry=False,
+    )
+
+
+def substituted_program(
+    prog: LoopProgram,
+    active: Sequence[Tuple[BlockMatch, KernelEntry]],
+) -> LoopProgram:
+    """``prog`` with each active chain collapsed into its fused nest (at
+    the chain's first loop's position; the rest of the chain dropped)."""
+    first_of = {m.loops[0]: (m, e) for m, e in active}
+    covered_rest = {n for m, _ in active for n in m.loops[1:]}
+    loops: List[Loop] = []
+    for l in prog.loops:
+        if l.name in first_of:
+            loops.append(fused_loop(prog, *first_of[l.name]))
+        elif l.name not in covered_rest:
+            loops.append(l)
+    return LoopProgram(
+        name=prog.name,
+        loops=tuple(loops),
+        vars=prog.vars,
+        seq_regions=prog.seq_regions,
+        description=prog.description,
+    )
+
+
+class BlockMixedEvaluator:
+    """Mixed-destination evaluator with per-block substitution genes.
+
+    Drop-in for :class:`MixedEvaluator` where the genome is ``n + m``
+    genes (n offloadable loops, m matched blocks) over the same
+    ``k = len(destinations)`` alphabet. With zero matches the caller
+    should use a plain ``MixedEvaluator`` instead (the adapter does) —
+    this class assumes ``matches`` is non-empty only for clarity of the
+    cache-key contract, and degrades gracefully either way.
+    """
+
+    def __init__(
+        self,
+        prog: LoopProgram,
+        destinations: Sequence[str] = ("cpu", "gpu", "fpga"),
+        registry: Optional[Registry] = None,
+        library: Optional[KernelLibrary] = None,
+        matches: Optional[Tuple[BlockMatch, ...]] = None,
+    ):
+        self.base = MixedEvaluator(prog, destinations, registry=registry)
+        self.prog = prog
+        self.registry = self.base.registry
+        self.dests = self.base.dests
+        self.library = library if library is not None else default_library()
+        self.matches: Tuple[BlockMatch, ...] = (
+            matches if matches is not None
+            else match_blocks(prog, self.library)
+        )
+        self._entries = tuple(
+            self.library.get(m.entry) for m in self.matches
+        )
+        # loop name -> (block index, is chain head) for covered loops
+        self._covered: Dict[str, Tuple[int, bool]] = {}
+        for bi, m in enumerate(self.matches):
+            for li, name in enumerate(m.loops):
+                self._covered[name] = (bi, li == 0)
+        self._n = prog.gene_length
+        # substitution combo (sorted (block, dest) pairs) -> variant evaluator
+        self._variants: Dict[Tuple[Tuple[int, int], ...], MixedEvaluator] = {}
+
+    # -- genome layout ------------------------------------------------------
+
+    @property
+    def k(self) -> int:
+        return self.base.k
+
+    @property
+    def gene_length(self) -> int:
+        return self._n + len(self.matches)
+
+    def allele_names(self) -> Tuple[str, ...]:
+        return self.base.allele_names()
+
+    def split(self, genes: Sequence[int]) -> Tuple[Genes, Genes]:
+        assert len(genes) == self.gene_length, \
+            (len(genes), self.gene_length)
+        return (
+            tuple(int(g) for g in genes[: self._n]),
+            tuple(int(g) for g in genes[self._n:]),
+        )
+
+    # -- admissibility ------------------------------------------------------
+
+    def _clamp_blocks(self, block_genes: Sequence[int]) -> Genes:
+        """A block gene falls back to 0 (no substitution) when the chosen
+        destination cannot host the kernel — the block analogue of the
+        loop-gene host fallback."""
+        out = []
+        for g, entry in zip(block_genes, self._entries):
+            g = int(g)
+            assert 0 <= g < self.k, (g, self.k)
+            out.append(g if g and entry.eligible(self.dests[g]) else 0)
+        return tuple(out)
+
+    def admissible(self, genes: Sequence[int]) -> Genes:
+        loop_genes, block_genes = self.split(genes)
+        return self.base.admissible(loop_genes) + \
+            self._clamp_blocks(block_genes)
+
+    def _active(
+        self, block_genes: Genes
+    ) -> Tuple[Tuple[int, int], ...]:
+        """Sorted (block index, destination index) pairs of the
+        substitutions this genome activates."""
+        return tuple(
+            (bi, g) for bi, g in enumerate(block_genes) if g
+        )
+
+    # -- substitution -> variant program ------------------------------------
+
+    def _variant(self, active: Tuple[Tuple[int, int], ...]) -> MixedEvaluator:
+        key = active
+        ev = self._variants.get(key)
+        if ev is None:
+            pairs = [
+                (self.matches[bi], self._entries[bi]) for bi, _ in active
+            ]
+            vprog = substituted_program(self.prog, pairs)
+            ev = MixedEvaluator(
+                vprog,
+                tuple(d.name for d in self.dests),
+                registry=self.registry,
+            )
+            self._variants[key] = ev
+        return ev
+
+    def _variant_genes(
+        self, loop_genes: Genes, active: Tuple[Tuple[int, int], ...]
+    ) -> Genes:
+        """Genes for the variant program: uncovered loops keep their
+        gene; each fused nest takes its block's destination."""
+        dest_of = dict(active)
+        active_blocks = set(dest_of)
+        out = []
+        gi = 0
+        for l in self.prog.offloadable_loops:
+            g = loop_genes[gi]
+            gi += 1
+            cov = self._covered.get(l.name)
+            if cov is not None and cov[0] in active_blocks:
+                if cov[1]:  # chain head -> the fused nest's gene
+                    out.append(dest_of[cov[0]])
+                # covered non-head loops vanish from the variant
+            else:
+                out.append(g)
+        return tuple(out)
+
+    # -- scoring ------------------------------------------------------------
+
+    def breakdown(self, genes: Sequence[int]):
+        loop_genes, block_genes = self.split(genes)
+        active = self._active(self._clamp_blocks(block_genes))
+        if not active:
+            return self.base.breakdown(loop_genes)
+        ev = self._variant(active)
+        return ev.breakdown(self._variant_genes(loop_genes, active))
+
+    def __call__(self, genes: Sequence[int]) -> float:
+        return self.breakdown(genes).total_s
+
+    def host_only_time(self) -> float:
+        return self.base.host_only_time()
+
+    # -- placement / reporting ----------------------------------------------
+
+    def placement(self, genes: Sequence[int]) -> Dict[str, str]:
+        """{loop name: destination name} for ALL ORIGINAL loops: loops
+        covered by an active substitution run on the block's
+        destination (inside the library kernel)."""
+        loop_genes, block_genes = self.split(genes)
+        out = self.base.placement(loop_genes)
+        for bi, g in self._active(self._clamp_blocks(block_genes)):
+            for name in self.matches[bi].loops:
+                out[name] = self.dests[g].name
+        return out
+
+    def substitutions(self, genes: Sequence[int]) -> List[Dict]:
+        """One row per matched block: the genome's decision for it."""
+        _, block_genes = self.split(genes)
+        rows = []
+        for m, g in zip(self.matches, self._clamp_blocks(block_genes)):
+            rows.append({
+                "entry": m.entry,
+                "loops": list(m.loops),
+                "destination": self.dests[g].name if g else None,
+                "active": bool(g),
+            })
+        return rows
+
+    # -- caching ------------------------------------------------------------
+
+    def cache_key(self, genes: Sequence[int]) -> str:
+        """Loop-level part: one destination name per ORIGINAL offloadable
+        loop, with loops covered by an active substitution canonicalized
+        to the substituting destination (their own genes are dead). Block
+        part: every block decision, rendered even when inactive, so the
+        key never aliases a different decision vector."""
+        loop_genes, block_genes = self.split(genes)
+        clamped_loops = self.base.admissible(loop_genes)
+        clamped_blocks = self._clamp_blocks(block_genes)
+        block_dest: Dict[str, str] = {}
+        for bi, g in self._active(clamped_blocks):
+            for name in self.matches[bi].loops:
+                block_dest[name] = self.dests[g].name
+        names = [
+            block_dest.get(l.name, self.dests[g].name)
+            for g, l in zip(clamped_loops, self.prog.offloadable_loops)
+        ]
+        blocks = ",".join(
+            f"{m.entry}@{self.dests[g].name if g else '-'}"
+            for m, g in zip(self.matches, clamped_blocks)
+        )
+        return ",".join(names) + "|blocks=" + blocks
+
+    def fingerprint(self) -> str:
+        """Base machine identity + library identity under a ``blocks:``
+        prefix: block-enabled searches never share cache entries with
+        loop-level searches, and a library change (entry set, gains)
+        invalidates block-enabled entries."""
+        return f"blocks:{self.base.fingerprint()}:{self.library.fingerprint()}"

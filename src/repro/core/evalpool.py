@@ -76,19 +76,27 @@ def genes_key(genes: Sequence[int]) -> str:
 
 
 def evaluator_fingerprint(evaluate: Callable) -> str:
-    """Best-effort configuration fingerprint for an evaluator callable.
+    """Configuration fingerprint for an evaluator callable.
 
-    Evaluators may provide ``fingerprint()`` (the three core evaluators
-    do); plain functions fall back to their qualified name. The
-    fingerprint keys the persistent cache, so two differently-configured
-    evaluators never share measurements.
+    Evaluators must provide ``fingerprint()`` (every shipped evaluator
+    does). The fingerprint keys the persistent cache, so two
+    differently-configured evaluators never share measurements — which
+    is exactly why a name-based fallback is refused: two instances of
+    the same evaluator class with different constants would share a
+    qualified name, and their cached measurements would silently
+    cross-contaminate.
     """
     fp = getattr(evaluate, "fingerprint", None)
     if callable(fp):
         return str(fp())
     name = getattr(evaluate, "__qualname__", None) or type(evaluate).__name__
     mod = getattr(evaluate, "__module__", "")
-    return f"fn:{mod}.{name}"
+    raise TypeError(
+        f"evaluator {mod}.{name} has no fingerprint(); refusing to key "
+        "the persistent fitness cache on its name alone (two "
+        "differently-configured instances would share cached "
+        "measurements) — give it a fingerprint() method"
+    )
 
 
 class FitnessCache:

@@ -3,6 +3,7 @@
   python -m repro.offload run --program himeno --mode binary
   python -m repro.offload run --program hetero --mode mixed \\
       --destinations cpu,gpu,fpga --warm-start --cache /tmp/hetero.jsonl
+  python -m repro.offload run --program hetero --mode mixed --blocks
   python -m repro.offload run --program himeno --fidelity measured \\
       --workers 2 --population 4 --generations 2
   python -m repro.offload run --program himeno --smoke   # CI gate
@@ -137,6 +138,7 @@ def _spec_from_args(args: argparse.Namespace) -> OffloadSpec:
         seed=args.seed,
         timeout_s=args.timeout_s,
         warm_start=args.warm_start,
+        blocks=args.blocks,
         workers=args.workers,
         executor=executor,
         cache=args.cache,
@@ -262,6 +264,10 @@ def main(argv: Optional[List[str]] = None) -> int:
     run.add_argument("--warm-start", action="store_true",
                      help="mixed mode: seed the k-ary population with "
                           "single-destination bests")
+    run.add_argument("--blocks", action="store_true",
+                     help="mixed mode: match loop chains against the "
+                          "kernel library and let the genome substitute "
+                          "tuned implementations (docs/blocks.md)")
     run.add_argument("--workers", type=int, default=1)
     run.add_argument("--executor", choices=("thread", "process"),
                      default=None,
@@ -343,6 +349,10 @@ def main(argv: Optional[List[str]] = None) -> int:
                           "excludes one-time jit compiles)")
     cal.add_argument("--out", default=None, metavar="PATH",
                      help="where to save (default <name>.calib.json)")
+    cal.add_argument("--kernels", action="store_true",
+                     help="also time the block-substitution kernel "
+                          "library against its oracles and fit "
+                          "per-kernel gains (docs/blocks.md)")
 
     swp = _add_verb(
         sub, "sweep",
@@ -401,7 +411,8 @@ def main(argv: Optional[List[str]] = None) -> int:
         name = args.name or f"{args.base}-calibrated"
         try:
             cal_res = cal_mod.run_calibration(
-                base=args.base, repeats=args.repeats, name=name
+                base=args.base, repeats=args.repeats, name=name,
+                kernels=args.kernels,
             )
         except ValueError as e:
             ap.error(str(e))
@@ -418,6 +429,8 @@ def main(argv: Optional[List[str]] = None) -> int:
         print(f"residuals: max |{r['max_abs_rel']:.1%}| mean "
               f"|{r['mean_abs_rel']:.1%}| over {r['n']} probes; "
               f"pinned: {', '.join(cal_res.pinned)}")
+        for k, g in sorted(cal_res.kernel_constants.items()):
+            print(f"  kernel {k}: gain {g:.3g}x vs oracle")
         print(f"saved: {out}")
         print(f"use it:  python -m repro.offload run ... "
               f"--calibration {out} --hw {cal_res.name}")

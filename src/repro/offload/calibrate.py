@@ -26,6 +26,14 @@ registry fingerprints every constant, so a re-calibration deliberately
 invalidates fitness caches while the modeled machines' fingerprints
 stay untouched.
 
+With ``kernels=True`` (``--kernels`` on the CLI, automatic when
+``OffloadSpec.blocks`` is set) the probe set extends to the block
+kernel library: each entry's implementation is wall-clocked against its
+``ref.py`` oracle and the measured speedup lands in
+``kernel_constants``, which :func:`install` registers as per-kernel
+gains so block-substitution pricing (docs/blocks.md) is fitted, not
+assumed.
+
 Single constants cannot be split into a compute/bandwidth pair by one
 wall clock, so the fit keeps the base machine's compute:bandwidth
 *balance*: ``cpu_membw``/``accel_membw`` scale with the fitted rates
@@ -234,10 +242,20 @@ class CalibrationResult:
     constants: Dict[str, float]  # the _CONSTANT_FIELDS values
     pinned: Tuple[str, ...]  # constants NOT determined by the fit
     probes: Tuple[Dict[str, Any], ...]  # measured/fitted/residual rows
+    # per-kernel speedup of each block-library implementation over its
+    # ref.py oracle on THIS host (``run_calibration(kernels=True)``,
+    # docs/blocks.md); empty unless kernel probes ran
+    kernel_constants: Dict[str, float] = dataclasses.field(
+        default_factory=dict
+    )
 
     @property
     def digest(self) -> str:
         blob = json.dumps(self.constants, sort_keys=True)
+        if self.kernel_constants:
+            # appended only when present: kernel-free calibrations keep
+            # their pre-blocks digests (and cache identities) unchanged
+            blob += json.dumps(self.kernel_constants, sort_keys=True)
         return hashlib.sha256(blob.encode()).hexdigest()[:8]
 
     @property
@@ -270,6 +288,8 @@ class CalibrationResult:
             "constants": dict(self.constants),
             "pinned": list(self.pinned),
             "probes": [dict(p) for p in self.probes],
+            **({"kernel_constants": dict(self.kernel_constants)}
+               if self.kernel_constants else {}),
         }
 
     @classmethod
@@ -285,6 +305,10 @@ class CalibrationResult:
             constants={k: float(v) for k, v in d["constants"].items()},
             pinned=tuple(d.get("pinned", ())),
             probes=tuple(dict(p) for p in d.get("probes", ())),
+            kernel_constants={
+                k: float(v)
+                for k, v in d.get("kernel_constants", {}).items()
+            },
         )
 
     def save(self, path: str) -> str:
@@ -309,11 +333,22 @@ def run_calibration(
     name: Optional[str] = None,
     probes: Optional[Sequence[Probe]] = None,
     measure: Optional[Callable[[Probe, int], float]] = None,
+    kernels: bool = False,
+    kernel_measure: Optional[
+        Callable[[Any], Tuple[float, float]]
+    ] = None,
 ) -> CalibrationResult:
     """Measure the probe set and fit the calibrated constants.
 
     ``measure`` is injectable for tests (a synthetic clock makes the fit
     deterministic); the default wall-clocks in-process.
+
+    ``kernels=True`` additionally times every block-library kernel
+    (docs/blocks.md) against its ``ref.py`` oracle and records the
+    measured speedup as a per-kernel gain in ``kernel_constants``, so a
+    ``fidelity="calibrated"`` blocks run prices substitutions from this
+    host's clocks instead of the modeled defaults. ``kernel_measure``
+    is the injectable probe: ``entry -> (oracle_s, impl_s)``.
     """
     base_reg = get_registry(base)
     base_hw = _base_hw_from_registry(base_reg)
@@ -415,6 +450,21 @@ def run_calibration(
     }
     assert set(constants) == set(_CONSTANT_FIELDS)
 
+    kernel_constants: Dict[str, float] = {}
+    if kernels:
+        from repro.blocks import library as blk
+
+        kmeasure = kernel_measure or (
+            lambda entry: blk.time_kernel(entry, repeats=repeats)
+        )
+        for entry in blk.default_library().entries:
+            oracle_s, impl_s = kmeasure(entry)
+            gain = float(oracle_s) / max(float(impl_s), 1e-12)
+            # a kernel that measures slower than its oracle keeps a
+            # sub-1 gain: the search then prices substitution as a loss
+            # and the genome learns to leave the block alone
+            kernel_constants[entry.name] = max(gain, 1e-6)
+
     return CalibrationResult(
         name=name,
         base=base,
@@ -423,6 +473,7 @@ def run_calibration(
         constants=constants,
         pinned=tuple(pinned),
         probes=tuple(rows),
+        kernel_constants=kernel_constants,
     )
 
 
@@ -441,6 +492,10 @@ def install(cal: CalibrationResult,
         return calibrated_registry(get_registry(base), hw, name)
 
     register_registry(cal.name, factory, replace=replace)
+    if cal.kernel_constants:
+        from repro.blocks import library as blk
+
+        blk.register_kernel_gains(cal.name, dict(cal.kernel_constants))
     return hw
 
 

@@ -70,6 +70,19 @@ def _spec_digest(spec: OffloadSpec) -> str:
     return hashlib.sha256(spec.to_json().encode("utf-8")).hexdigest()[:16]
 
 
+def _evaluator_label(evaluator) -> str:
+    """The evaluator's fingerprint, or an explicit ``injected:`` marker
+    for fingerprint-less injected callables. This labels stage payloads
+    for the resume drift guard only — persistent fitness-cache keying
+    always goes through ``evaluator_fingerprint``, which refuses
+    fingerprint-less evaluators outright."""
+    if callable(getattr(evaluator, "fingerprint", None)):
+        return evaluator_fingerprint(evaluator)
+    mod = getattr(evaluator, "__module__", type(evaluator).__module__)
+    name = getattr(evaluator, "__qualname__", type(evaluator).__qualname__)
+    return f"injected:{mod}.{name}"
+
+
 def _span_attrs(name: str, payload: Dict[str, Any]) -> Dict[str, Any]:
     """Deterministic data attrs for a stage span, derived from the stage
     payload alone (wall clocks stay out — they belong to span timing,
@@ -84,6 +97,8 @@ def _span_attrs(name: str, payload: Dict[str, Any]) -> Dict[str, Any]:
             a["gene_length"] = int(payload["gene_length"])
         if "baseline_s" in payload:
             a["baseline_s"] = float(payload["baseline_s"])
+        if "blocks" in payload:  # key only present on block-enabled runs
+            a["block_matches"] = len(payload["blocks"].get("matches", []))
     elif name == "seed":
         a["seeds"] = len(payload.get("seeds", []))
     elif name == "search":
@@ -93,11 +108,19 @@ def _span_attrs(name: str, payload: Dict[str, Any]) -> Dict[str, Any]:
         a["generations"] = len(payload.get("history", []))
         if payload.get("best_time_s") is not None:
             a["best_time_s"] = float(payload["best_time_s"])
+        if "substitutions" in payload:  # block-enabled runs only
+            a["substitutions"] = sum(
+                1 for s in payload["substitutions"] if s.get("active")
+            )
     elif name == "verify":
         pc = payload.get("pcast") or {}
         a["pcast"] = "skipped" if "skipped" in pc else (
             "ok" if pc.get("ok") else "fail") if pc else "none"
         a["consistent"] = bool(payload.get("consistent", False))
+        if "block_oracles" in payload:  # block-enabled runs only
+            a["block_oracles"] = "ok" if all(
+                r.get("ok") for r in payload["block_oracles"]
+            ) else "fail"
     elif name == "report":
         # NOTE: no "evaluations" attr here — the report span's
         # stability_search / rank_probe EVENTS carry the measurement
@@ -354,7 +377,8 @@ class Offloader:
         cal = self._injected_cal
         if cal is None:
             cal = calibrate.run_calibration(
-                base=self.spec.hw, repeats=self.spec.repeats
+                base=self.spec.hw, repeats=self.spec.repeats,
+                kernels=self.spec.blocks,
             )
         calibrate.install(cal, replace=True)
         self._cal = cal
@@ -374,6 +398,16 @@ class Offloader:
     def _stage_analyze(self) -> Dict[str, Any]:
         payload = self.adapter.analyze_payload()
         payload["baseline_s"] = float(self.adapter.baseline_time())
+        blocks = payload.get("blocks")
+        if blocks and blocks.get("matches"):
+            tracer = self._trace()
+            if tracer is not None:
+                for m in blocks["matches"]:
+                    tracer.event("block_match", span="analyze", attrs={
+                        "entry": m["entry"],
+                        "loops": "+".join(m["loops"]),
+                        "n_loops": len(m["loops"]),
+                    })
         return payload
 
     def _stage_seed(self) -> Dict[str, Any]:
@@ -490,6 +524,9 @@ class Offloader:
             stats_fn = getattr(adapter, "schedule_stats", None)
             residency = stats_fn(res.best_genes) if stats_fn is not None \
                 else None
+            subs_fn = getattr(adapter, "substitutions", None)
+            substitutions = subs_fn(res.best_genes) \
+                if subs_fn is not None else None
             last = res.history[-1]
             final_population = [[int(g) for g in ind]
                                 for ind in (last.population or [])]
@@ -499,16 +536,19 @@ class Offloader:
             # explicit no-winner search instead of a fake one
             best_genes, best_t, placement, residency = [], None, {}, None
             final_population, final_times = [], []
+            substitutions = None
         return {
             "best_genes": best_genes,
             "best_time_s": best_t,
             **({"residency": residency} if residency is not None else {}),
+            **({"substitutions": substitutions}
+               if substitutions is not None else {}),
             "wall_s": float(res.wall_s),
             "evaluations": int(tot.evaluated),
             "cache_hits": int(tot.cache_hits),
             "timeouts": int(tot.timeouts),
             "cache_resumed": int(resumed),
-            "evaluator": evaluator_fingerprint(evaluator),
+            "evaluator": _evaluator_label(evaluator),
             "telemetry": telemetry,
             "final_population": final_population,
             "final_times_s": final_times,
@@ -559,7 +599,7 @@ class Offloader:
         # artifact resumed without re-injecting it) would either fail
         # spuriously or silently bless an unverified number
         searched_fp = search.get("evaluator")
-        verify_fp = evaluator_fingerprint(evaluator)
+        verify_fp = _evaluator_label(evaluator)
         if searched_fp is not None and searched_fp != verify_fp:
             return {
                 "re_measured_s": None,
@@ -610,6 +650,9 @@ class Offloader:
         fid = self._fidelity_section(best, best_t)
         if fid is not None:
             payload["fidelity"] = fid
+        oracles = self._block_oracles(adapter, best)
+        if oracles is not None:
+            payload["block_oracles"] = oracles
         if not consistent:
             payload["_error"] = (
                 f"winner re-measurement drifted: "
@@ -621,7 +664,51 @@ class Offloader:
                 f"PCAST result-difference check FAILED "
                 f"(max_rel {report.max_rel:.3e})"
             )
+        elif oracles is not None and not all(r["ok"] for r in oracles):
+            bad = [r for r in oracles if not r["ok"]]
+            payload["_error"] = (
+                "block substitution oracle check FAILED: "
+                + "; ".join(
+                    f"{r['kernel']} vs {r['oracle']} "
+                    f"(max_abs {r['max_abs_err']:.3e} > tol {r['tol']:.3e})"
+                    for r in bad
+                )
+            )
         return payload
+
+    def _block_oracles(self, adapter, best) -> Optional[list]:
+        """Kernel-oracle checks for every substitution the winner
+        activates: the substituted implementation (the real kernel body,
+        interpret mode) vs its ``kernels/ref.py`` oracle on a tiny
+        seeded input — the block analogue of the PCAST placement check.
+        None when the run has no block genome (blocks-off byte parity)."""
+        subs_fn = getattr(adapter, "substitutions", None)
+        if subs_fn is None:
+            return None
+        subs = subs_fn(best)
+        if subs is None:
+            return None
+        from repro import blocks as blocks_mod
+
+        tracer = self._trace()
+        rows = []
+        for s in subs:
+            if not s.get("active"):
+                continue
+            entry = adapter.library.get(s["entry"])
+            row = blocks_mod.oracle_check(entry, seed=self.spec.seed)
+            row["destination"] = s["destination"]
+            row["loops"] = list(s["loops"])
+            rows.append(row)
+            if tracer is not None:
+                tracer.event("block_substitution", span="verify", attrs={
+                    "entry": s["entry"],
+                    "destination": s["destination"],
+                    "loops": "+".join(s["loops"]),
+                    "oracle_ok": bool(row["ok"]),
+                    "max_abs_err": float(row["max_abs_err"]),
+                })
+        return rows
 
     def _scale_model(self) -> Callable[[Sequence[int]], float]:
         """The analytic model of the effective spec's machine AT THE
@@ -639,8 +726,19 @@ class Offloader:
         if spec.mode == "mixed":
             from repro.destinations import MixedEvaluator, get_registry
 
+            reg = get_registry(eff.hw)
+            if getattr(self.adapter, "matches", ()):
+                # block-enabled genomes carry block genes; price them
+                # with a block evaluator over the scale program (same
+                # loop structure -> same matches)
+                from repro.blocks import BlockMixedEvaluator
+
+                return BlockMixedEvaluator(
+                    scale_prog, eff.destinations, registry=reg,
+                    library=self.adapter.library,
+                )
             return MixedEvaluator(scale_prog, eff.destinations,
-                                  registry=get_registry(eff.hw))
+                                  registry=reg)
         method = programs.METHODS[eff.method]
         return ev.MiniappEvaluator(
             scale_prog,
@@ -981,6 +1079,16 @@ def render_report(result: OffloadResult,
                         "units offloaded")
             for u, d in moved.items():
                 rows.append(f"    {u:24s} -> {d}")
+            subs = p.get("substitutions")
+            if subs is not None:
+                act = [s for s in subs if s.get("active")]
+                rows.append(f"blocks: {len(act)}/{len(subs)} matched "
+                            "blocks substituted (docs/blocks.md)")
+                for s in act:
+                    rows.append(
+                        f"    [{s['entry']}] {'+'.join(s['loops'])} "
+                        f"-> {s['destination']}"
+                    )
             r = p.get("residency")
             if r and r.get("capacities"):
                 caps = ", ".join(f"{n} {b/1e6:.0f} MB"
@@ -1009,6 +1117,15 @@ def render_report(result: OffloadResult,
         re_txt = "re-measurement skipped" if re_t is None \
             else f"re-measured {re_t:.4g}s"
         rows.append(f"verify: {ok}; {re_txt}; {pc_txt}")
+        bo = v.payload.get("block_oracles")
+        if bo:
+            parts = ", ".join(
+                f"{r['kernel']}@{r['destination']} "
+                f"{'PASS' if r['ok'] else 'FAIL'} "
+                f"(max_abs {r['max_abs_err']:.2e} vs {r['oracle']})"
+                for r in bo
+            )
+            rows.append(f"block oracles: {parts}")
         fid = v.payload.get("fidelity")
         if fid and "skipped" in fid:
             rows.append(f"fidelity[{fid['level']}]: skipped "

@@ -387,13 +387,33 @@ class MiniappMixedAdapter:
             )
         self.prog: LoopProgram = miniapps.MINIAPPS[spec.program]()
         self._mixed_cls = MixedEvaluator
-        self._evaluator = MixedEvaluator(
-            self.prog, spec.destinations, registry=self.registry
-        )
+        # function-block substitution (docs/blocks.md): with spec.blocks
+        # and at least one library match, the evaluator grows one gene
+        # per matched block. Zero matches fall back to the plain
+        # evaluator so the search (and its cache fingerprint) stays
+        # byte-identical to a blocks-off run.
+        self.library = None
+        self.matches: Tuple[Any, ...] = ()
+        if spec.blocks:
+            from repro.blocks import default_library, match_blocks
+
+            self.library = default_library(hw=self.machine)
+            self.matches = match_blocks(self.prog, self.library)
+        if self.matches:
+            from repro.blocks import BlockMixedEvaluator
+
+            self._evaluator = BlockMixedEvaluator(
+                self.prog, spec.destinations, registry=self.registry,
+                library=self.library, matches=self.matches,
+            )
+        else:
+            self._evaluator = MixedEvaluator(
+                self.prog, spec.destinations, registry=self.registry
+            )
 
     @property
     def gene_length(self) -> int:
-        return self.prog.gene_length
+        return self.prog.gene_length + len(self.matches)
 
     @property
     def alleles(self) -> int:
@@ -410,9 +430,25 @@ class MiniappMixedAdapter:
         """A single-destination (host + one device) evaluator sharing
         this machine's registry — the warm-start pre-searches. Its
         fingerprint equals the mixed one (subset-independent), so the
-        pre-searches and the main search share one fitness-cache file."""
+        pre-searches and the main search share one fitness-cache file.
+        Under ``spec.blocks`` the sub-evaluator is block-aware over the
+        SAME matches, so pre-search genomes keep the full ``n + m``
+        length and ``reexpress`` maps block genes like loop genes."""
+        if self.matches:
+            from repro.blocks import BlockMixedEvaluator
+
+            return BlockMixedEvaluator(
+                self.prog, tuple(subset), registry=self.registry,
+                library=self.library, matches=self.matches,
+            )
         return self._mixed_cls(self.prog, tuple(subset),
                                registry=self.registry)
+
+    def substitutions(self, genes: Sequence[int]) -> Optional[list]:
+        """Per-block decision rows for a genome (None when the run has
+        no block genome — keeps blocks-off payloads byte-identical)."""
+        fn = getattr(self._evaluator, "substitutions", None)
+        return fn(genes) if fn is not None else None
 
     def reexpress(self, genes: Sequence[int], device: str) -> Tuple[int, ...]:
         """A binary (host, device) genome re-expressed in the full k-ary
@@ -433,7 +469,7 @@ class MiniappMixedAdapter:
 
     def analyze_payload(self) -> Dict[str, Any]:
         dests = {d.name: d for d in self._evaluator.dests}
-        return {
+        out: Dict[str, Any] = {
             "program": self.prog.name,
             "description": self.prog.description,
             "gene_length": self.gene_length,
@@ -441,19 +477,34 @@ class MiniappMixedAdapter:
             "machine": self.machine,
             "destinations": [d.name for d in self._evaluator.dests],
             "capacities": self._capacities(),
-            "loops": [
-                {
-                    "name": l.name,
-                    "class": l.klass.value,
-                    "directive": DIRECTIVES[l.klass],
-                    "offloadable": l.offloadable,
-                    "admissible": [
-                        n for n, d in dests.items() if d.accepts(l.klass)
-                    ] if l.offloadable else [],
-                }
-                for l in self.prog.loops
-            ],
         }
+        if self.spec.blocks:
+            out["blocks"] = {
+                "library": [e.name for e in self.library.entries],
+                "library_fingerprint": self.library.fingerprint(),
+                "matches": [
+                    {
+                        "entry": m.entry,
+                        "loops": list(m.loops),
+                        "parent_seq": m.parent_seq,
+                        "atom": m.atom,
+                    }
+                    for m in self.matches
+                ],
+            }
+        out["loops"] = [
+            {
+                "name": l.name,
+                "class": l.klass.value,
+                "directive": DIRECTIVES[l.klass],
+                "offloadable": l.offloadable,
+                "admissible": [
+                    n for n, d in dests.items() if d.accepts(l.klass)
+                ] if l.offloadable else [],
+            }
+            for l in self.prog.loops
+        ]
+        return out
 
     def placement(self, genes: Sequence[int]) -> Dict[str, str]:
         return self._evaluator.placement(genes)

@@ -170,6 +170,12 @@ class OffloadSpec:
     # population with each single-destination best re-expressed in the
     # k-ary alphabet (ROADMAP follow-on)
     warm_start: bool = False
+    # -- function-block substitution (mixed only, docs/blocks.md): match
+    # loop chains against the kernel library (repro.blocks) and extend
+    # the genome with one gene per matched block choosing between
+    # loop-level placement and library substitution per destination.
+    # Off = byte-identical to the loop-level search.
+    blocks: bool = False
     # -- evaluation pool ---------------------------------------------------
     workers: int = 1
     executor: str = "thread"
@@ -201,6 +207,9 @@ class OffloadSpec:
                              f"{self.executor!r}")
         if self.warm_start and self.mode != "mixed":
             raise ValueError("warm_start is a mixed-mode (k-ary) feature")
+        if self.blocks and self.mode != "mixed":
+            raise ValueError("blocks (function-block substitution) is a "
+                             "mixed-mode feature")
         if self.fidelity not in FIDELITIES:
             raise ValueError(
                 f"fidelity must be one of {FIDELITIES}: {self.fidelity!r}"
@@ -321,6 +330,10 @@ class OffloadSpec:
     def to_dict(self) -> Dict[str, Any]:
         d = dataclasses.asdict(self)
         d["destinations"] = list(self.destinations)
+        if not self.blocks:
+            # serialized only when set: a blocks-off spec round-trips
+            # byte-identically to pre-blocks artifacts (same digest)
+            del d["blocks"]
         d["v"] = _SPEC_VERSION
         return d
 

@@ -17,7 +17,8 @@ measurements).
 Every sweep appends exactly one schema-versioned **trajectory point** to
 a ``BENCH_sweep.json`` file (default: repo root): git hash, timestamp,
 the matrix, one summary record per cell (winner fitness, speedup vs
-all-host, search cost, cache-hit rate, residency pressure) and
+all-host, search cost, cache-hit rate, residency pressure, block
+substitutions) and
 aggregate totals. The trajectory is append-only — points are never
 rewritten — which makes it the PR-over-PR perf record the ROADMAP's
 re-anchor process reads.
@@ -77,7 +78,11 @@ SWEEP_SCHEMA_VERSION = 1
 # "quality" key — the report stage's pass@k winner stability and
 # modeled-vs-measured rank correlation (docs/observability.md) — and
 # append cleanly after v1 points: readers treat a missing "v" as 1.
-SWEEP_POINT_VERSION = 2
+# v3 points additionally carry a per-cell "blocks" key — the
+# function-block substitution summary (matched blocks, substituted
+# count, kernel@destination rows; docs/blocks.md), None for cells the
+# feature does not apply to.
+SWEEP_POINT_VERSION = 3
 
 # default trajectory file (repo root when invoked from there) and the
 # default per-cell artifact directories; smoke and full matrices get
@@ -237,6 +242,10 @@ def cell_spec(
         reg = get_registry(cell.hw)
         kw["destinations"] = tuple(d.name for d in reg.destinations)
         kw["warm_start"] = True
+        # mixed cells search with the block-substitution dimension on:
+        # the sweep's job is the best placement the toolchain can find,
+        # and v3 points record what substitution bought per cell
+        kw["blocks"] = True
         if smoke:
             kw["population"], kw["generations"] = MIXED_SMOKE_BUDGET
     if cell.program in MEASURED_PROGRAMS:
@@ -286,6 +295,30 @@ def _quality_summary(art: Optional[OffloadResult]) -> Optional[Dict]:
     return out
 
 
+def _blocks_summary(art: Optional[OffloadResult]) -> Optional[Dict]:
+    """Compact per-cell block-substitution record (docs/blocks.md), the
+    v3 trajectory field: how many library blocks matched, how many the
+    winner substituted, and which kernel landed where. None when the
+    cell ran without the feature (binary/arch cells, zero-match mixed
+    programs)."""
+    if art is None or "analyze" not in art.stages:
+        return None
+    blocks = art.stages["analyze"].payload.get("blocks")
+    if not blocks:
+        return None
+    out: Dict[str, Any] = {
+        "matches": len(blocks.get("matches", ())),
+        "substituted": 0,
+        "kernels": [],
+    }
+    if "search" in art.stages:
+        subs = art.stages["search"].payload.get("substitutions") or ()
+        act = [s for s in subs if s.get("active")]
+        out["substituted"] = len(act)
+        out["kernels"] = [f"{s['entry']}@{s['destination']}" for s in act]
+    return out
+
+
 def _cell_record(
     cell: SweepCell,
     art: Optional[OffloadResult],
@@ -312,6 +345,7 @@ def _cell_record(
         "search": None,
         "residency": None,
         "quality": _quality_summary(art),
+        "blocks": _blocks_summary(art),
     }
     if art is None:
         return rec
@@ -479,6 +513,9 @@ def validate_point(point: Dict[str, Any]) -> None:
                             f"{c.get('status')!r}")
         if v >= 2 and "quality" not in c:
             problems.append(f"cell[{i}] missing key 'quality' "
+                            f"(required for v{v} points)")
+        if v >= 3 and "blocks" not in c:
+            problems.append(f"cell[{i}] missing key 'blocks' "
                             f"(required for v{v} points)")
     if problems:
         raise ValueError("invalid trajectory point: " + "; ".join(problems))
@@ -659,6 +696,19 @@ def render_leaderboard(
     if quality_lines:
         rows.append("search quality (v2 points; docs/observability.md):")
         rows.extend(quality_lines)
+    block_lines = []
+    for c in ok:
+        b = c.get("blocks")
+        if not b or not b.get("matches"):
+            continue
+        kern = ", ".join(b.get("kernels", ())) or "none"
+        block_lines.append(
+            f"  {c['id']}: {b.get('substituted', 0)}/{b['matches']} "
+            f"blocks substituted ({kern})"
+        )
+    if block_lines:
+        rows.append("block substitutions (v3 points; docs/blocks.md):")
+        rows.extend(block_lines)
     failed = [c for c in point["cells"] if c["status"] == "failed"]
     for c in failed:
         rows.append(f"FAILED {c['id']}: {c.get('error')}")

@@ -8,6 +8,9 @@ hits/misses, dedup, timeouts, eval wall-clock) plus population stats
 (best/median fitness, allele entropy). The report stage's quality work
 (stability re-searches, rank-probe measurements) events its budget too,
 so the trace attributes *every* measurement the pipeline paid for.
+Block-substitution runs (``OffloadSpec.blocks``, docs/blocks.md) add
+``block_match`` events under the analyze span and ``block_substitution``
+oracle-verdict events under the verify span.
 
 Design rules (docs/observability.md):
 
@@ -386,6 +389,16 @@ def render_trace(trace: Trace, artifact=None) -> str:
             if rec.get("error"):
                 line += f"  !! {rec['error']}"
             rows.append(line)
+            if rec["name"] == "analyze" and last_span_idx["analyze"] == i:
+                for e in trace.events("analyze"):
+                    a = e.get("attrs", {})
+                    if e.get("name") != "block_match":
+                        continue
+                    rows.append(
+                        f"│    block [{a.get('entry')}] "
+                        f"{a.get('loops', '?')} "
+                        f"({a.get('n_loops', '?')} loops)"
+                    )
             if rec["name"] == "search" and last_span_idx["search"] == i:
                 for e in trace.events("search"):
                     a = e.get("attrs", {})
@@ -414,6 +427,17 @@ def render_trace(trace: Trace, artifact=None) -> str:
                             f"measured "
                             f"{a.get('measured_s', float('nan')):.4g}s"
                         )
+            if rec["name"] == "verify" and last_span_idx["verify"] == i:
+                for e in trace.events("verify"):
+                    a = e.get("attrs", {})
+                    if e.get("name") != "block_substitution":
+                        continue
+                    ok = "PASS" if a.get("oracle_ok") else "FAIL"
+                    rows.append(
+                        f"│    block [{a.get('entry')}]"
+                        f"@{a.get('destination')} oracle {ok} "
+                        f"(max_abs {a.get('max_abs_err', float('nan')):.2e})"
+                    )
 
     # budget attribution: wall + fresh measurements per stage (summed
     # over runs — a resumed pipeline's stages add up)

@@ -1,0 +1,200 @@
+"""Property tests for the block matcher (src/repro/blocks/match.py):
+whatever program shape the generator produces, matching must be
+deterministic, matches must be non-overlapping consecutive runs with
+the entry's atom and length floor, every adjacent pair must be
+dataflow-linked, and chains must be forward-maximal.
+
+Runs under hypothesis when available; the container image may not ship
+it, so a deterministic seeded-case fallback drives the same property
+checkers either way (no new dependencies — the ISSUE's constraint).
+"""
+import random
+
+import pytest
+
+from repro.blocks.library import default_library, loop_atom
+from repro.blocks.match import match_blocks
+from repro.core.loopir import Loop, LoopClass, LoopProgram, SeqRegion, Var
+
+try:  # hypothesis is optional; the fallback below covers its absence
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - depends on the environment
+    HAVE_HYPOTHESIS = False
+
+
+KLASSES = (LoopClass.TIGHT, LoopClass.NON_TIGHT, LoopClass.VECTOR_ONLY,
+           LoopClass.NOT_OFFLOADABLE)
+MAX_LOOPS = 10
+
+# one blueprint row per loop: (klass index, sequential carry, in the
+# "t" region vs region-free, reads the previous loop's output)
+Blueprint = "list of (int, bool, bool, bool)"
+
+
+def program_from_blueprint(blueprint) -> LoopProgram:
+    """A synthetic LoopProgram whose chain structure is fully determined
+    by the blueprint, so the generators explore every matcher branch:
+    atom runs of every length, broken dataflow links, region boundaries,
+    and non-offloadable interruptions."""
+    loops = []
+    for i, (ki, carry, in_region, linked) in enumerate(blueprint):
+        reads = {"x"}
+        if linked and i > 0:
+            reads.add(f"v{i - 1}")
+        loops.append(Loop(
+            name=f"l{i}",
+            klass=KLASSES[ki % len(KLASSES)],
+            trip=8,
+            inner_trip=4,
+            flops_per_iter=2.0,
+            reads=frozenset(reads),
+            writes=frozenset({f"v{i}"}),
+            parent_seq="t" if in_region else None,
+            sequential_carry=bool(carry),
+        ))
+    vars_ = (Var("x", 1024),) + tuple(
+        Var(f"v{i}", 1024) for i in range(len(blueprint))
+    )
+    return LoopProgram(
+        name="synthetic", loops=tuple(loops), vars=vars_,
+        seq_regions=(SeqRegion("t", 3),),
+    )
+
+
+# ---------------------------------------------------------------------------
+# property checkers (shared by the hypothesis and fallback drivers)
+# ---------------------------------------------------------------------------
+
+
+def check_match_properties(blueprint):
+    prog = program_from_blueprint(blueprint)
+    lib = default_library()
+    matches = match_blocks(prog, lib)
+
+    # deterministic: same inputs, same matches, every time
+    assert match_blocks(prog, lib) == matches
+
+    by_name = {l.name: l for l in prog.loops}
+    index = {l.name: i for i, l in enumerate(prog.loops)}
+    all_covered = {n for m in matches for n in m.loops}
+    seen = set()
+    for m in matches:
+        entry = lib.get(m.entry)
+        # length floor and non-overlap
+        assert len(m.loops) >= entry.signature.min_len
+        assert not (set(m.loops) & seen)
+        seen.update(m.loops)
+        # consecutive in program order
+        idxs = [index[n] for n in m.loops]
+        assert idxs == list(range(idxs[0], idxs[-1] + 1))
+        chain = [by_name[n] for n in m.loops]
+        # every loop carries the entry's atom, is offloadable, and
+        # shares the chain's sequential region
+        for l in chain:
+            assert loop_atom(l) == entry.signature.atom == m.atom
+            assert l.offloadable
+            assert l.parent_seq == m.parent_seq == chain[0].parent_seq
+        # adjacent loops are dataflow-linked
+        for prev, nxt in zip(chain, chain[1:]):
+            assert nxt.reads & prev.writes
+        # forward-maximal: the loop after the chain (if any) cannot
+        # extend it — it is consumed elsewhere or breaks a condition
+        j = idxs[-1] + 1
+        if j < len(prog.loops):
+            nxt = prog.loops[j]
+            assert (
+                nxt.name in all_covered
+                or not nxt.offloadable
+                or loop_atom(nxt) != m.atom
+                or nxt.parent_seq != m.parent_seq
+                or not (nxt.reads & chain[-1].writes)
+            )
+
+
+# ---------------------------------------------------------------------------
+# drivers
+# ---------------------------------------------------------------------------
+
+
+def _fallback_blueprints(n_cases=200):
+    rng = random.Random(0xB10C5)
+    cases = [
+        [],  # empty program
+        [(0, False, True, True)],  # single loop: below every min_len
+        # a clean flash_attention chain and a clean ssd_scan chain
+        [(0, False, True, True)] * 3 + [(2, True, True, True)] * 4,
+    ]
+    for _ in range(n_cases):
+        n = rng.randrange(0, MAX_LOOPS + 1)
+        cases.append([
+            (rng.randrange(4), rng.random() < 0.5,
+             rng.random() < 0.7, rng.random() < 0.8)
+            for _ in range(n)
+        ])
+    return cases
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=200, deadline=None)
+    @given(st.lists(
+        st.tuples(st.integers(0, 3), st.booleans(), st.booleans(),
+                  st.booleans()),
+        min_size=0, max_size=MAX_LOOPS,
+    ))
+    def test_match_properties(blueprint):
+        check_match_properties(blueprint)
+
+else:
+
+    @pytest.mark.parametrize("blueprint", _fallback_blueprints())
+    def test_match_properties(blueprint):
+        check_match_properties(blueprint)
+
+
+# ---------------------------------------------------------------------------
+# pinned edge cases (identical under either driver)
+# ---------------------------------------------------------------------------
+
+
+def test_zero_matches_on_library_shape_free_program():
+    """Alternating atoms: every same-atom run has length 1, below every
+    library entry's min_len — the matcher must propose nothing, which is
+    what keeps blocks-enabled runs byte-identical on programs without
+    library-shaped chains."""
+    blueprint = [(0, False, True, True), (2, True, True, True)] * 3
+    prog = program_from_blueprint(blueprint)
+    assert match_blocks(prog, default_library()) == ()
+
+
+def test_broken_dataflow_splits_a_run():
+    """Six tight loops where the middle link is severed: the matcher
+    must emit two 3-loop chains, not one 6-loop chain."""
+    blueprint = [(0, False, True, i != 3) for i in range(6)]
+    prog = program_from_blueprint(blueprint)
+    matches = match_blocks(prog, default_library())
+    assert [m.loops for m in matches] == [
+        ("l0", "l1", "l2"), ("l3", "l4", "l5")
+    ]
+
+
+def test_region_boundary_splits_a_run():
+    """A region change between l1 and l2 breaks the chain even though
+    atoms and dataflow continue."""
+    blueprint = [(0, False, True, True), (0, False, True, True),
+                 (0, False, False, True), (0, False, False, True)]
+    prog = program_from_blueprint(blueprint)
+    matches = match_blocks(prog, default_library())
+    assert [m.loops for m in matches] == [("l0", "l1"), ("l2", "l3")]
+
+
+def test_non_offloadable_loop_interrupts_a_chain():
+    blueprint = [(0, False, True, True), (0, False, True, True),
+                 (3, False, True, True),  # NOT_OFFLOADABLE
+                 (0, False, True, True), (0, False, True, True)]
+    prog = program_from_blueprint(blueprint)
+    matches = match_blocks(prog, default_library())
+    assert [m.loops for m in matches] == [("l0", "l1"), ("l3", "l4")]

@@ -359,5 +359,8 @@ def test_evaluator_fingerprints_distinguish_configs():
                             kernels_only=True)
     assert a.fingerprint() != b.fingerprint()
     assert ep.evaluator_fingerprint(a) == a.fingerprint()
-    # plain functions fall back to their qualified name
-    assert "onemax" in ep.evaluator_fingerprint(_onemax_time)
+    # a fingerprint-less callable is refused outright: keying the
+    # persistent cache on a bare name would let two differently-
+    # configured instances share measurements
+    with pytest.raises(TypeError, match="fingerprint"):
+        ep.evaluator_fingerprint(_onemax_time)

@@ -142,14 +142,24 @@ def test_v2_point_appends_after_v1_points(tmp_path):
     sw.append_point(path, v1)
 
     v2 = _point({CID_A: 0.9}, ts="2026-01-02T00:00:00Z")
-    v2["v"] = sw.SWEEP_POINT_VERSION
+    v2["v"] = 2
     for c in v2["cells"]:
         c["quality"] = {"stability": {"k": 3, "pass_at_k": 1.0,
                                       "rel_spread": 0.009,
                                       "distinct_winners": 2},
                         "rank": {"skipped": "rank_probe disabled"}}
     traj = sw.append_point(path, v2)
-    assert traj.points == [v1, v2]
+
+    # ISSUE 8: v3 points add a per-cell block-substitution summary and
+    # append cleanly after the v1/v2 history
+    v3 = _point({CID_A: 0.85}, ts="2026-01-03T00:00:00Z")
+    v3["v"] = sw.SWEEP_POINT_VERSION
+    for c in v3["cells"]:
+        c["quality"] = {"stability": {"skipped": "zero generations"},
+                        "rank": {"skipped": "rank_probe disabled"}}
+        c["blocks"] = None  # binary cell: feature not applicable
+    traj = sw.append_point(path, v3)
+    assert traj.points == [v1, v2, v3]
     # the file-level schema version did not move — old readers still load
     d = json.loads((tmp_path / "BENCH_sweep.json").read_text())
     assert d["v"] == sw.SWEEP_SCHEMA_VERSION == 1
@@ -159,17 +169,26 @@ def test_v2_point_appends_after_v1_points(tmp_path):
     bad["v"] = 2
     with pytest.raises(ValueError, match="quality"):
         sw.validate_point(bad)
+    # ...a v3 point without per-cell blocks is invalid...
+    bad = _point({CID_A: 0.8})
+    bad["v"] = 3
+    for c in bad["cells"]:
+        c["quality"] = {"stability": {"skipped": "x"}, "rank": {}}
+    with pytest.raises(ValueError, match="blocks"):
+        sw.validate_point(bad)
     # ...but the same shape as an (implicit) v1 point stays valid
     sw.validate_point(_point({CID_A: 0.8}))
 
 
-def test_run_sweep_emits_v2_points_with_quality(tmp_path):
+def test_run_sweep_emits_v3_points_with_quality_and_blocks(tmp_path):
     cell = sw.SweepCell("himeno", "quadro-p4000", "binary")
     p = sw.run_sweep([cell], out_dir=str(tmp_path / "sweep"), smoke=True)
-    assert p["v"] == sw.SWEEP_POINT_VERSION == 2
+    assert p["v"] == sw.SWEEP_POINT_VERSION == 3
     q = p["cells"][0]["quality"]
     assert q is not None
     assert q["stability"]["k"] >= 2 and 0.0 <= q["stability"]["pass_at_k"] <= 1.0
+    # binary cells never run the block matcher: summary present but None
+    assert p["cells"][0]["blocks"] is None
     sw.validate_point(p)
 
 
@@ -248,10 +267,15 @@ def test_cell_spec_budgets_and_destinations():
     assert mixed.destinations == ("cpu", "tpu0", "tpu1")
     assert (mixed.population, mixed.generations) == MIXED_SMOKE_BUDGET
     assert mixed.warm_start and mixed.cache == "/tmp/c.jsonl"
+    # mixed cells search with the block-substitution dimension on
+    # (docs/blocks.md); v3 points record what it bought per cell
+    assert mixed.blocks
     full = sw.cell_spec(sw.SweepCell("hetero", "quadro-p4000", "mixed"))
     assert full.population is None  # spec default = full MIXED_BUDGET
+    assert full.blocks
     binary = sw.cell_spec(sw.SweepCell("himeno", "quadro-p4000", "binary"))
     assert binary.mode == "binary" and not binary.warm_start
+    assert not binary.blocks  # blocks is a mixed-mode feature
 
 
 # ---------------------------------------------------------------------------
