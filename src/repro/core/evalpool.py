@@ -50,10 +50,19 @@ Cache file format (JSONL, one record per line, append-only)::
                genomes instead of inheriting a poisoned value.
 
 Truncated/corrupt trailing lines (a killed writer) are skipped on load.
-The file is opened in append mode and flushed per record, so concurrent
-readers see a prefix of the log and a resumed search re-reads its own
-history. Use :meth:`FitnessCache.load` / :meth:`FitnessCache.flush_sync`
-for explicit control.
+Appends are **multi-owner safe**: every record is written as ONE
+``os.write`` to an ``O_APPEND`` descriptor under an advisory ``flock``,
+so concurrent FitnessCache objects over the same path — two pools in one
+process, or two service workers in different processes — never interleave
+partial lines. Concurrent readers see a prefix of the log and a resumed
+search re-reads its own history. Use :meth:`FitnessCache.load` /
+:meth:`FitnessCache.flush_sync` for explicit control.
+
+Shared (serving-side) use goes through :class:`EvalBroker`: one JSONL
+store path handing out refcounted per-fingerprint cache views, so many
+concurrent Offloaders share one in-memory cache per evaluator family and
+a stage ``close()`` never yanks the store out from under a sibling
+search (docs/serving.md).
 """
 from __future__ import annotations
 
@@ -63,7 +72,12 @@ import json
 import os
 import threading
 import time
-from typing import Callable, Dict, IO, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+try:  # advisory inter-process append lock; absent on some platforms
+    import fcntl
+except ImportError:  # pragma: no cover - non-POSIX fallback
+    fcntl = None
 
 Genes = Tuple[int, ...]
 
@@ -73,6 +87,22 @@ _CACHE_VERSION = 1
 def genes_key(genes: Sequence[int]) -> str:
     """Genome -> stable string key ('0110...')."""
     return "".join(str(int(g)) for g in genes)
+
+
+def _atomic_append(fd: int, data: bytes) -> None:
+    """Append one whole record to an ``O_APPEND`` descriptor without
+    interleaving with other writers: a single ``os.write`` under an
+    advisory exclusive ``flock`` (the lock also covers the rare partial
+    write a signal could split)."""
+    if fcntl is not None:
+        fcntl.flock(fd, fcntl.LOCK_EX)
+    try:
+        while data:
+            n = os.write(fd, data)
+            data = data[n:]
+    finally:
+        if fcntl is not None:
+            fcntl.flock(fd, fcntl.LOCK_UN)
 
 
 def evaluator_fingerprint(evaluate: Callable) -> str:
@@ -110,6 +140,16 @@ class FitnessCache:
     :func:`genes_key`, the digit string). :class:`EvalPool` swaps in the
     evaluator's ``cache_key`` when it provides one, so callers normally
     construct the cache with just ``(path, fingerprint)``.
+
+    **Multi-owner semantics.** Appends go through a single ``os.write``
+    on an ``O_APPEND`` descriptor under an advisory ``flock``, so several
+    cache objects over one path (in one process or many) never tear each
+    other's lines. ``close()`` is refcounted: each :meth:`retain` call
+    adds an owner and each ``close()`` releases one; the descriptor
+    closes when the last owner leaves, so a pipeline stage closing its
+    view of a shared store cannot double-close or strand a sibling
+    search mid-write. Constructing the object counts as the first owner,
+    which keeps single-owner callers exactly as before.
     """
 
     def __init__(
@@ -123,13 +163,16 @@ class FitnessCache:
         self.key_fn = key_fn
         self._mem: Dict[str, float] = {}
         self._lock = threading.Lock()
-        self._fh: Optional[IO[str]] = None
+        self._fd: Optional[int] = None
+        self._refs = 1  # construction is the first ownership
         self.loaded = 0  # records replayed from disk at construction
         if path:
             self.load()
             d = os.path.dirname(os.path.abspath(path))
             os.makedirs(d, exist_ok=True)
-            self._fh = open(path, "a", encoding="utf-8")
+            self._fd = os.open(
+                path, os.O_WRONLY | os.O_CREAT | os.O_APPEND, 0o644
+            )
 
     def load(self) -> int:
         """(Re)read the JSONL file; skips foreign-fingerprint, foreign-
@@ -188,7 +231,7 @@ class FitnessCache:
         key = key if key is not None else self.key_fn(genes)
         with self._lock:
             self._mem[key] = float(t)
-            if self._fh is not None:
+            if self._fd is not None:
                 rec = {
                     "v": _CACHE_VERSION,
                     "fp": self.fingerprint,
@@ -196,20 +239,92 @@ class FitnessCache:
                     "t": float(t),
                     "penalized": bool(penalized),
                 }
-                self._fh.write(json.dumps(rec) + "\n")
-                self._fh.flush()
+                _atomic_append(
+                    self._fd, (json.dumps(rec) + "\n").encode("utf-8")
+                )
+
+    def retain(self) -> "FitnessCache":
+        """Register another owner; its ``close()`` is then a release,
+        not a descriptor close. Returns self for chaining."""
+        with self._lock:
+            self._refs += 1
+        return self
 
     def flush_sync(self) -> None:
-        if self._fh is not None:
-            self._fh.flush()
-            os.fsync(self._fh.fileno())
+        if self._fd is not None:
+            os.fsync(self._fd)
 
     def close(self) -> None:
-        if self._fh is not None:
-            self._fh.close()
-            self._fh = None
+        """Release one ownership; the descriptor closes when the last
+        owner leaves. Extra closes are no-ops (never double-close)."""
+        with self._lock:
+            if self._refs > 0:
+                self._refs -= 1
+            if self._refs == 0 and self._fd is not None:
+                os.close(self._fd)
+                self._fd = None
 
     def __enter__(self) -> "FitnessCache":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+class EvalBroker:
+    """One shared fitness-cache store multiplexed across concurrent
+    searches — the serving layer's half of "one shared EvalPool".
+
+    The broker owns a single JSONL store path and hands out one
+    refcounted :class:`FitnessCache` view per evaluator fingerprint:
+
+    - concurrent searches whose evaluators share a fingerprint (e.g.
+      mixed-destination searches over different destination subsets of
+      one machine — the fingerprint is subset-independent) share ONE
+      in-memory view, so a measurement either of them pays is a hit for
+      the other *immediately*, not only after a file re-read;
+    - each view is retained per :meth:`open_cache` call, so a pipeline
+      stage closing "its" cache merely releases its reference — the
+      broker keeps every view alive (and its descriptor open) until
+      :meth:`close`;
+    - all views append to the same file through the cache's atomic
+      O_APPEND writes, so searches in *other processes* sharing the
+      store stay safe too, and a service restart replays everything.
+
+    Worker budgeting stays with the callers (an :class:`EvalPool` per
+    search, as ever); the serving layer bounds total measurement
+    concurrency by admission (max in-flight jobs x per-job workers).
+    """
+
+    def __init__(self, path: str):
+        self.path = path
+        self._views: Dict[str, FitnessCache] = {}
+        self._lock = threading.Lock()
+
+    def open_cache(self, fingerprint: str) -> FitnessCache:
+        """A retained cache view for this fingerprint; the caller's
+        ``close()`` releases its reference only."""
+        with self._lock:
+            view = self._views.get(fingerprint)
+            if view is None:
+                view = FitnessCache(self.path, fingerprint=fingerprint)
+                self._views[fingerprint] = view
+        return view.retain()
+
+    def stats(self) -> Dict[str, int]:
+        """entries per open fingerprint view (observability)."""
+        with self._lock:
+            return {fp: len(v) for fp, v in self._views.items()}
+
+    def close(self) -> None:
+        """Release the broker's own reference on every view (views still
+        retained by in-flight stages stay open until those release)."""
+        with self._lock:
+            views, self._views = list(self._views.values()), {}
+        for v in views:
+            v.close()
+
+    def __enter__(self) -> "EvalBroker":
         return self
 
     def __exit__(self, *exc) -> None:

@@ -98,6 +98,14 @@ EXIT_CODES: Dict[str, Tuple[Tuple[int, str], ...]] = {
         (3, "all cells ok, but at least one regressed beyond --tolerance "
             "vs the previous trajectory point"),
     ),
+    "serve": (
+        (0, "action completed: spec submitted (or coalesced onto an "
+            "existing job), queue drained with every job DONE/CANCELLED, "
+            "or status/result/cancel served"),
+        (1, "unknown job id, at least one job FAILED during the drain, "
+            "or the drain died on an injected crash (--fault crash-*)"),
+        (2, "usage error"),
+    ),
 }
 
 
@@ -112,6 +120,74 @@ def _add_verb(sub, name: str, help_: str) -> argparse.ArgumentParser:
         name, help=help_, epilog=_epilog(name),
         formatter_class=argparse.RawDescriptionHelpFormatter,
     )
+
+
+def _add_spec_args(p: argparse.ArgumentParser) -> None:
+    """The OffloadSpec-building flags, shared verbatim by ``run`` and
+    ``serve submit`` (consumed by :func:`_spec_from_args`)."""
+    p.add_argument("--program", required=True,
+                   help="miniapp name (himeno/nasft/hetero) or "
+                        "arch:<name>")
+    p.add_argument("--mode", choices=list(MODES), default="binary")
+    p.add_argument("--method", choices=sorted(METHODS),
+                   default="proposed", help="binary-mode configuration")
+    p.add_argument("--destinations", default="cpu,gpu,fpga",
+                   help="mixed-mode destination subset (host first)")
+    p.add_argument("--hw", default="quadro-p4000")
+    p.add_argument("--fidelity", choices=list(FIDELITIES),
+                   default="modeled",
+                   help="how candidates are priced: the analytic model "
+                        "(modeled), real subprocess wall clocks "
+                        "(measured), or the model under constants "
+                        "fitted to this machine (calibrated)")
+    p.add_argument("--repeats", type=int, default=1,
+                   help="measurement repeats per individual/probe "
+                        "(measured/calibrated fidelity)")
+    p.add_argument("--population", type=int, default=None)
+    p.add_argument("--generations", type=int, default=None)
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--timeout-s", type=float, default=None)
+    p.add_argument("--warm-start", action="store_true",
+                   help="mixed mode: seed the k-ary population with "
+                        "single-destination bests")
+    p.add_argument("--blocks", action="store_true",
+                   help="mixed mode: match loop chains against the "
+                        "kernel library and let the genome substitute "
+                        "tuned implementations (docs/blocks.md)")
+    p.add_argument("--workers", type=int, default=1)
+    p.add_argument("--executor", choices=("thread", "process"),
+                   default=None,
+                   help="measurement executor (default: thread; "
+                        "process under --fidelity measured)")
+    p.add_argument("--cache", default=None, metavar="PATH",
+                   help="persistent JSONL fitness cache (resume rides "
+                        "on it; `serve` overrides it with the queue "
+                        "directory's shared store)")
+    p.add_argument("--rel-tol", type=float, default=None,
+                   help="PCAST relative tolerance override")
+    p.add_argument("--abs-tol", type=float, default=None,
+                   help="PCAST absolute tolerance override")
+    p.add_argument("--diversity", type=float, default=None,
+                   help="fitness-sharing strength for GA selection "
+                        "(default 0 = off, byte-identical to the "
+                        "historical selection)")
+    p.add_argument("--stability-seeds", type=int, default=None,
+                   metavar="K",
+                   help="pass@k winner-stability seeds re-searched by "
+                        "the report stage (default 3; <=1 disables)")
+    p.add_argument("--stability-window", type=float, default=None,
+                   help="relative window a seed's best must land in to "
+                        "'pass' (default 0.02)")
+    p.add_argument("--stability-gate", type=float, default=None,
+                   help="fail the report stage when the winners' "
+                        "relative spread exceeds this (default: no "
+                        "gate)")
+    p.add_argument("--rank-probe", action="store_true",
+                   help="wall-clock the two winner projections so even "
+                        "modeled/calibrated runs record modeled-vs-"
+                        "measured rank correlation")
+    p.add_argument("--smoke", action="store_true",
+                   help="CI-sized budget (small GA)")
 
 
 def _default_artifact(spec: OffloadSpec) -> str:
@@ -227,6 +303,102 @@ def _cmd_sweep(ap: argparse.ArgumentParser, args: argparse.Namespace) -> int:
     return 3 if sw.flag_regressions(prev, point, tol) else 0
 
 
+def _cmd_serve(ap: argparse.ArgumentParser, args: argparse.Namespace) -> int:
+    """The serve verb: drive an OffloadService over --dir. Exit codes
+    per EXIT_CODES['serve']."""
+    from repro.serve.admission import AdmissionPolicy
+    from repro.serve.jobs import FAILED, JobError
+    from repro.serve.offload_service import (
+        FaultPlan,
+        OffloadService,
+        ServiceCrash,
+    )
+
+    policy_kw = {}
+    for field in ("max_in_flight", "max_generations", "max_population",
+                  "max_workers", "max_stability_seeds"):
+        v = getattr(args, field, None)
+        if v is not None:
+            policy_kw[field] = v
+    fault = None
+    if getattr(args, "fault", None):
+        try:
+            fault = FaultPlan.parse(args.fault)
+        except ValueError as e:
+            ap.error(str(e))
+    try:
+        policy = AdmissionPolicy(**policy_kw)
+    except ValueError as e:
+        ap.error(str(e))
+    svc = OffloadService(args.dir, policy=policy, fault=fault)
+
+    if args.action == "submit":
+        try:
+            spec = _spec_from_args(args)
+        except ValueError as e:
+            ap.error(str(e))
+        receipt = svc.submit(spec, force=args.force)
+        if args.quiet:
+            print(receipt.job_id)
+        elif receipt.coalesced:
+            print(f"coalesced onto existing job {receipt.job_id} "
+                  f"(spec digest {receipt.digest})")
+        else:
+            line = f"queued {receipt.job_id} (spec digest {receipt.digest})"
+            if receipt.clamped:
+                clamps = ", ".join(
+                    f"{k} {req}->{got}"
+                    for k, (req, got) in sorted(receipt.clamped.items())
+                )
+                line += f"; admission clamped: {clamps}"
+            print(line)
+        return 0
+
+    if args.action == "run":
+        try:
+            jobs = svc.run()
+        except ServiceCrash as e:
+            print(f"service crashed: {e}", file=sys.stderr)
+            return 1
+        failed = 0
+        for j in jobs:
+            extra = f"  !! {j.error}" if j.error else ""
+            dup = svc.store.coalesced_count(j.id)
+            dup_txt = f"  (+{dup} coalesced)" if dup else ""
+            print(f"{j.id:24s} {j.state:9s} restarts={j.restarts}"
+                  f"{dup_txt}{extra}")
+            failed += j.state == FAILED
+        return 1 if failed else 0
+
+    try:
+        if args.action == "status":
+            if args.job:
+                j = svc.status(args.job)
+                print(f"{j.id}: {j.state} (seq {j.seq}, restarts "
+                      f"{j.restarts}, digest {j.digest}, "
+                      f"{svc.store.coalesced_count(j.id)} coalesced)")
+                if j.clamped:
+                    for k, (req, got) in sorted(j.clamped.items()):
+                        print(f"  clamped {k}: {req} -> {got}")
+                if j.error:
+                    print(f"  error: {j.error}")
+            else:
+                for j in svc.jobs():
+                    print(f"{j.id:24s} {j.state:9s} restarts={j.restarts}")
+        elif args.action == "result":
+            art = svc.result(args.job)
+            print(art.summary())
+            print(f"artifact: {svc.store.artifact_path(args.job)}")
+            print(f"trace: {svc.store.trace_path(args.job)}")
+        else:  # cancel
+            svc.cancel(args.job)
+            print(f"cancel requested: {args.job}")
+    except JobError as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 1
+    return 0
+
+
 def main(argv: Optional[List[str]] = None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.offload",
@@ -236,75 +408,14 @@ def main(argv: Optional[List[str]] = None) -> int:
     sub = ap.add_subparsers(dest="cmd", required=True)
 
     run = _add_verb(sub, "run", "run the pipeline for a new spec")
-    run.add_argument("--program", required=True,
-                     help="miniapp name (himeno/nasft/hetero) or "
-                          "arch:<name>")
-    run.add_argument("--mode", choices=list(MODES), default="binary")
-    run.add_argument("--method", choices=sorted(METHODS),
-                     default="proposed", help="binary-mode configuration")
-    run.add_argument("--destinations", default="cpu,gpu,fpga",
-                     help="mixed-mode destination subset (host first)")
-    run.add_argument("--hw", default="quadro-p4000")
-    run.add_argument("--fidelity", choices=list(FIDELITIES),
-                     default="modeled",
-                     help="how candidates are priced: the analytic model "
-                          "(modeled), real subprocess wall clocks "
-                          "(measured), or the model under constants "
-                          "fitted to this machine (calibrated)")
-    run.add_argument("--repeats", type=int, default=1,
-                     help="measurement repeats per individual/probe "
-                          "(measured/calibrated fidelity)")
+    _add_spec_args(run)
     run.add_argument("--calibration", default=None, metavar="PATH",
                      help="install a saved .calib.json before building "
                           "the spec, so --hw can name its entry")
-    run.add_argument("--population", type=int, default=None)
-    run.add_argument("--generations", type=int, default=None)
-    run.add_argument("--seed", type=int, default=0)
-    run.add_argument("--timeout-s", type=float, default=None)
-    run.add_argument("--warm-start", action="store_true",
-                     help="mixed mode: seed the k-ary population with "
-                          "single-destination bests")
-    run.add_argument("--blocks", action="store_true",
-                     help="mixed mode: match loop chains against the "
-                          "kernel library and let the genome substitute "
-                          "tuned implementations (docs/blocks.md)")
-    run.add_argument("--workers", type=int, default=1)
-    run.add_argument("--executor", choices=("thread", "process"),
-                     default=None,
-                     help="measurement executor (default: thread; "
-                          "process under --fidelity measured)")
-    run.add_argument("--cache", default=None, metavar="PATH",
-                     help="persistent JSONL fitness cache (resume rides "
-                          "on it)")
-    run.add_argument("--rel-tol", type=float, default=None,
-                     help="PCAST relative tolerance override")
-    run.add_argument("--abs-tol", type=float, default=None,
-                     help="PCAST absolute tolerance override")
-    run.add_argument("--diversity", type=float, default=None,
-                     help="fitness-sharing strength for GA selection "
-                          "(default 0 = off, byte-identical to the "
-                          "historical selection)")
-    run.add_argument("--stability-seeds", type=int, default=None,
-                     metavar="K",
-                     help="pass@k winner-stability seeds re-searched by "
-                          "the report stage (default 3; <=1 disables)")
-    run.add_argument("--stability-window", type=float, default=None,
-                     help="relative window a seed's best must land in to "
-                          "'pass' (default 0.02)")
-    run.add_argument("--stability-gate", type=float, default=None,
-                     help="fail the report stage when the winners' "
-                          "relative spread exceeds this (default: no "
-                          "gate)")
-    run.add_argument("--rank-probe", action="store_true",
-                     help="wall-clock the two winner projections so even "
-                          "modeled/calibrated runs record modeled-vs-"
-                          "measured rank correlation")
     run.add_argument("--artifact", default=None, metavar="PATH",
                      help="artifact path (default <program>-<mode>"
                           ".offload.json)")
     run.add_argument("--until", choices=STAGES, default="report")
-    run.add_argument("--smoke", action="store_true",
-                     help="CI-sized budget (small GA)")
     run.add_argument("--no-trace", action="store_true",
                      help="skip writing the JSONL trace next to the "
                           "artifact")
@@ -400,10 +511,71 @@ def main(argv: Optional[List[str]] = None) -> int:
     swp.add_argument("--quiet", action="store_true",
                      help="suppress per-cell progress lines")
 
+    srv = _add_verb(
+        sub, "serve",
+        "offload-as-a-service against a filesystem queue directory: "
+        "submit specs, drain the queue concurrently over one shared "
+        "fitness cache, query/cancel jobs (docs/serving.md)",
+    )
+    srv_sub = srv.add_subparsers(dest="action", required=True)
+
+    def _srv_action(name: str, help_: str) -> argparse.ArgumentParser:
+        p = srv_sub.add_parser(name, help=help_)
+        p.add_argument("--dir", required=True, metavar="DIR",
+                       help="the service queue directory (jobs, traces "
+                            "and the shared fitness cache live under it)")
+        return p
+
+    ssub = _srv_action("submit", "admit one spec into the queue "
+                                 "(duplicates coalesce onto the "
+                                 "existing job)")
+    _add_spec_args(ssub)
+    ssub.add_argument("--force", action="store_true",
+                      help="run a fresh job even if an identical spec "
+                           "is already queued/running/done (it still "
+                           "shares the fitness cache)")
+    ssub.add_argument("--max-generations", type=int, default=None,
+                      help="admission clamp on the GA generation budget")
+    ssub.add_argument("--max-population", type=int, default=None,
+                      help="admission clamp on the GA population")
+    ssub.add_argument("--max-workers", type=int, default=None,
+                      help="admission clamp on per-job eval workers")
+    ssub.add_argument("--max-stability-seeds", type=int, default=None,
+                      help="admission clamp on report-stage stability "
+                           "re-searches")
+    ssub.add_argument("--quiet", action="store_true",
+                      help="print only the job id (shell capture)")
+
+    srun = _srv_action("run", "recover + drain the queue: resume every "
+                              "non-terminal job, run QUEUED jobs "
+                              "concurrently")
+    srun.add_argument("--max-in-flight", type=int, default=None,
+                      help="concurrent jobs bound (default 2)")
+    srun.add_argument("--fault", default=None, metavar="SPEC",
+                      help="fault-injection harness: <kind>:<arg>"
+                           "[@<job-match>], kinds raise-in-stage, "
+                           "raise-in-search, crash-after-stage, "
+                           "crash-in-search, kill-after-stage, "
+                           "kill-in-search (docs/serving.md)")
+
+    sstat = _srv_action("status", "job table, or one job's record")
+    sstat.add_argument("--job", default=None, metavar="ID")
+
+    sres = _srv_action("result", "print a job's artifact summary + "
+                                 "artifact/trace paths")
+    sres.add_argument("--job", required=True, metavar="ID")
+
+    scan = _srv_action("cancel", "request cancellation (honored before "
+                                 "the job's next pipeline stage)")
+    scan.add_argument("--job", required=True, metavar="ID")
+
     args = ap.parse_args(argv)
 
     if args.cmd == "sweep":
         return _cmd_sweep(ap, args)
+
+    if args.cmd == "serve":
+        return _cmd_serve(ap, args)
 
     if args.cmd == "calibrate":
         from repro.offload import calibrate as cal_mod

@@ -178,6 +178,15 @@ class Offloader:
         Injected monotonic clock for the trace spans (tests pin it to
         make whole trace files deterministic; timing never enters the
         trace digest either way).
+    cache_factory:
+        Injected ``evaluator -> FitnessCache`` opener overriding the
+        default per-stage ``FitnessCache(spec.cache, fingerprint)``
+        construction. The serving layer (repro.serve) passes an
+        :class:`~repro.core.evalpool.EvalBroker` view opener here so
+        concurrent jobs share one in-memory store; the stage still calls
+        ``close()`` on what it gets back, so factories must hand out
+        refcounted views. ``None`` (the default) keeps single-run
+        behavior byte-identical to the pre-serving pipeline.
     """
 
     def __init__(
@@ -192,6 +201,9 @@ class Offloader:
         trace: bool = True,
         trace_path: Optional[str] = None,
         trace_clock: Optional[Callable[[], float]] = None,
+        cache_factory: Optional[
+            Callable[[Callable], Optional[FitnessCache]]
+        ] = None,
     ):
         if artifact is not None and artifact.spec != spec:
             raise ValueError("artifact was produced by a different spec; "
@@ -206,6 +218,7 @@ class Offloader:
         self._trace_enabled = trace
         self._trace_path = trace_path
         self._trace_clock = trace_clock
+        self._cache_factory = cache_factory
         self._tracer: Optional[trace_mod.TraceWriter] = None
         self._trace_header_written = False
         self._adapter = None  # built lazily (adapters may import jax-side)
@@ -229,6 +242,9 @@ class Offloader:
         trace: bool = True,
         trace_path: Optional[str] = None,
         trace_clock: Optional[Callable[[], float]] = None,
+        cache_factory: Optional[
+            Callable[[Callable], Optional[FitnessCache]]
+        ] = None,
     ) -> "Offloader":
         """Continue a saved artifact: its spec is authoritative and its
         completed stages are skipped on the next :meth:`run`. An
@@ -238,7 +254,7 @@ class Offloader:
         return cls(art.spec, artifact=art, artifact_path=artifact_path,
                    evaluator=evaluator, hw=hw, on_generation=on_generation,
                    trace=trace, trace_path=trace_path,
-                   trace_clock=trace_clock)
+                   trace_clock=trace_clock, cache_factory=cache_factory)
 
     # -- plumbing ----------------------------------------------------------
 
@@ -290,6 +306,10 @@ class Offloader:
             else self.adapter.build_evaluator()
 
     def _open_cache(self, evaluator) -> Optional[FitnessCache]:
+        if self._cache_factory is not None:
+            # serving-side injection: a refcounted shared-store view
+            # (the stage's close() releases its reference only)
+            return self._cache_factory(evaluator)
         if not self.spec.cache:
             return None
         return FitnessCache(self.spec.cache,

@@ -80,6 +80,14 @@ class OffloadResult:
     # content digest (timing-stripped; repro.offload.trace), so the
     # `trace` CLI verb can prove a trace file belongs to this artifact
     trace: Optional[Dict[str, Any]] = None
+    # serving-layer job record (repro.serve.jobs, docs/serving.md): when
+    # the artifact is owned by the offload service, its lifecycle state
+    # (queued/running/done/failed/cancelled), restarts, admission clamps
+    # etc. live HERE — the resumable artifact IS the job-state record,
+    # which is what makes crash recovery "resume every artifact whose
+    # job is non-terminal". Additive: None for every non-service run,
+    # keeping those artifact bytes identical to pre-serving ones.
+    job: Optional[Dict[str, Any]] = None
 
     # -- stage bookkeeping --------------------------------------------------
 
@@ -151,6 +159,8 @@ class OffloadResult:
         }
         if self.trace is not None:  # additive: v1 artifacts stay loadable
             out["trace"] = self.trace
+        if self.job is not None:  # additive: service-owned artifacts only
+            out["job"] = self.job
         return out
 
     def save(self, path: Optional[str] = None) -> Optional[str]:
@@ -171,7 +181,7 @@ class OffloadResult:
                 f"unsupported artifact version {d.get('v')!r} in {path}"
             )
         out = cls(spec=OffloadSpec.from_dict(d["spec"]), path=path,
-                  trace=d.get("trace"))
+                  trace=d.get("trace"), job=d.get("job"))
         for rec in d.get("stages", []):
             sr = StageRecord.from_dict(rec)
             if sr.name in STAGES:

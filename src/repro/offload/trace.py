@@ -370,6 +370,15 @@ def render_trace(trace: Trace, artifact=None) -> str:
             last_span_idx[rec["name"]] = i
     run_no = 0
     for i, rec in enumerate(trace.records):
+        if rec["kind"] == "event" and rec.get("span") == "service":
+            # serving-layer job events (docs/serving.md) have no parent
+            # span record; render them inline where they occurred.
+            # Additive: non-service traces never carry these.
+            a = rec.get("attrs", {})
+            detail = ", ".join(f"{k}={_short(v)}"
+                               for k, v in sorted(a.items()))
+            rows.append(f"├─ service::{rec.get('name')}  {detail}")
+            continue
         if rec["kind"] == "run":
             run_no += 1
             rows.append(

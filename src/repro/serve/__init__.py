@@ -1,0 +1,39 @@
+"""Serving layer.
+
+Two unrelated tenants share this package:
+
+- :mod:`repro.serve.engine` — the LLM decode-engine demo the seed
+  shipped (jax-heavy; driven by :mod:`repro.launch.serve`);
+- the **offload service** (docs/serving.md) — :mod:`.offload_service`,
+  :mod:`.jobs`, :mod:`.admission`: queue-fed concurrent `Offloader`
+  runs over one shared fitness-cache store.
+
+Attribute access is lazy so importing one tenant never pays for (or
+requires the dependencies of) the other.
+"""
+from typing import Any
+
+_SERVICE_EXPORTS = {
+    "OffloadService": "offload_service",
+    "FaultPlan": "offload_service",
+    "ServiceCrash": "offload_service",
+    "SubmitReceipt": "offload_service",
+    "AdmissionPolicy": "admission",
+    "AdmissionDecision": "admission",
+    "admit": "admission",
+    "Job": "jobs",
+    "JobError": "jobs",
+    "JobStore": "jobs",
+    "coalesce_key": "jobs",
+}
+
+__all__ = sorted(_SERVICE_EXPORTS)
+
+
+def __getattr__(name: str) -> Any:
+    mod_name = _SERVICE_EXPORTS.get(name)
+    if mod_name is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+
+    return getattr(importlib.import_module(f"{__name__}.{mod_name}"), name)

@@ -1,0 +1,94 @@
+"""Admission control for the offload service.
+
+Three concerns, all decided at submit time (before a job record exists)
+so every decision is visible in the job trace:
+
+* **in-flight bound** — the service scheduler runs at most
+  ``max_in_flight`` jobs concurrently (enforced by the executor width in
+  :mod:`repro.serve.offload_service`, recorded here for the trace).
+* **budget clamps** — per-request generation/population/measurement
+  budgets: a submitted spec asking for more than the policy allows is
+  admitted with the field clamped down (never rejected — the paper's
+  service converts whatever users submit; the operator just bounds how
+  much machine time one request can claim). Clamps are recorded as
+  ``{field: [requested, granted]}`` in the job record.
+* **duplicate coalescing** — handled by the service via
+  :func:`repro.serve.jobs.coalesce_key`; the policy only says whether it
+  is on (it is by default — a repeat submission should be one search
+  plus cache hits, not two searches).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+from repro.offload.spec import OffloadSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmissionPolicy:
+    """Operator knobs (docs/serving.md#admission-knobs). ``None`` for
+    any max means "no bound on that field"."""
+
+    max_in_flight: int = 2
+    max_generations: Optional[int] = None
+    max_population: Optional[int] = None
+    max_workers: Optional[int] = None
+    max_stability_seeds: Optional[int] = None
+    coalesce: bool = True
+
+    def __post_init__(self):
+        if self.max_in_flight < 1:
+            raise ValueError("max_in_flight must be >= 1")
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmissionDecision:
+    """What admission did to one submission."""
+
+    spec: OffloadSpec  # the (possibly clamped) spec the job will run
+    clamped: Dict[str, List[int]]  # field -> [requested, granted]
+
+    @property
+    def was_clamped(self) -> bool:
+        return bool(self.clamped)
+
+
+def _clamp(requested: Optional[int], bound: Optional[int]
+           ) -> Tuple[Optional[int], bool]:
+    """(granted, changed): cap ``requested`` at ``bound``. A request of
+    None means "library default", which may exceed the bound — so a
+    bounded policy pins None requests to the bound too."""
+    if bound is None:
+        return requested, False
+    if requested is None or requested > bound:
+        return bound, True
+    return requested, False
+
+
+def admit(spec: OffloadSpec, policy: AdmissionPolicy) -> AdmissionDecision:
+    """Apply the policy's budget clamps to one submitted spec."""
+    clamped: Dict[str, List[int]] = {}
+    changes: Dict[str, object] = {}
+
+    for field, bound in (("generations", policy.max_generations),
+                         ("population", policy.max_population),
+                         ("workers", policy.max_workers)):
+        requested = getattr(spec, field)
+        granted, changed = _clamp(requested, bound)
+        if changed:
+            changes[field] = granted
+            clamped[field] = [requested if requested is not None else -1,
+                              granted]
+
+    if policy.max_stability_seeds is not None:
+        requested = spec.ga.stability_seeds
+        granted, changed = _clamp(requested, policy.max_stability_seeds)
+        if changed:
+            changes["ga"] = dataclasses.replace(
+                spec.ga, stability_seeds=granted)
+            clamped["stability_seeds"] = [
+                requested if requested is not None else -1, granted]
+
+    out = dataclasses.replace(spec, **changes) if changes else spec
+    return AdmissionDecision(spec=out, clamped=clamped)

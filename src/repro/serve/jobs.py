@@ -1,0 +1,290 @@
+"""Job lifecycle + crash-safe job store for the offload service.
+
+A **job** is one admitted :class:`~repro.offload.spec.OffloadSpec`
+submission. Its state record is not a separate database: the resumable
+:class:`~repro.offload.result.OffloadResult` artifact carries a ``job``
+dict (id, state, restarts, admission clamps, error), so the artifact the
+pipeline already saves atomically after every stage IS the job-state
+record. Crash recovery falls out: a restarted service scans the jobs
+directory, re-queues every artifact whose job is non-terminal, and
+``Offloader.resume`` + the shared fitness cache do the rest
+(docs/serving.md).
+
+State machine (every write goes through :func:`transition`, which
+refuses anything not in :data:`TRANSITIONS`)::
+
+    QUEUED ──> RUNNING ──> DONE
+       │          │ ├────> FAILED
+       │          │ └────> CANCELLED
+       │          └──────> QUEUED      (crash-restart re-queue)
+       └─────────────────> CANCELLED   (cancelled before start)
+
+DONE/FAILED/CANCELLED are terminal: no transition leaves them, so a job
+reaches exactly one terminal state (property-tested in
+tests/test_service_properties.py).
+
+Store layout under one queue directory (filesystem-backed — tests, CI
+and the ``serve`` CLI drive it without sockets)::
+
+    <root>/jobs/<id>.offload.json         the artifact == job record
+    <root>/jobs/<id>.offload.trace.jsonl  the job's trace (service
+                                          events + pipeline spans)
+    <root>/jobs/<id>.cancel               cancellation request marker
+    <root>/jobs/<id>.coalesced            one line per coalesced
+                                          duplicate submission
+    <root>/cache/fitness.jsonl            the shared fitness-cache store
+
+Single-writer discipline: only the service process that owns a job's
+execution writes its artifact (submission creates it once and never
+touches it again; duplicate submissions append to the side-car
+``.coalesced`` file instead, and cancellation is a marker file) — so the
+atomic tmp+rename saves never race each other.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import threading
+import time
+from typing import Dict, List, Optional
+
+from repro.offload.result import OffloadResult, atomic_json_save
+from repro.offload.spec import OffloadSpec
+
+# -- states ----------------------------------------------------------------
+
+QUEUED = "queued"
+RUNNING = "running"
+DONE = "done"
+FAILED = "failed"
+CANCELLED = "cancelled"
+
+STATES = (QUEUED, RUNNING, DONE, FAILED, CANCELLED)
+TERMINAL = (DONE, FAILED, CANCELLED)
+
+# every legal (from -> to) edge; RUNNING -> QUEUED is the crash-restart
+# re-queue (the process died mid-job, nothing terminal happened)
+TRANSITIONS: Dict[str, tuple] = {
+    QUEUED: (RUNNING, CANCELLED),
+    RUNNING: (DONE, FAILED, CANCELLED, QUEUED),
+    DONE: (),
+    FAILED: (),
+    CANCELLED: (),
+}
+
+
+class JobError(RuntimeError):
+    """An illegal job operation (invalid transition, unknown job id)."""
+
+
+def can_transition(state: str, to: str) -> bool:
+    if state not in TRANSITIONS:
+        raise JobError(f"unknown job state {state!r}")
+    if to not in TRANSITIONS:
+        raise JobError(f"unknown job state {to!r}")
+    return to in TRANSITIONS[state]
+
+
+def coalesce_key(spec: OffloadSpec) -> str:
+    """Digest of the spec's *result-determining* fields: the dedup key
+    for duplicate-submission coalescing. Runtime-only knobs that cannot
+    change the search result are excluded — ``cache`` (the service
+    rewrites it to the shared store anyway) and ``workers`` (pool
+    determinism guarantees identical results at any width) — so two
+    users asking for the same search coalesce even if their clients
+    filled those fields differently."""
+    d = spec.to_dict()
+    d.pop("cache", None)
+    d.pop("workers", None)
+    return hashlib.sha256(
+        json.dumps(d, sort_keys=True).encode("utf-8")
+    ).hexdigest()[:16]
+
+
+@dataclasses.dataclass
+class Job:
+    """In-memory view of one artifact's ``job`` record."""
+
+    id: str
+    state: str
+    digest: str  # coalesce_key of the (normalized) spec
+    seq: int  # admission order (scheduler runs lowest first)
+    restarts: int = 0  # crash-restart re-queues survived
+    clamped: Dict[str, List[int]] = dataclasses.field(default_factory=dict)
+    error: Optional[str] = None
+    submitted_ts: float = 0.0  # wall clock, informational only
+
+    def to_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "Job":
+        return cls(
+            id=str(d["id"]),
+            state=str(d["state"]),
+            digest=str(d["digest"]),
+            seq=int(d["seq"]),
+            restarts=int(d.get("restarts", 0)),
+            clamped=dict(d.get("clamped", {})),
+            error=d.get("error"),
+            submitted_ts=float(d.get("submitted_ts", 0.0)),
+        )
+
+    @property
+    def terminal(self) -> bool:
+        return self.state in TERMINAL
+
+
+class JobStore:
+    """The filesystem job store: artifacts-as-job-records under one
+    queue directory, plus cancel markers and the coalesce side-cars.
+
+    Thread-safe within a process (submission/scan lock); across
+    processes the single-writer discipline above plus atomic saves and
+    marker files keep it consistent.
+    """
+
+    def __init__(self, root: str):
+        self.root = root
+        self.jobs_dir = os.path.join(root, "jobs")
+        self.cache_path = os.path.join(root, "cache", "fitness.jsonl")
+        os.makedirs(self.jobs_dir, exist_ok=True)
+        os.makedirs(os.path.dirname(self.cache_path), exist_ok=True)
+        self._lock = threading.Lock()
+
+    # -- paths -------------------------------------------------------------
+
+    def artifact_path(self, job_id: str) -> str:
+        return os.path.join(self.jobs_dir, f"{job_id}.offload.json")
+
+    def trace_path(self, job_id: str) -> str:
+        return os.path.join(self.jobs_dir, f"{job_id}.offload.trace.jsonl")
+
+    def _cancel_path(self, job_id: str) -> str:
+        return os.path.join(self.jobs_dir, f"{job_id}.cancel")
+
+    def _coalesced_path(self, job_id: str) -> str:
+        return os.path.join(self.jobs_dir, f"{job_id}.coalesced")
+
+    # -- creation / loading ------------------------------------------------
+
+    def create(self, spec: OffloadSpec, job: Job) -> OffloadResult:
+        """Persist a fresh QUEUED artifact-as-job-record. Refuses to
+        overwrite an existing job id."""
+        path = self.artifact_path(job.id)
+        with self._lock:
+            if os.path.exists(path):
+                raise JobError(f"job {job.id!r} already exists")
+            art = OffloadResult(spec=spec, path=path, job=job.to_dict())
+            art.save()
+        return art
+
+    def load(self, job_id: str) -> OffloadResult:
+        path = self.artifact_path(job_id)
+        if not os.path.exists(path):
+            raise JobError(f"unknown job {job_id!r} (no {path})")
+        art = OffloadResult.load(path)
+        if art.job is None:
+            raise JobError(f"artifact {path} carries no job record")
+        return art
+
+    def job(self, job_id: str) -> Job:
+        return Job.from_dict(self.load(job_id).job)
+
+    def list_jobs(self) -> List[Job]:
+        """Every job, in admission (seq) order."""
+        out: List[Job] = []
+        for name in os.listdir(self.jobs_dir):
+            if not name.endswith(".offload.json"):
+                continue
+            art = OffloadResult.load(os.path.join(self.jobs_dir, name))
+            if art.job is not None:
+                out.append(Job.from_dict(art.job))
+        out.sort(key=lambda j: (j.seq, j.id))
+        return out
+
+    def by_digest(self, digest: str) -> List[Job]:
+        return [j for j in self.list_jobs() if j.digest == digest]
+
+    def next_seq(self) -> int:
+        jobs = self.list_jobs()
+        return (max(j.seq for j in jobs) + 1) if jobs else 0
+
+    def allocate_id(self, digest: str) -> str:
+        """A fresh job id for this digest: the anchor ``jb-<digest>``,
+        or ``jb-<digest>-rN`` when forced duplicates already exist."""
+        base = f"jb-{digest[:10]}"
+        if not os.path.exists(self.artifact_path(base)):
+            return base
+        n = 2
+        while os.path.exists(self.artifact_path(f"{base}-r{n}")):
+            n += 1
+        return f"{base}-r{n}"
+
+    # -- state transitions -------------------------------------------------
+
+    def transition(self, art: OffloadResult, to: str,
+                   error: Optional[str] = None,
+                   restarted: bool = False) -> Job:
+        """Validate + apply + persist one state transition on an
+        artifact-as-job-record. Raises :class:`JobError` (and leaves the
+        record untouched) on an illegal edge."""
+        job = Job.from_dict(art.job)
+        if not can_transition(job.state, to):
+            raise JobError(
+                f"job {job.id}: illegal transition {job.state} -> {to}"
+            )
+        job.state = to
+        if error is not None:
+            job.error = error
+        if restarted:
+            job.restarts += 1
+        art.job = job.to_dict()
+        art.save()
+        return job
+
+    # -- cancellation + coalescing markers ---------------------------------
+
+    def request_cancel(self, job_id: str) -> Job:
+        """Record a cancellation request (marker file: safe to write
+        from any process while the service owns the artifact). The
+        service honors it before the next stage; an already-terminal
+        job ignores it."""
+        job = self.job(job_id)  # raises JobError on unknown id
+        with open(self._cancel_path(job_id), "w", encoding="utf-8") as fh:
+            fh.write(f"{time.time()}\n")
+        return job
+
+    def cancel_requested(self, job_id: str) -> bool:
+        return os.path.exists(self._cancel_path(job_id))
+
+    def record_coalesced(self, anchor_id: str, digest: str) -> int:
+        """Append one duplicate-submission line to the anchor's
+        side-car (never touches the anchor's artifact — it may be
+        mid-save by the running service). Returns the duplicate count."""
+        path = self._coalesced_path(anchor_id)
+        with self._lock:
+            with open(path, "a", encoding="utf-8") as fh:
+                fh.write(json.dumps(
+                    {"digest": digest, "ts": time.time()}
+                ) + "\n")
+            with open(path, "r", encoding="utf-8") as fh:
+                return sum(1 for line in fh if line.strip())
+
+    def coalesced_count(self, job_id: str) -> int:
+        path = self._coalesced_path(job_id)
+        if not os.path.exists(path):
+            return 0
+        with open(path, "r", encoding="utf-8") as fh:
+            return sum(1 for line in fh if line.strip())
+
+
+# re-exported for callers that only need the atomic save helper
+__all__ = [
+    "QUEUED", "RUNNING", "DONE", "FAILED", "CANCELLED",
+    "STATES", "TERMINAL", "TRANSITIONS",
+    "Job", "JobError", "JobStore",
+    "can_transition", "coalesce_key", "atomic_json_save",
+]

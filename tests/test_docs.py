@@ -50,6 +50,21 @@ def test_benchmarks_doc_is_cross_linked_and_complete():
         assert "benchmarks.md" in text, f"{doc} must link benchmarks.md"
 
 
+def test_serving_doc_is_cross_linked_and_complete():
+    """docs/serving.md documents the job lifecycle, admission knobs,
+    crash recovery and the CLI cookbook, and the suite points at it."""
+    srv = (REPO / "docs" / "serving.md").read_text(encoding="utf-8")
+    for required in ("queued", "running", "cancelled", "coalesc",
+                     "max_in_flight", "crash", "resume", "hit rate",
+                     "serve submit", "serve run", "fault", "fingerprint"):
+        assert required.lower() in srv.lower(), required
+    for doc in ("architecture.md", "pipeline.md"):
+        text = (REPO / "docs" / doc).read_text(encoding="utf-8")
+        assert "serving.md" in text, f"{doc} must link serving.md"
+    readme = (REPO / "README.md").read_text(encoding="utf-8")
+    assert "docs/serving.md" in readme
+
+
 def test_roadmap_is_reference_checked():
     """ROADMAP.md is in the checker's file set (its stale /root/related
     references were the ISSUE-6 docs fix; keep it honest), and no doc
@@ -66,7 +81,7 @@ def test_cli_verbs_document_exit_codes(capsys):
     from repro.offload.__main__ import EXIT_CODES, main
 
     assert set(EXIT_CODES) == {"run", "resume", "report", "trace",
-                               "calibrate", "sweep"}
+                               "calibrate", "sweep", "serve"}
     for verb, codes in EXIT_CODES.items():
         assert codes[0][0] == 0, f"{verb} must document success"
         assert any(c == 2 for c, _ in codes), \

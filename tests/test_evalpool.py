@@ -352,6 +352,101 @@ def test_pooled_generation_wall_clock_speedup():
     assert tel1.wall_s / tel4.wall_s >= 3.0
 
 
+# ---------------------------------------------------------------------------
+# multi-owner store: the serving layer shares ONE file across pools
+# ---------------------------------------------------------------------------
+
+
+def test_two_caches_two_threads_hammer_one_store(tmp_path):
+    """Regression for the multi-owner hazard: two cache objects (as two
+    concurrent service jobs would hold) appending to one store must
+    never tear a line or lose a record — O_APPEND + flock + one write
+    per record."""
+    path = str(tmp_path / "fitness.jsonl")
+    caches = [ep.FitnessCache(path, fingerprint=f"fp-{i}")
+              for i in range(2)]
+    n = 200
+
+    def hammer(idx):
+        for j in range(n):
+            caches[idx].put((idx, j), float(j) + 0.5)
+
+    threads = [threading.Thread(target=hammer, args=(i,))
+               for i in range(2)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    for c in caches:
+        c.close()
+    with open(path, encoding="utf-8") as fh:
+        lines = fh.readlines()
+    assert len(lines) == 2 * n
+    import json as _json
+
+    for line in lines:
+        assert line.endswith("\n"), "torn (unterminated) record"
+        _json.loads(line)
+    for i in range(2):
+        replay = ep.FitnessCache(path, fingerprint=f"fp-{i}")
+        assert len(replay) == n
+        assert replay.get((i, n - 1)) == float(n - 1) + 0.5
+        replay.close()
+
+
+def test_cache_refcount_and_idempotent_close(tmp_path):
+    path = str(tmp_path / "fitness.jsonl")
+    cache = ep.FitnessCache(path, fingerprint="fp")
+    assert cache.retain() is cache
+    cache.close()  # releases the retain(); construction ref remains
+    cache.put((0,), 1.0)  # descriptor must still be open
+    cache.close()
+    assert cache._fd is None
+    cache.close()  # double-close is a no-op, never an OSError
+    cache.close()
+    replay = ep.FitnessCache(path, fingerprint="fp")
+    assert replay.get((0,)) == 1.0
+
+
+def test_broker_shares_views_per_fingerprint(tmp_path):
+    path = str(tmp_path / "fitness.jsonl")
+    with ep.EvalBroker(path) as broker:
+        a = broker.open_cache("fp-x")
+        b = broker.open_cache("fp-x")
+        other = broker.open_cache("fp-y")
+        assert a is b and a is not other
+        # a measurement one job pays is the sibling's hit IMMEDIATELY —
+        # in memory, not only after a file re-read
+        a.put((1, 0), 3.25)
+        assert b.get((1, 0)) == 3.25
+        assert other.get((1, 0)) is None  # fingerprints stay isolated
+        assert broker.stats() == {"fp-x": 1, "fp-y": 0}
+        # a stage closing "its" cache releases one reference only:
+        # the shared view stays usable for the sibling and the broker
+        b.close()
+        a.put((1, 1), 4.5)
+        other.close()
+    # broker.close() released ITS references; `a` is still retained by
+    # this caller (two open_cache calls, one close so far)
+    assert other._fd is None and a._fd is not None
+    a.close()
+    assert a._fd is None
+    replay = ep.FitnessCache(path, fingerprint="fp-x")
+    assert len(replay) == 2
+
+
+def test_broker_view_held_by_stage_survives_broker_close(tmp_path):
+    # an in-flight stage's retained view outlives broker.close(): the
+    # descriptor closes only when the LAST owner releases
+    path = str(tmp_path / "fitness.jsonl")
+    broker = ep.EvalBroker(path)
+    view = broker.open_cache("fp")
+    broker.close()
+    view.put((7,), 7.0)  # still open: the stage holds a reference
+    view.close()
+    assert view._fd is None
+
+
 def test_evaluator_fingerprints_distinguish_configs():
     prog = miniapps.himeno_program()
     a = ev.MiniappEvaluator(prog, tr.TransferMode.BULK, staged=True)

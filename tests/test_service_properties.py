@@ -1,0 +1,170 @@
+"""Property tests for the job state machine (src/repro/serve/jobs.py).
+
+Under arbitrary operation interleavings the lifecycle must never reach
+an invalid transition, and every job ends in exactly one terminal state.
+Uses hypothesis when installed; otherwise replays seeded random
+interleavings through the same checkers so the invariants stay covered
+on a bare interpreter (same pattern as test_quality_properties.py).
+"""
+import random
+
+import pytest
+
+from repro.offload.spec import OffloadSpec
+from repro.serve import jobs as jb
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - depends on environment
+    HAVE_HYPOTHESIS = False
+
+# an "event" is what the service may attempt; its target state is fixed.
+# Whether the attempt is LEGAL depends on the current state — that is
+# exactly what TRANSITIONS arbitrates.
+EVENTS = {
+    "start": jb.RUNNING,
+    "cancel": jb.CANCELLED,
+    "complete": jb.DONE,
+    "fail": jb.FAILED,
+    "crash_requeue": jb.QUEUED,
+}
+STATES = (jb.QUEUED, jb.RUNNING, jb.DONE, jb.FAILED, jb.CANCELLED)
+
+
+# ---------------------------------------------------------------------------
+# checkers (shared between hypothesis and the seeded fallback)
+# ---------------------------------------------------------------------------
+
+
+def check_interleaving(events):
+    """Apply an arbitrary event sequence to a fresh job model."""
+    state = jb.QUEUED
+    terminal_entries = 0
+    for ev in events:
+        target = EVENTS[ev]
+        if jb.can_transition(state, target):
+            state = target
+            if state in jb.TERMINAL:
+                terminal_entries += 1
+        else:
+            # an illegal attempt must not corrupt anything: the state
+            # survives and stays a known state
+            assert state in STATES
+    # terminal states are absorbing: entered at most once, ever
+    assert terminal_entries <= 1
+    if state in jb.TERMINAL:
+        assert not any(jb.can_transition(state, t) for t in STATES)
+    else:
+        # every live state has a legal path to exactly the documented set
+        assert set(jb.TRANSITIONS[state]) == {
+            t for t in STATES if jb.can_transition(state, t)}
+
+
+def check_store_interleaving(tmp_path, seed, events):
+    """Same invariants through the persisted JobStore + artifacts."""
+    store = jb.JobStore(str(tmp_path / f"q{seed}"))
+    spec = OffloadSpec(program="hetero", mode="mixed", population=4,
+                       generations=2, seed=seed,
+                       cache=str(store.cache_path))
+    digest = jb.coalesce_key(spec)
+    job = jb.Job(id=store.allocate_id(digest), state=jb.QUEUED,
+                 digest=digest, seq=store.next_seq())
+    art = store.create(spec, job)
+    terminal_entries = 0
+    for ev in events:
+        target = EVENTS[ev]
+        before = art.job["state"]
+        if jb.can_transition(before, target):
+            store.transition(art, target,
+                             error="x" if target == jb.FAILED else None,
+                             restarted=(target == jb.QUEUED))
+            if target in jb.TERMINAL:
+                terminal_entries += 1
+        else:
+            with pytest.raises(jb.JobError):
+                store.transition(art, target)
+            # the rejected transition left disk AND memory untouched
+            assert art.job["state"] == before
+        assert store.load(job.id).job["state"] == art.job["state"]
+    assert terminal_entries <= 1
+    reloaded = store.job(job.id)
+    assert reloaded.state == art.job["state"]
+    assert reloaded.restarts == art.job["restarts"]
+
+
+def check_unknown_state_rejected(name):
+    if name in STATES:
+        return
+    with pytest.raises(jb.JobError):
+        jb.can_transition(name, jb.RUNNING)
+    with pytest.raises(jb.JobError):
+        jb.can_transition(jb.QUEUED, name)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis drivers
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=300, deadline=None)
+    @given(st.lists(st.sampled_from(sorted(EVENTS)), max_size=40))
+    def test_interleavings_never_reach_invalid_state(events):
+        check_interleaving(events)
+
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=2**16),
+           events=st.lists(st.sampled_from(sorted(EVENTS)), max_size=8))
+    def test_store_interleavings_persist_invariants(tmp_path_factory,
+                                                    seed, events):
+        check_store_interleaving(tmp_path_factory.mktemp("props"),
+                                 seed, events)
+
+    @settings(max_examples=100, deadline=None)
+    @given(st.text(max_size=12))
+    def test_unknown_states_always_rejected(name):
+        check_unknown_state_rejected(name)
+
+
+# ---------------------------------------------------------------------------
+# seeded fallback (always runs; the only coverage without hypothesis)
+# ---------------------------------------------------------------------------
+
+
+def _seeded_interleavings(n, max_len):
+    rng = random.Random(0xC0FFEE)
+    names = sorted(EVENTS)
+    return [[rng.choice(names) for _ in range(rng.randint(0, max_len))]
+            for _ in range(n)]
+
+
+@pytest.mark.parametrize("events", _seeded_interleavings(60, 40))
+def test_interleavings_never_reach_invalid_state_seeded(events):
+    check_interleaving(events)
+
+
+@pytest.mark.parametrize("seed,events",
+                         [(i, ev) for i, ev in
+                          enumerate(_seeded_interleavings(12, 8))])
+def test_store_interleavings_persist_invariants_seeded(tmp_path, seed,
+                                                       events):
+    check_store_interleaving(tmp_path, seed, events)
+
+
+@pytest.mark.parametrize("name", ["", "queued ", "Queued", "done!",
+                                  "pending", "zombie"])
+def test_unknown_states_always_rejected_seeded(name):
+    check_unknown_state_rejected(name)
+
+
+def test_every_documented_transition_is_reachable():
+    # the TRANSITIONS table itself: keys cover all states, every target
+    # is a known state, terminal rows are empty
+    assert set(jb.TRANSITIONS) == set(STATES)
+    for state, targets in jb.TRANSITIONS.items():
+        assert set(targets) <= set(STATES)
+        if state in jb.TERMINAL:
+            assert targets == ()
