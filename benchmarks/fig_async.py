@@ -1,0 +1,178 @@
+"""Fast-search figure: vectorized batch pricing + steady-state GA.
+
+Two sections, matching the two ``OffloadSpec.ga`` fast-search knobs
+(docs/pipeline.md "Fast search"):
+
+- **batch vs scalar pricing** — the same population priced through the
+  scalar :class:`MixedEvaluator` loop and through
+  :class:`BatchMixedEvaluator.evaluate_batch` at the default mixed sweep
+  budget (population x generations genomes). The headline number is
+  modeled-search throughput in genomes/sec; the verdict (and the exit
+  code) keys on the headline program clearing a >= 10x speedup. Parity
+  is asserted outright while we are at it — the batch path must agree
+  with the scalar oracle to round-off on every genome it prices.
+- **steady-state vs generational GA** — the same search budget on a
+  latency-instrumented evaluator (a fixed sleep plus a deterministic
+  straggler every Nth measurement, standing in for a verification-
+  environment deploy+run) at several worker counts. The generational
+  barrier pays the straggler once per generation across every lane; the
+  steady loop pays it once per straggler. The evalpool's new ``idle_s``
+  telemetry attributes exactly that difference.
+
+  PYTHONPATH=src python -m benchmarks.fig_async
+  PYTHONPATH=src python -m benchmarks.fig_async --smoke
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from benchmarks.common import add_common_args
+from repro.core import ga
+from repro.core import miniapps
+from repro.core.evalpool import EvalPool
+from repro.destinations import (
+    BatchMixedEvaluator,
+    MixedEvaluator,
+    get_registry,
+)
+from repro.offload.spec import MIXED_BUDGET
+
+HEADLINE = "hetero"
+PROGRAMS = ("hetero", "himeno", "nasft")
+SPEEDUP_BAR = 10.0
+PARITY_RTOL = 1e-9  # the pipeline's verify re-measure tolerance
+
+
+def _random_population(
+    rng: np.random.Generator, gene_length: int, k: int, size: int
+) -> List[Tuple[int, ...]]:
+    return [
+        tuple(int(x) for x in rng.integers(0, k, gene_length))
+        for _ in range(size)
+    ]
+
+
+def _pricing_section(seed: int, repeats: int) -> float:
+    """Scalar-vs-batch pricing on every miniapp; returns the headline
+    program's speedup."""
+    pop, gens = MIXED_BUDGET
+    budget = pop * gens
+    reg = get_registry("quadro-p4000")
+    names = tuple(d.name for d in reg.destinations)
+    print(f"\n== batch vs scalar pricing: {budget} genomes "
+          f"({pop}x{gens} default mixed budget), quadro-p4000 ==")
+    print("csv:program,genomes,scalar_gps,batch_gps,speedup,max_rel_err")
+    headline_speedup = 0.0
+    for pname in PROGRAMS:
+        prog = miniapps.MINIAPPS[pname]()
+        scalar = MixedEvaluator(prog, names, registry=reg)
+        batch = BatchMixedEvaluator(prog, names, registry=reg)
+        rng = np.random.default_rng(seed)
+        genomes = _random_population(rng, prog.gene_length, scalar.k,
+                                     budget)
+        batch.evaluate_batch(genomes[:2])  # build tables off the clock
+        t_scalar = min(
+            _timed(lambda: [scalar(g) for g in genomes])
+            for _ in range(repeats)
+        )
+        t_batch = min(
+            _timed(lambda: batch.evaluate_batch(genomes))
+            for _ in range(repeats)
+        )
+        # parity against the oracle, while both sets of numbers are hot
+        bt = batch.evaluate_batch(genomes)
+        st = [scalar(g) for g in genomes]
+        err = max(
+            abs(b - s) / max(abs(s), 1e-30) for b, s in zip(bt, st)
+        )
+        if err > PARITY_RTOL:
+            raise AssertionError(
+                f"{pname}: batch/scalar divergence {err:.2e} > "
+                f"{PARITY_RTOL}"
+            )
+        gps_s, gps_b = budget / t_scalar, budget / t_batch
+        speedup = t_scalar / t_batch
+        if pname == HEADLINE:
+            headline_speedup = speedup
+        print(f"  {pname:8s}: scalar {gps_s:9.0f} g/s, "
+              f"batch {gps_b:9.0f} g/s -> {speedup:5.1f}x "
+              f"(parity {err:.1e})")
+        print(f"csv:{pname},{budget},{gps_s:.0f},{gps_b:.0f},"
+              f"{speedup:.2f},{err:.2e}")
+    return headline_speedup
+
+
+def _timed(fn) -> float:
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+def _steady_section(seed: int, smoke: bool, max_workers: int) -> None:
+    """Generational vs steady-state wall-clock under injected
+    measurement latency with a deterministic straggler."""
+    delay_s = 0.004 if smoke else 0.02
+    straggle_every, straggle_x = 7, 5  # every 7th measurement is 5x slow
+    prog = miniapps.himeno_program()
+    reg = get_registry("quadro-p4000")
+    names = tuple(d.name for d in reg.destinations)
+    base = MixedEvaluator(prog, names, registry=reg)
+    counter = {"n": 0}
+
+    def slow_eval(genes):
+        counter["n"] += 1
+        mult = straggle_x if counter["n"] % straggle_every == 0 else 1
+        time.sleep(delay_s * mult)
+        return base(genes)
+
+    n = prog.gene_length
+    pop, gens = (8, 4) if smoke else (16, 8)
+    print(f"\n== steady-state vs generational: {pop}x{gens} GA, "
+          f"{delay_s * 1e3:.0f} ms/measurement, "
+          f"every {straggle_every}th {straggle_x}x slow ==")
+    print("csv:mode,workers,wall_s,idle_lane_s,evals,best_time_s")
+    for workers in (4, max_workers) if max_workers > 4 else (4,):
+        for steady in (False, True):
+            params = ga.GAParams(
+                population=pop, generations=gens, seed=seed,
+                alleles=base.k, steady_state=steady,
+            )
+            counter["n"] = 0
+            with EvalPool(slow_eval, workers=workers, batch=False) as pool:
+                r = ga.run_ga(None, n, params, pool=pool)
+                tot = pool.totals()
+            mode = "steady" if steady else "generational"
+            print(f"  {mode:12s} w={workers}: wall {r.wall_s:6.2f}s, "
+                  f"idle {tot.idle_s:6.2f} lane-s, "
+                  f"{tot.evaluated} measurements, "
+                  f"best {r.best_time_s:.3f}s")
+            print(f"csv:{mode},{workers},{r.wall_s:.3f},"
+                  f"{tot.idle_s:.3f},{tot.evaluated},"
+                  f"{r.best_time_s:.4f}")
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="fast-search figure: batch pricing + steady-state GA"
+    )
+    add_common_args(ap, cache=False)
+    args = ap.parse_args(argv)
+
+    repeats = 1 if args.smoke else 3
+    speedup = _pricing_section(args.seed, repeats)
+    _steady_section(args.seed, args.smoke, max(1, args.workers))
+
+    ok = speedup >= SPEEDUP_BAR
+    verdict = "PASS" if ok else "FAIL"
+    print(f"\nverdict: {verdict} — {HEADLINE} batch pricing "
+          f"{speedup:.1f}x vs scalar (bar {SPEEDUP_BAR:.0f}x)")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

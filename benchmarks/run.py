@@ -14,6 +14,7 @@ import time
 from benchmarks import (
     fig4_convergence,
     fig5_speedup,
+    fig_async,
     fig_blocks,
     fig_capacity,
     fig_fidelity,
@@ -100,6 +101,12 @@ def _blocks_section(args) -> None:
         raise SystemExit(rc)
 
 
+def _async_section(args) -> None:
+    rc = fig_async.main(_forward(args, cache=False))
+    if rc:
+        raise SystemExit(rc)
+
+
 SECTIONS = {
     "fig4": lambda args: fig4_convergence.main(
         _forward(args, smoke=False)
@@ -138,6 +145,9 @@ SECTIONS = {
     # function-block substitution vs the best loop-level placement
     # (docs/blocks.md); the figure's own exit code carries the verdict
     "blocks": _blocks_section,
+    # fast-search substrate: batch pricing throughput (>=10x verdict in
+    # the exit code) + steady-state vs generational wall-clock
+    "async": _async_section,
 }
 
 

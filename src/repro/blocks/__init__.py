@@ -27,6 +27,7 @@ from repro.blocks.library import (  # noqa: F401
 )
 from repro.blocks.match import BlockMatch, match_blocks  # noqa: F401
 from repro.blocks.substitute import (  # noqa: F401
+    BatchBlockMixedEvaluator,
     BlockMixedEvaluator,
     fused_loop,
     internal_vars,

@@ -39,6 +39,7 @@ from __future__ import annotations
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.loopir import Loop, LoopClass, LoopProgram
+from repro.destinations.batch import BatchMixedEvaluator
 from repro.destinations.mixed import MixedEvaluator
 from repro.destinations.profiles import Registry
 from repro.blocks.library import KernelEntry, KernelLibrary, default_library
@@ -315,3 +316,64 @@ class BlockMixedEvaluator:
         loop-level searches, and a library change (entry set, gains)
         invalidates block-enabled entries."""
         return f"blocks:{self.base.fingerprint()}:{self.library.fingerprint()}"
+
+
+class BatchBlockMixedEvaluator(BlockMixedEvaluator):
+    """:class:`BlockMixedEvaluator` + a vectorized ``evaluate_batch``.
+
+    A population partitions by its active-substitution combo (the same
+    key the scalar variant memoization uses); each partition prices as
+    one :class:`~repro.destinations.batch.BatchMixedEvaluator` pass over
+    the combo's variant program. Scalar ``__call__`` (the oracle),
+    ``cache_key`` and ``fingerprint`` are inherited unchanged, so the
+    knob shares caches with — and is parity-tested against — the scalar
+    block evaluator.
+    """
+
+    def __init__(self, *args, **kw):
+        super().__init__(*args, **kw)
+        self._batch_variants: Dict[
+            Tuple[Tuple[int, int], ...], BatchMixedEvaluator
+        ] = {}
+
+    def _batch_variant(
+        self, active: Tuple[Tuple[int, int], ...]
+    ) -> BatchMixedEvaluator:
+        ev = self._batch_variants.get(active)
+        if ev is None:
+            if active:
+                pairs = [
+                    (self.matches[bi], self._entries[bi])
+                    for bi, _ in active
+                ]
+                vprog = substituted_program(self.prog, pairs)
+            else:
+                vprog = self.prog
+            ev = BatchMixedEvaluator(
+                vprog,
+                tuple(d.name for d in self.dests),
+                registry=self.registry,
+            )
+            self._batch_variants[active] = ev
+        return ev
+
+    def evaluate_batch(
+        self, genomes: Sequence[Sequence[int]]
+    ) -> List[float]:
+        out = [0.0] * len(genomes)
+        groups: Dict[
+            Tuple[Tuple[int, int], ...], List[Tuple[int, Genes]]
+        ] = {}
+        for i, genes in enumerate(genomes):
+            loop_genes, block_genes = self.split(genes)
+            active = self._active(self._clamp_blocks(block_genes))
+            vg = self._variant_genes(loop_genes, active) if active \
+                else loop_genes
+            groups.setdefault(active, []).append((i, vg))
+        for active, members in groups.items():
+            ts = self._batch_variant(active).evaluate_batch(
+                [vg for _, vg in members]
+            )
+            for (i, _), t in zip(members, ts):
+                out[i] = float(t)
+        return out

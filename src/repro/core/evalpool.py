@@ -341,6 +341,10 @@ class GenTelemetry:
     evaluated: int = 0  # fresh measurements actually run
     timeouts: int = 0  # measurements scored as the penalty
     wall_s: float = 0.0  # generation wall-clock (submit -> all reduced)
+    # lane-seconds the pool's workers spent waiting rather than measuring
+    # (generational path: the barrier stall behind the slowest lane;
+    # steady-state path: lanes starved because the breeder fell behind)
+    idle_s: float = 0.0
 
     @property
     def dedup_ratio(self) -> float:
@@ -366,6 +370,9 @@ class GenTelemetry:
             "evaluated": self.evaluated,
             "timeouts": self.timeouts,
             "wall_s": round(self.wall_s, 4),
+            # named *_wall_s on purpose: observability comparisons scrub
+            # wall-clock-derived row keys by that suffix
+            "idle_wall_s": round(self.idle_s, 4),
             "dedup_ratio": round(self.dedup_ratio, 4),
             "hit_rate": round(self.hit_rate, 4),
         }
@@ -377,14 +384,27 @@ class GenTelemetry:
 GenerationTelemetry = GenTelemetry
 
 
+def _timed_call(
+    evaluate: Callable[[Genes], float], genes: Genes
+) -> Tuple[float, float]:
+    """(value, duration) for one measurement — module-level so the
+    process executor can pickle it. The duration is the worker lane's
+    busy time, the raw material for idle-lane attribution."""
+    t0 = time.perf_counter()
+    v = evaluate(genes)
+    return float(v), time.perf_counter() - t0
+
+
 def _run_with_executor(
     executor_kind: str,
     workers: int,
     evaluate: Callable[[Genes], float],
     genes_list: List[Genes],
     timeout_s: float,
-) -> List[Tuple[float, bool]]:
-    """Measure each genome; returns (raw seconds, timed_out) per genome.
+) -> List[Tuple[float, bool, float]]:
+    """Measure each genome; returns (raw seconds, timed_out, busy
+    seconds) per genome — busy 0.0 for timeouts/crashes whose duration
+    was never observed.
 
     Thread pools cannot kill a hung measurement, but a future that misses
     its deadline is *scored* as a timeout immediately (the straggler
@@ -392,7 +412,9 @@ def _run_with_executor(
     machine finishing a run after the 3-minute cutoff already penalized
     it). Process pools get the same deadline semantics.
     """
-    out: List[Tuple[float, bool]] = [(float("inf"), True)] * len(genes_list)
+    out: List[Tuple[float, bool, float]] = (
+        [(float("inf"), True, 0.0)] * len(genes_list)
+    )
     if executor_kind == "process":
         import multiprocessing as mp
 
@@ -407,7 +429,10 @@ def _run_with_executor(
         ex = cf.ThreadPoolExecutor(max_workers=max(1, workers))
     try:
         t0 = time.monotonic()
-        futs = {ex.submit(evaluate, g): i for i, g in enumerate(genes_list)}
+        futs = {
+            ex.submit(_timed_call, evaluate, g): i
+            for i, g in enumerate(genes_list)
+        }
         # every individual gets its full timeout; with w workers the batch
         # runs in ceil(n/w) waves, so the generation deadline is that many
         # timeouts out
@@ -419,7 +444,8 @@ def _run_with_executor(
             i = futs[fut]
             try:
                 remaining = max(0.0, deadline - time.monotonic())
-                out[i] = (float(fut.result(timeout=remaining)), False)
+                v, dur = fut.result(timeout=remaining)
+                out[i] = (float(v), False, float(dur))
             except cf.TimeoutError:
                 if fut.cancel():
                     # never started (earlier hangs held every worker):
@@ -427,9 +453,9 @@ def _run_with_executor(
                     # below instead of being penalized unmeasured
                     requeue.append(i)
                 else:
-                    out[i] = (float("inf"), True)
+                    out[i] = (float("inf"), True, 0.0)
             except Exception:  # measurement crash == compile error == penalty
-                out[i] = (float("inf"), True)
+                out[i] = (float("inf"), True, 0.0)
     finally:
         # don't block on hung stragglers mid-search: they are already
         # scored as penalties and their results discarded while the GA
@@ -566,8 +592,14 @@ class EvalPool:
         tel.evaluated = len(misses)
 
         if misses:
-            raw = self._measure([ind for _, ind in misses], timeout_s)
-            for (key, ind), (t, timed_out) in zip(misses, raw):
+            m0 = time.monotonic()
+            raw, lanes = self._measure([ind for _, ind in misses], timeout_s)
+            mwall = time.monotonic() - m0
+            busy = sum(r[2] for r in raw)
+            # barrier stall: lane-seconds held open past their last
+            # measurement while the slowest lane finished the generation
+            tel.idle_s = max(0.0, mwall * lanes - busy)
+            for (key, ind), (t, timed_out, _dur) in zip(misses, raw):
                 t, penalized = self._penalize(t, timeout_s, penalty_time_s)
                 penalized = penalized or timed_out
                 if penalized:
@@ -582,7 +614,12 @@ class EvalPool:
 
     def _measure(
         self, misses: List[Genes], timeout_s: float
-    ) -> List[Tuple[float, bool]]:
+    ) -> Tuple[List[Tuple[float, bool, float]], int]:
+        """-> ((raw seconds, timed_out, busy seconds) per miss, lanes).
+
+        ``lanes`` is the worker count the measurement actually occupied;
+        the caller attributes ``wall * lanes - sum(busy)`` as idle time.
+        """
         # NOTE: the batch path trusts the evaluator to bound its own time
         # (CompiledEvaluator treats a failed compile as inf itself); only
         # the executor path below enforces the wall-clock deadline. Pass
@@ -591,7 +628,10 @@ class EvalPool:
         batch_fn = getattr(self.evaluate, "evaluate_batch", None)
         if self.batch and callable(batch_fn):
             try:
-                return [(float(t), False) for t in batch_fn(misses)]
+                b0 = time.perf_counter()
+                vals = batch_fn(misses)
+                per = (time.perf_counter() - b0) / max(1, len(vals))
+                return [(float(t), False, per) for t in vals], 1
             except Exception:
                 pass  # batch path degraded; fall through to point-wise
         # the inline shortcut (byte-identical to the pre-pool GA loop)
@@ -599,16 +639,24 @@ class EvalPool:
         # isolation is the point even at workers=1 — measured-fidelity
         # searches must never wall-clock inside the driver process
         if self.workers == 1 and self.executor == "thread":
-            out: List[Tuple[float, bool]] = []
+            out: List[Tuple[float, bool, float]] = []
             for g in misses:
                 try:
-                    out.append((float(self.evaluate(g)), False))
+                    v, dur = _timed_call(self.evaluate, g)
+                    out.append((v, False, dur))
                 except Exception:
-                    out.append((float("inf"), True))
-            return out
-        return _run_with_executor(
+                    out.append((float("inf"), True, 0.0))
+            return out, 1
+        raw = _run_with_executor(
             self.executor, self.workers, self.evaluate, misses, timeout_s
         )
+        # tolerate 2-tuples from substituted executors (tests stub this
+        # boundary); busy time simply goes unattributed
+        norm = [
+            (float(r[0]), bool(r[1]), float(r[2]) if len(r) > 2 else 0.0)
+            for r in raw
+        ]
+        return norm, min(self.workers, len(misses)) or 1
 
     # -- aggregate telemetry ------------------------------------------------
 
@@ -621,13 +669,242 @@ class EvalPool:
             tot.evaluated += t.evaluated
             tot.timeouts += t.timeouts
             tot.wall_s += t.wall_s
+            tot.idle_s += t.idle_s
         return tot
+
+    def steady_session(
+        self, timeout_s: float, penalty_time_s: float
+    ) -> "SteadySession":
+        """A :class:`SteadySession` over this pool's evaluator, cache,
+        key function and worker budget (the steady-state GA's half of
+        ``evaluate_generation``)."""
+        return SteadySession(self, timeout_s, penalty_time_s)
 
     def close(self) -> None:
         if self._owns_cache:
             self.cache.close()
 
     def __enter__(self) -> "EvalPool":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+class SteadySession:
+    """Continuous evaluation without a generation barrier.
+
+    The generational :meth:`EvalPool.evaluate_generation` holds every
+    worker until the slowest measurement of the batch lands (the
+    barrier-idle stall the telemetry's ``idle_s`` measures). A steady
+    session instead keeps the lanes saturated: the caller ``submit``\\ s
+    offspring whenever it has one and ``collect``\\ s finished
+    ``(genes, seconds)`` results in completion order, one at a time.
+
+    Semantics match the generational path exactly:
+
+    - **dedup/cache** — submissions are canonicalized through the pool's
+      ``key_fn``; persistent-cache hits are re-validated against THIS
+      session's timeout (penalty re-applied if the stored time no longer
+      fits) and resolve immediately; a submission whose key is already
+      in flight never measures twice — it waits on the in-flight result;
+    - **timeout -> penalty** — a measurement past ``timeout_s`` is scored
+      ``penalty_time_s`` the moment its deadline passes (the straggler
+      finishes in the background and its late result is discarded), and
+      the penalized record is persisted exactly like the barrier path;
+    - **telemetry** — the same :class:`GenTelemetry` counters, windowed:
+      :meth:`cut` closes the current window, appends it to
+      ``pool.history`` and starts the next, so a steady search still
+      emits one telemetry row per generation-equivalent. Within every
+      window ``submitted == evaluated + cache_hits`` holds (in-flight
+      joins count as hits). ``idle_s`` here attributes *starvation*:
+      lane-seconds workers sat free because the caller had nothing in
+      flight to give them.
+
+    Thread-safe; ``submit`` may be called from ``collect``'s thread or
+    any other. With the pool's inline configuration (1 thread worker)
+    submissions evaluate synchronously — byte-identical measurement
+    order to the generational inline path.
+    """
+
+    def __init__(
+        self, pool: EvalPool, timeout_s: float, penalty_time_s: float
+    ):
+        self.pool = pool
+        self.timeout_s = float(timeout_s)
+        self.penalty_time_s = float(penalty_time_s)
+        self.tel = GenTelemetry()
+        self._cond = threading.Condition()
+        self._done: List[Tuple[Genes, float]] = []
+        # key -> (first-submitted genes, duplicate waiters)
+        self._pending: Dict[str, Tuple[Genes, List[Genes]]] = {}
+        self._deadlines: Dict[str, float] = {}
+        self._zombies: set = set()
+        self._inflight = 0
+        self._idle = 0.0
+        self._seen: set = set()  # per-window unique keys
+        self._t0 = time.monotonic()
+        self._ex: Optional[cf.Executor] = None
+        self._inline = pool.workers == 1 and pool.executor == "thread"
+
+    @property
+    def in_flight(self) -> int:
+        with self._cond:
+            return self._inflight
+
+    def _executor(self) -> cf.Executor:
+        if self._ex is None:
+            if self.pool.executor == "process":
+                import multiprocessing as mp
+
+                self._ex = cf.ProcessPoolExecutor(
+                    max_workers=self.pool.workers,
+                    mp_context=mp.get_context("spawn"),
+                )
+            else:
+                self._ex = cf.ThreadPoolExecutor(
+                    max_workers=self.pool.workers
+                )
+        return self._ex
+
+    def submit(self, genes: Sequence[int]) -> None:
+        """Queue one individual; its result arrives via :meth:`collect`
+        (immediately for cache hits, eventually otherwise)."""
+        ind = tuple(int(g) for g in genes)
+        key = self.pool.key_fn(ind)
+        with self._cond:
+            self.tel.submitted += 1
+            hit = self.pool.cache.get(ind, key=key)
+            if hit is not None:
+                t = self.pool._penalize(
+                    hit, self.timeout_s, self.penalty_time_s
+                )[0]
+                self.tel.cache_hits += 1
+                if key not in self._seen:
+                    self._seen.add(key)
+                    self.tel.unique += 1
+                self._done.append((ind, t))
+                self._cond.notify_all()
+                return
+            if key in self._pending:
+                # an identical genome is mid-measurement: join it
+                self.tel.cache_hits += 1
+                self._pending[key][1].append(ind)
+                return
+            if key not in self._seen:
+                self._seen.add(key)
+                self.tel.unique += 1
+            self.tel.evaluated += 1
+            self._pending[key] = (ind, [])
+            self._deadlines[key] = time.monotonic() + self.timeout_s
+            self._inflight += 1
+        if self._inline:
+            try:
+                raw = float(self.pool.evaluate(ind))
+            except Exception:
+                raw = float("inf")
+            self._resolve(key, raw)
+        else:
+            fut = self._executor().submit(
+                _timed_call, self.pool.evaluate, ind
+            )
+            fut.add_done_callback(
+                lambda f, k=key: self._on_future(k, f)
+            )
+
+    def _on_future(self, key: str, fut: "cf.Future") -> None:
+        try:
+            raw, _dur = fut.result()
+        except Exception:
+            raw = float("inf")
+        self._resolve(key, float(raw))
+
+    def _resolve(self, key: str, raw: float) -> None:
+        t, penalized = self.pool._penalize(
+            raw, self.timeout_s, self.penalty_time_s
+        )
+        with self._cond:
+            if key in self._zombies:
+                # already deadline-expired and scored as the penalty;
+                # the late result is discarded, never double-counted
+                self._zombies.discard(key)
+                return
+            ind, waiters = self._pending.pop(key)
+            self._deadlines.pop(key, None)
+            self._inflight -= 1
+            if penalized:
+                t = self.penalty_time_s
+                self.tel.timeouts += 1
+            self.pool.cache.put(ind, t, penalized=penalized, key=key)
+            self._done.append((ind, t))
+            for w in waiters:
+                self._done.append((w, t))
+            self._cond.notify_all()
+
+    def collect(self) -> Tuple[Genes, float]:
+        """Block for the next finished individual -> (genes, seconds).
+
+        Results arrive in completion order, duplicates resolving with
+        their measured twin. Raises ``RuntimeError`` if nothing is in
+        flight and nothing is queued (a deadlocked caller bug)."""
+        with self._cond:
+            while not self._done:
+                if self._inflight == 0:
+                    raise RuntimeError(
+                        "SteadySession.collect() with no submission in "
+                        "flight"
+                    )
+                now = time.monotonic()
+                expired = [
+                    k for k, dl in self._deadlines.items() if dl <= now
+                ]
+                for k in expired:
+                    ind, waiters = self._pending.pop(k)
+                    del self._deadlines[k]
+                    self._zombies.add(k)
+                    self._inflight -= 1
+                    self.tel.timeouts += 1
+                    self.pool.cache.put(
+                        ind, self.penalty_time_s, penalized=True, key=k
+                    )
+                    self._done.append((ind, self.penalty_time_s))
+                    for w in waiters:
+                        self._done.append((w, self.penalty_time_s))
+                if self._done:
+                    break
+                nxt = min(self._deadlines.values()) - now
+                # idle attribution: lanes with no work while we wait
+                starved = max(0, self.pool.workers - self._inflight)
+                w0 = time.monotonic()
+                self._cond.wait(timeout=max(0.001, min(nxt, 0.5)))
+                if starved:
+                    self._idle += starved * (time.monotonic() - w0)
+            ind, t = self._done.pop(0)
+            return ind, float(t)
+
+    def cut(self) -> GenTelemetry:
+        """Close the current telemetry window: finalize wall/idle, push
+        the row to ``pool.history``, start a fresh window."""
+        with self._cond:
+            tel = self.tel
+            tel.wall_s = time.monotonic() - self._t0
+            tel.idle_s = self._idle
+            self.tel = GenTelemetry()
+            self._t0 = time.monotonic()
+            self._idle = 0.0
+            self._seen = set()
+        self.pool.history.append(tel)
+        return tel
+
+    def close(self) -> None:
+        if self._ex is not None:
+            self._ex.shutdown(wait=False, cancel_futures=True)
+            self._ex = None
+        # a window the caller never cut still reaches the history
+        if self.tel.submitted:
+            self.cut()
+
+    def __enter__(self) -> "SteadySession":
         return self
 
     def __exit__(self, *exc) -> None:

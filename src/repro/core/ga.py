@@ -67,6 +67,14 @@ class GAParams:
     # historical selection, byte-identical (the sharing block is never
     # entered). Exposed as OffloadSpec.ga.diversity.
     diversity: float = 0.0
+    # asynchronous steady-state mode: after the generation-0 barrier,
+    # offspring are bred and submitted continuously (one replacement per
+    # completed measurement, conditional on not being worse than the
+    # current worst) instead of waiting out a full-generation barrier —
+    # workers never idle behind a straggler. False = the historical
+    # generational loop, byte-identical. Exposed as
+    # OffloadSpec.ga.steady_state.
+    steady_state: bool = False
 
     @classmethod
     def for_gene_length(cls, n: int, **kw) -> "GAParams":
@@ -116,6 +124,31 @@ def fitness_of_time(t: float) -> float:
     return float(max(t, 1e-12)) ** -0.5
 
 
+def _selection_fitness(
+    params: GAParams, pop: Sequence[Genes], times: Sequence[float]
+) -> List[float]:
+    """times -> roulette fitness: t^-1/2, windowed, diversity-shared.
+
+    One code path for both GA modes — the exact float operations of the
+    historical generational loop, so extracting it is byte-neutral.
+    """
+    fit = [fitness_of_time(t) for t in times]
+    if params.fitness_windowing and len(fit) > 1:
+        worst = min(fit)
+        fit = [f - worst for f in fit]
+    if params.diversity > 0.0:
+        # fitness sharing: divide each individual's roulette share by
+        # (its genome's copy count this generation) ** diversity
+        counts: Dict[Genes, int] = {}
+        for ind in pop:
+            counts[ind] = counts.get(ind, 0) + 1
+        fit = [
+            f / (counts[ind] ** params.diversity)
+            for f, ind in zip(fit, pop)
+        ]
+    return fit
+
+
 def run_ga(
     evaluate: Optional[Callable[[Genes], float]],
     gene_length: int,
@@ -163,6 +196,10 @@ def run_ga(
         if any(not (0 <= x < params.alleles) for x in s):
             raise ValueError(f"seed {i} has alleles outside [0, {params.alleles})")
         pop[i] = s
+    if params.steady_state and params.generations > 1:
+        return _run_steady(
+            pool, params, on_generation, rng, pop, t0, evals0, hits0
+        )
     history: List[GenerationStats] = []
     best_genes: Genes = pop[0]
     best_time = float("inf")
@@ -195,20 +232,7 @@ def run_ga(
         if gen == params.generations - 1:
             break
 
-        fit = [fitness_of_time(t) for t in times]
-        if params.fitness_windowing and len(fit) > 1:
-            worst = min(fit)
-            fit = [f - worst for f in fit]
-        if params.diversity > 0.0:
-            # fitness sharing: divide each individual's roulette share by
-            # (its genome's copy count this generation) ** diversity
-            counts: Dict[Genes, int] = {}
-            for ind in pop:
-                counts[ind] = counts.get(ind, 0) + 1
-            fit = [
-                f / (counts[ind] ** params.diversity)
-                for f, ind in zip(fit, pop)
-            ]
+        fit = _selection_fitness(params, pop, times)
         # elite preservation: the generation's best survive unchanged
         elite_idx = list(order[: params.elites])
         nxt: List[Genes] = [pop[i] for i in elite_idx]
@@ -227,6 +251,124 @@ def run_ga(
                     G.mutate(rng, cb, params.mutation_rate, params.alleles)
                 )
         pop = nxt
+
+    tot = pool.totals()
+    return GAResult(
+        best_genes=best_genes,
+        best_time_s=best_time,
+        history=history,
+        evaluations=tot.evaluated - evals0,
+        cache_hits=tot.cache_hits - hits0,
+        wall_s=time.time() - t0,
+    )
+
+
+def _run_steady(
+    pool: EvalPool,
+    params: GAParams,
+    on_generation: Optional[Callable[[GenerationStats], None]],
+    rng: np.random.Generator,
+    pop: List[Genes],
+    t0: float,
+    evals0: int,
+    hits0: int,
+) -> GAResult:
+    """The steady-state tail of ``run_ga`` (``params.steady_state``).
+
+    Generation 0 still prices as one barrier batch (a full random
+    population has no completion order worth exploiting, and it gives
+    the selection pool a complete fitness picture). After that the loop
+    breeds one offspring per free worker lane and replaces the current
+    worst individual the moment any measurement lands — no generation
+    barrier, so a straggler delays only its own slot:
+
+    - **budget** — exactly ``population * generations`` submissions
+      total, same as the generational loop: the initial barrier plus
+      ``population * (generations - 1)`` steady offspring.
+    - **monotone best** — replacement is conditional (an offspring only
+      displaces the worst member if it is no worse), so the best-so-far
+      genome is never lost; elitism is implicit.
+    - **telemetry windows** — every ``population`` completions the
+      session's telemetry window is cut into ``pool.history`` and a
+      :class:`GenerationStats` row is emitted, so tracing/reporting see
+      the same one-row-per-generation shape as the barrier GA.
+
+    With ``workers > 1`` the completion order (hence the RNG schedule)
+    depends on measurement timing — steady-state runs trade generational
+    reproducibility for lane saturation. At ``workers=1`` the loop is
+    submit-one/collect-one and fully deterministic.
+    """
+    times, _tel = pool.evaluate_generation(
+        pop, params.timeout_s, params.penalty_time_s
+    )
+    cur: List[Tuple[Genes, float]] = [
+        (ind, float(t)) for ind, t in zip(pop, times)
+    ]
+    order = np.argsort(times)
+    best_time = float(times[order[0]])
+    best_genes: Genes = pop[order[0]]
+    history: List[GenerationStats] = []
+
+    def snapshot(gen: int) -> None:
+        tot = pool.totals()
+        tel = pool.history[-1]
+        ts = [t for _, t in cur]
+        gs = GenerationStats(
+            generation=gen,
+            best_time_s=best_time,
+            mean_time_s=float(np.mean(ts)),
+            best_genes=best_genes,
+            evaluations=tot.evaluated - evals0,
+            cache_hits=tot.cache_hits - hits0,
+            gen_wall_s=tel.wall_s,
+            dedup_ratio=tel.dedup_ratio,
+            hit_rate=tel.hit_rate,
+            times=list(ts),
+            population=[g for g, _ in cur],
+        )
+        history.append(gs)
+        if on_generation:
+            on_generation(gs)
+
+    snapshot(0)
+    xover = (
+        G.uniform_crossover
+        if params.crossover_kind == "uniform"
+        else G.crossover
+    )
+
+    def breed() -> Genes:
+        genomes = [g for g, _ in cur]
+        fit = _selection_fitness(params, genomes, [t for _, t in cur])
+        pa = G.roulette_pick(rng, genomes, fit)
+        pb = G.roulette_pick(rng, genomes, fit)
+        ca, _cb = xover(rng, pa, pb, params.crossover_rate)
+        return G.mutate(rng, ca, params.mutation_rate, params.alleles)
+
+    budget = params.population * (params.generations - 1)
+    launched = finished = 0
+    with pool.steady_session(params.timeout_s, params.penalty_time_s) as ses:
+        while finished < budget:
+            # top up the lanes; the launched-finished bound (not the
+            # session's in-flight count, which cache hits never enter)
+            # keeps the inline pool breeding one offspring at a time
+            while (
+                launched < budget
+                and launched - finished < max(1, pool.workers)
+            ):
+                ses.submit(breed())
+                launched += 1
+            genes, tm = ses.collect()
+            finished += 1
+            wi = max(range(len(cur)), key=lambda i: cur[i][1])
+            if tm <= cur[wi][1]:
+                cur[wi] = (genes, tm)
+            if tm < best_time:
+                best_time = tm
+                best_genes = genes
+            if finished % params.population == 0:
+                ses.cut()
+                snapshot(finished // params.population)
 
     tot = pool.totals()
     return GAResult(

@@ -23,7 +23,8 @@ core without changing binary-search behavior:
   fitness cache is shared across searches over different destination
   subsets of one machine.
 """
-from repro.destinations import mixed, profiles, schedule
+from repro.destinations import batch, mixed, profiles, schedule
+from repro.destinations.batch import BatchMixedEvaluator
 from repro.destinations.mixed import (
     MixedBreakdown,
     MixedEvaluator,
@@ -48,6 +49,7 @@ from repro.destinations.profiles import (
 from repro.destinations.schedule import MixedSchedule, build_mixed_schedule
 
 __all__ = [
+    "BatchMixedEvaluator",
     "Destination",
     "Link",
     "MixedBreakdown",
@@ -55,6 +57,7 @@ __all__ = [
     "MixedSchedule",
     "REGISTRIES",
     "Registry",
+    "batch",
     "build_mixed_schedule",
     "calibrated_registry",
     "constrained_registry",

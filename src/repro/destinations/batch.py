@@ -1,0 +1,261 @@
+"""Vectorized population pricing for the mixed-destination evaluator.
+
+:class:`BatchMixedEvaluator` is a drop-in :class:`~repro.destinations.
+mixed.MixedEvaluator` that additionally exposes
+``evaluate_batch(list_of_genomes) -> list_of_seconds``: the whole
+population priced in one numpy pass instead of one Python schedule
+simulation per genome. The :class:`~repro.core.evalpool.EvalPool`
+already routes cache misses through ``evaluate_batch`` when the
+evaluator provides it, so merely constructing this class (the
+``OffloadSpec.ga.batch`` knob) switches a search onto the fast path with
+zero pipeline changes.
+
+**The scalar path stays the oracle.** ``__call__`` is inherited
+unchanged, ``verify`` re-measures the winner through it, and the parity
+property tests (tests/test_batch_evaluator.py) hold the batch numbers to
+the scalar ones within round-off (the only difference is floating-point
+summation order — well under the pipeline's ``_REMEASURE_RTOL``).
+``fingerprint()``/``cache_key()`` are inherited too, so batch and scalar
+searches share one persistent fitness cache and the knob can never
+poison cached times.
+
+How the vectorization works:
+
+- **compute + setup** — a ``(loops, k)`` table of per-destination nest
+  seconds (execs and setup folded in) built once; a population prices as
+  one fancy-indexed gather + row sum. Admissibility clamping is a
+  precomputed ``(loops, k)`` index table (gene ``g`` -> ``g`` or 0).
+- **transfer** — the N-memory residency protocol of
+  :func:`~repro.destinations.schedule.build_mixed_schedule`, replayed
+  once over the event stream with the per-variable residency state held
+  as *bitmask arrays over the whole population* (``valid[pop, var]``:
+  bit ``m`` set = memory ``m`` holds a valid copy). Each event groups
+  the population by (source, destination) memory pair — at most
+  ``M * M`` groups, M the registry's memory count — and applies every
+  route hop to the whole group at once. Per-link byte/batch totals
+  accumulate into ``(pop, links)`` arrays and price through the
+  registry's bandwidth/latency constants with two matrix-vector
+  products.
+
+**Bounded capacities fall back to the scalar loop.** Furthest-next-use
+eviction makes every genome's residency state depend on its own event
+history in a way that has no useful population-wide grouping, so when
+any *searched* destination is capacity-bounded ``evaluate_batch``
+degrades to per-genome scalar calls — trivially exact, just not faster.
+The default machine (``quadro-p4000``) and every unbounded registry take
+the vectorized path.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.loopir import LoopProgram
+from repro.core.transfer import dynamic_events
+from repro.destinations.mixed import MixedEvaluator, mixed_loop_time
+from repro.destinations.profiles import Registry
+
+Genes = Tuple[int, ...]
+
+
+class BatchMixedEvaluator(MixedEvaluator):
+    """:class:`MixedEvaluator` + a vectorized ``evaluate_batch``.
+
+    Construction cost is one scalar-path table build (lazy, on the first
+    batch call); per-population cost is O(events * vars) numpy work
+    independent of the population size's Python overhead.
+    """
+
+    def __init__(
+        self,
+        prog: LoopProgram,
+        destinations: Sequence[str] = ("cpu", "gpu", "fpga"),
+        registry: Optional[Registry] = None,
+    ):
+        super().__init__(prog, destinations, registry=registry)
+        self._tables_built = False
+        # any bounded searched destination -> scalar fallback (see
+        # module docstring); the host never bounds
+        self._scalar_only = any(
+            d.bounded for d in self.dests if d.kind != "host"
+        )
+
+    # -- table construction (lazy; once per evaluator) ----------------------
+
+    def _build_tables(self) -> None:
+        prog, reg = self.prog, self.registry
+        k = self.k
+        # memory universe = the registry's destinations (routes only
+        # ever stage through these); indices are registry order
+        mems = [d.name for d in reg.destinations]
+        self._M = M = len(mems)
+        mem_idx = {n: i for i, n in enumerate(mems)}
+        self._host = host = mem_idx[reg.host.name]
+        self._host_bit = 1 << host
+        # searched-subset gene value -> registry memory index
+        self._mem_of_allele = np.array(
+            [mem_idx[d.name] for d in self.dests], dtype=np.int64
+        )
+
+        # links: per-directed-link bandwidth/latency vectors
+        self._link_idx = {
+            (a, b): i for i, (a, b, _) in enumerate(reg.links)
+        }
+        self._L = max(1, len(reg.links))
+        inv_bw = np.zeros(self._L)
+        lat = np.zeros(self._L)
+        for i, (_, _, link) in enumerate(reg.links):
+            inv_bw[i] = 1.0 / link.bw
+            lat[i] = link.latency
+        self._inv_bw, self._lat = inv_bw, lat
+
+        # route cache: (src mem, dst mem) -> ((link idx, hop-end mem),...)
+        self._routes: Dict[Tuple[int, int], Tuple[Tuple[int, int], ...]] = {}
+        # scalar read protocol: source = host when the host copy is
+        # valid, else the name-sorted-first valid memory. Both baked
+        # into one LUT over the validity bitmask.
+        by_name = sorted(range(M), key=lambda i: mems[i])
+        src_lut = np.zeros(1 << M, dtype=np.int64)
+        for mask in range(1, 1 << M):
+            src_lut[mask] = host if mask >> host & 1 else next(
+                i for i in by_name if mask >> i & 1
+            )
+        self._src_lut = src_lut
+
+        # compute + setup: (offloadable loop, allele) -> seconds, with
+        # the non-offloadable remainder as one host-priced constant
+        offl = list(prog.offloadable_loops)
+        offl_names = {l.name for l in offl}
+        n = len(offl)
+        cost = np.zeros((max(1, n), k))
+        clamp = np.zeros((max(1, n), k), dtype=np.int64)
+        for i, loop in enumerate(offl):
+            execs = prog.region_trip(loop.parent_seq)
+            for j, d in enumerate(self.dests):
+                cost[i, j] = (
+                    mixed_loop_time(prog, loop, d) * execs
+                    + d.setup_latency
+                )
+                clamp[i, j] = j if d.accepts(loop.klass) else 0
+        self._cost, self._clamp = cost, clamp
+        host_dest = self.dests[0]
+        self._base = sum(
+            mixed_loop_time(prog, l, host_dest)
+            * prog.region_trip(l.parent_seq)
+            + host_dest.setup_latency
+            for l in prog.loops if l.name not in offl_names
+        )
+
+        # the replayed event stream, with per-loop read/write var lists
+        # (name-sorted, exactly the scalar iteration order) resolved to
+        # (var index, nbytes) pairs once
+        self._vars = sorted(v.name for v in prog.vars)
+        vidx = {n_: i for i, n_ in enumerate(self._vars)}
+        nbytes = {v.name: float(v.nbytes) for v in prog.vars}
+        gi_of = {l.name: i for i, l in enumerate(offl)}
+        self._nV = len(self._vars)
+        self._events: List[Tuple[Optional[int], float, list, list]] = []
+        for kind, loop, times in dynamic_events(prog, boundaries=False):
+            if kind != "loop":
+                continue
+            assert loop is not None
+            self._events.append((
+                gi_of.get(loop.name),  # None = host-pinned
+                float(times),
+                [(vidx[v], nbytes[v]) for v in sorted(loop.reads)],
+                [(vidx[v], nbytes[v]) for v in sorted(loop.writes)],
+            ))
+        self._flush_vars = [(vidx[v], nbytes[v]) for v in self._vars]
+        self._tables_built = True
+
+    def _route(self, src: int, dst: int) -> Tuple[Tuple[int, int], ...]:
+        hops = self._routes.get((src, dst))
+        if hops is None:
+            mems = [d.name for d in self.registry.destinations]
+            hops = tuple(
+                (self._link_idx[pair],
+                 mems.index(pair[1]))
+                for pair in self.registry.route(mems[src], mems[dst])
+            )
+            self._routes[(src, dst)] = hops
+        return hops
+
+    # -- the vectorized pass ------------------------------------------------
+
+    def evaluate_batch(self, genomes: Sequence[Sequence[int]]) -> List[float]:
+        """Predicted seconds for every genome, in input order."""
+        if not len(genomes):
+            return []
+        if self._scalar_only:
+            # capacity-bounded searched subset: exact by construction
+            return [float(self(g)) for g in genomes]
+        if not self._tables_built:
+            self._build_tables()
+        n = self.prog.gene_length
+        G = np.asarray([[int(g) for g in ind] for ind in genomes],
+                       dtype=np.int64)
+        assert G.shape == (len(genomes), n), (G.shape, n)
+        pop = G.shape[0]
+
+        if n:
+            rows = np.arange(n)[None, :]
+            Gc = self._clamp[rows, G]  # admissibility clamping
+            total = self._base + self._cost[rows, Gc].sum(axis=1)
+        else:
+            Gc = G
+            total = np.full(pop, self._base)
+
+        # residency state over the whole population
+        valid = np.full((pop, self._nV), self._host_bit, dtype=np.int64)
+        dirty = np.full((pop, self._nV), -1, dtype=np.int64)
+        link_bytes = np.zeros((pop, self._L))
+        link_events = np.zeros((pop, self._L))
+        host = self._host
+        host_pinned = np.full(pop, host, dtype=np.int64)
+
+        for gi, times, reads, writes in self._events:
+            dmem = self._mem_of_allele[Gc[:, gi]] if gi is not None \
+                else host_pinned
+            dbit = np.left_shift(1, dmem)
+            moved = np.zeros((pop, self._L))
+            batched = np.zeros((pop, self._L), dtype=bool)
+            for vi, nb in reads:
+                v = valid[:, vi]
+                need = (v & dbit) == 0
+                if not need.any():
+                    continue
+                code = self._src_lut[v] * self._M + dmem
+                for c in np.unique(code[need]):
+                    sel = need & (code == c)
+                    s, d = divmod(int(c), self._M)
+                    for lidx, end in self._route(s, d):
+                        moved[sel, lidx] += nb
+                        batched[sel, lidx] = True
+                        # a routed transfer stages a valid copy at each
+                        # hop's end, exactly like the scalar protocol
+                        valid[sel, vi] = valid[sel, vi] | (1 << end)
+            for vi, _nb in writes:
+                valid[:, vi] = dbit
+                dirty[:, vi] = np.where(dmem == host, -1, dmem)
+            link_bytes += moved * times
+            link_events += batched * times
+
+        # program end: device-dirty results return to the host once
+        moved = np.zeros((pop, self._L))
+        batched = np.zeros((pop, self._L), dtype=bool)
+        for vi, nb in self._flush_vars:
+            d = dirty[:, vi]
+            flush = (d >= 0) & ((valid[:, vi] & self._host_bit) == 0)
+            if not flush.any():
+                continue
+            for dv in np.unique(d[flush]):
+                sel = flush & (d == dv)
+                for lidx, end in self._route(int(dv), host):
+                    moved[sel, lidx] += nb
+                    batched[sel, lidx] = True
+        link_bytes += moved
+        link_events += batched
+
+        total = total + link_bytes @ self._inv_bw + link_events @ self._lat
+        return [float(t) for t in total]

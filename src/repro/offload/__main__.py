@@ -186,6 +186,14 @@ def _add_spec_args(p: argparse.ArgumentParser) -> None:
                    help="wall-clock the two winner projections so even "
                         "modeled/calibrated runs record modeled-vs-"
                         "measured rank correlation")
+    p.add_argument("--steady-state", action="store_true",
+                   help="asynchronous steady-state GA: breed offspring "
+                        "per free worker lane instead of idling at the "
+                        "generation barrier (docs/pipeline.md)")
+    p.add_argument("--batch-eval", action="store_true",
+                   help="mixed mode: price whole populations in one "
+                        "vectorized pass (scalar evaluator stays the "
+                        "verify oracle)")
     p.add_argument("--smoke", action="store_true",
                    help="CI-sized budget (small GA)")
 
@@ -237,6 +245,10 @@ def _spec_from_args(args: argparse.Namespace) -> OffloadSpec:
         ga_kw["stability_gate"] = args.stability_gate
     if args.rank_probe:
         ga_kw["rank_probe"] = True
+    if args.steady_state:
+        ga_kw["steady_state"] = True
+    if args.batch_eval:
+        ga_kw["batch"] = True
     if ga_kw:
         kw["ga"] = GAControls(**ga_kw)
     return OffloadSpec(**kw)

@@ -518,7 +518,10 @@ class Offloader:
                         dedup_ratio=round(tel.dedup_ratio, 4),
                         hit_rate=round(tel.hit_rate, 4),
                     )
-                    timing = {"wall_s": tel.wall_s}
+                    # timing keys are digest-exempt on the trace side;
+                    # idle_s is the barrier-stall / lane-starvation
+                    # attribution the trace CLI's budget table renders
+                    timing = {"wall_s": tel.wall_s, "idle_s": tel.idle_s}
                 tracer.event("generation", span="search", attrs=attrs,
                              timing=timing)
             if self._on_generation is not None:
@@ -581,6 +584,10 @@ class Offloader:
                 "seed": params.seed,
                 "seeded": len(seeds),
                 "diversity": float(params.diversity),
+                # recorded only when on: knobs-off payloads stay
+                # byte-identical to pre-fast-search artifacts
+                **({"steady_state": True} if params.steady_state else {}),
+                **({"batch": True} if self.spec.ga.batch else {}),
             },
             "placement": placement,
             "history": [

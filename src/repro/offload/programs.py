@@ -399,15 +399,32 @@ class MiniappMixedAdapter:
 
             self.library = default_library(hw=self.machine)
             self.matches = match_blocks(self.prog, self.library)
+        # spec.ga.batch swaps in the vectorized-population subclasses
+        # for the MAIN search evaluator. Scalar __call__, fingerprint
+        # and cache keys are inherited, so the verify-stage re-measure
+        # stays the oracle and batch/scalar searches share one cache;
+        # the warm-start sub_evaluators stay scalar (tiny populations,
+        # not worth the table builds).
         if self.matches:
-            from repro.blocks import BlockMixedEvaluator
+            from repro.blocks import (
+                BatchBlockMixedEvaluator,
+                BlockMixedEvaluator,
+            )
 
-            self._evaluator = BlockMixedEvaluator(
+            block_cls = (
+                BatchBlockMixedEvaluator if spec.ga.batch
+                else BlockMixedEvaluator
+            )
+            self._evaluator = block_cls(
                 self.prog, spec.destinations, registry=self.registry,
                 library=self.library, matches=self.matches,
             )
         else:
-            self._evaluator = MixedEvaluator(
+            from repro.destinations import BatchMixedEvaluator
+
+            mixed_cls = BatchMixedEvaluator if spec.ga.batch \
+                else MixedEvaluator
+            self._evaluator = mixed_cls(
                 self.prog, spec.destinations, registry=self.registry
             )
 

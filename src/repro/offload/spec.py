@@ -97,6 +97,15 @@ class GAControls:
     # rank correlation too; measured fidelity computes it for free from
     # the search's own clocks
     rank_probe: bool = False
+    # asynchronous steady-state GA (GAParams.steady_state): offspring are
+    # bred per free worker lane instead of waiting at the generation
+    # barrier. False = the historical generational loop, byte-identical.
+    steady_state: bool = False
+    # vectorized population pricing (BatchMixedEvaluator): mixed-mode
+    # searches price whole populations in one numpy pass; the scalar
+    # evaluator stays the verify-stage oracle and shares the same
+    # fingerprint/cache keys. False = scalar pricing, byte-identical.
+    batch: bool = False
 
     def __post_init__(self):
         if self.diversity < 0:
@@ -295,6 +304,7 @@ class OffloadSpec:
                 penalty_time_s=self.penalty_time_s,
                 alleles=alleles,
                 diversity=self.ga.diversity,
+                steady_state=self.ga.steady_state,
             )
         if self.is_arch:
             return ga.GAParams(
@@ -307,11 +317,13 @@ class OffloadSpec:
                 else 1e6,
                 penalty_time_s=self.penalty_time_s,
                 diversity=self.ga.diversity,
+                steady_state=self.ga.steady_state,
             )
         # binary miniapp: the paper rule (fig4/fig5)
         kw: Dict[str, Any] = dict(seed=self.seed,
                                   penalty_time_s=self.penalty_time_s,
-                                  diversity=self.ga.diversity)
+                                  diversity=self.ga.diversity,
+                                  steady_state=self.ga.steady_state)
         if self.timeout_s is not None:
             kw["timeout_s"] = self.timeout_s
         params = ga.GAParams.for_gene_length(gene_length, **kw)
@@ -334,6 +346,13 @@ class OffloadSpec:
             # serialized only when set: a blocks-off spec round-trips
             # byte-identically to pre-blocks artifacts (same digest)
             del d["blocks"]
+        # same rule for the fast-search knobs: asdict recursed into the
+        # nested GAControls, so dropping the off-state keys keeps every
+        # knobs-off spec digest identical to pre-fast-search artifacts
+        if not self.ga.steady_state:
+            del d["ga"]["steady_state"]
+        if not self.ga.batch:
+            del d["ga"]["batch"]
         d["v"] = _SPEC_VERSION
         return d
 

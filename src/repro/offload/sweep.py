@@ -82,7 +82,11 @@ SWEEP_SCHEMA_VERSION = 1
 # function-block substitution summary (matched blocks, substituted
 # count, kernel@destination rows; docs/blocks.md), None for cells the
 # feature does not apply to.
-SWEEP_POINT_VERSION = 3
+# v4 points additionally carry "throughput" inside each ok cell's
+# "search" summary — modeled-search genomes/sec (population x
+# generations / search wall), the number the fast-search knobs
+# (OffloadSpec.ga.batch / .steady_state) exist to raise.
+SWEEP_POINT_VERSION = 4
 
 # default trajectory file (repo root when invoked from there) and the
 # default per-cell artifact directories; smoke and full matrices get
@@ -363,6 +367,12 @@ def _cell_record(
             "wall_s": float(s["wall_s"]),
             "generations": int(s["ga"]["generations"]),
             "population": int(s["ga"]["population"]),
+            # genomes/sec the search sustained (submissions, not fresh
+            # measurements: cache hits are part of the sustained rate)
+            "throughput": (
+                int(s["ga"]["generations"]) * int(s["ga"]["population"])
+                / float(s["wall_s"])
+            ) if float(s["wall_s"]) > 0 else None,
         }
         r = s.get("residency")
         if r is not None:
@@ -516,6 +526,11 @@ def validate_point(point: Dict[str, Any]) -> None:
                             f"(required for v{v} points)")
         if v >= 3 and "blocks" not in c:
             problems.append(f"cell[{i}] missing key 'blocks' "
+                            f"(required for v{v} points)")
+        if (v >= 4 and c.get("status") == "ok"
+                and isinstance(c.get("search"), dict)
+                and "throughput" not in c["search"]):
+            problems.append(f"cell[{i}] search missing key 'throughput' "
                             f"(required for v{v} points)")
     if problems:
         raise ValueError("invalid trajectory point: " + "; ".join(problems))

@@ -454,6 +454,7 @@ def render_trace(trace: Trace, artifact=None) -> str:
     order: List[str] = []
     for s in spans:
         st = by_stage.setdefault(s["name"], {"wall_s": 0.0, "meas": 0,
+                                             "eval_s": 0.0, "idle_s": 0.0,
                                              "counted": False})
         if s["name"] not in order:
             order.append(s["name"])
@@ -469,18 +470,27 @@ def render_trace(trace: Trace, artifact=None) -> str:
             # report span's stability re-searches and rank probes),
             # counted once per stage however many spans recorded
             st["meas"] += _span_measurements({}, trace.events(name))
+        # the evalpool's per-generation clocks: evaluation wall and
+        # worker-lane idle (barrier stall / steady-state starvation) —
+        # recorded under the digest-exempt event "timing" sub-dict
+        for e in trace.events(name):
+            tm = e.get("timing") or {}
+            st["eval_s"] += float(tm.get("wall_s", 0.0))
+            st["idle_s"] += float(tm.get("idle_s", 0.0))
     total_wall = sum(st["wall_s"] for st in by_stage.values())
     total_meas = sum(st["meas"] for st in by_stage.values())
     rows.append("budget attribution:")
     rows.append(f"  {'stage':9s} {'wall_s':>9s} {'share':>6s} "
-                f"{'measurements':>13s} {'share':>6s}")
+                f"{'measurements':>13s} {'share':>6s} "
+                f"{'eval_s':>8s} {'idle_s':>8s}")
     for name in order:
         st = by_stage[name]
         w_share = st["wall_s"] / total_wall if total_wall > 0 else 0.0
         m_share = st["meas"] / total_meas if total_meas > 0 else 0.0
         rows.append(
             f"  {name:9s} {st['wall_s']:9.3f} {w_share:6.0%} "
-            f"{int(st['meas']):13d} {m_share:6.0%}"
+            f"{int(st['meas']):13d} {m_share:6.0%} "
+            f"{st['eval_s']:8.3f} {st['idle_s']:8.3f}"
         )
     conc = _concentration_line(
         [e for e in trace.events("search") if e.get("name") == "generation"]

@@ -447,6 +447,133 @@ def test_broker_view_held_by_stage_survives_broker_close(tmp_path):
     assert view._fd is None
 
 
+# ---------------------------------------------------------------------------
+# steady-state sessions: continuous evaluation over shared stores
+# ---------------------------------------------------------------------------
+
+
+class _FpOnemax:
+    """onemax with the fingerprint the persistent cache demands."""
+
+    def __call__(self, genes):
+        return _onemax_time(genes)
+
+    def fingerprint(self):
+        return "steady-onemax"
+
+
+def test_steady_session_dedup_joins_inflight_measurement():
+    calls = []
+    started = threading.Event()
+
+    def evaluate(genes):
+        calls.append(genes)
+        started.set()
+        time.sleep(0.05)
+        return _onemax_time(genes)
+
+    with ep.EvalPool(evaluate, workers=2) as pool:
+        with pool.steady_session(180.0, 1000.0) as ses:
+            ses.submit((0, 1))
+            started.wait(timeout=5.0)
+            ses.submit((0, 1))  # identical genome mid-measurement
+            r1 = ses.collect()
+            r2 = ses.collect()
+            tel = ses.cut()
+    assert len(calls) == 1  # the duplicate joined, never re-measured
+    assert r1[1] == r2[1] == _onemax_time((0, 1))
+    assert tel.submitted == 2 and tel.unique == 1
+    assert tel.evaluated == 1 and tel.cache_hits == 1
+
+
+def test_steady_session_timeout_scores_penalty_once():
+    release = threading.Event()
+
+    def evaluate(genes):
+        release.wait(timeout=5.0)  # hangs past the session deadline
+        return 1.0
+
+    with ep.EvalPool(evaluate, workers=2) as pool:
+        with pool.steady_session(0.05, 1000.0) as ses:
+            ses.submit((1, 0))
+            genes, t = ses.collect()
+            assert genes == (1, 0) and t == 1000.0
+            release.set()  # the straggler finishes late...
+            time.sleep(0.1)
+            tel = ses.cut()
+    # ...and its late result was discarded: one timeout, no extra
+    # result, nothing double-counted
+    assert tel.timeouts == 1 and tel.evaluated == 1
+    assert tel.submitted == 1
+
+
+def test_steady_session_collect_without_work_raises():
+    with ep.EvalPool(_FpOnemax()) as pool:
+        with pool.steady_session(180.0, 1000.0) as ses:
+            with pytest.raises(RuntimeError, match="no submission"):
+                ses.collect()
+
+
+def test_steady_sessions_hammer_one_broker_store(tmp_path):
+    """Eight steady sessions (eight threads, one shared EvalBroker view)
+    hammering one JSONL store: no torn lines, per-session telemetry adds
+    up exactly, and the store replays to the distinct key set."""
+    path = str(tmp_path / "fitness.jsonl")
+    n_threads, n_each = 8, 60
+    import random
+
+    with ep.EvalBroker(path) as broker:
+        view = broker.open_cache("steady-onemax")
+        tels = [None] * n_threads
+        errors = []
+
+        def hammer(idx):
+            try:
+                rng = random.Random(idx)
+                with ep.EvalPool(_FpOnemax(), cache=view) as pool:
+                    with pool.steady_session(180.0, 1000.0) as ses:
+                        for _ in range(n_each):
+                            # a small genome space forces cross-session
+                            # collisions: simultaneous misses, hits on
+                            # another session's fresh measurement
+                            ses.submit((rng.randint(0, 1),
+                                        rng.randint(0, 1),
+                                        rng.randint(0, 1)))
+                            ses.collect()
+                        tels[idx] = ses.cut()
+            except Exception as e:  # pragma: no cover - failure detail
+                errors.append(e)
+
+        threads = [threading.Thread(target=hammer, args=(i,))
+                   for i in range(n_threads)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        view.close()
+    assert not errors
+    # per-session accounting: every submission resolved exactly once
+    for tel in tels:
+        assert tel is not None
+        assert tel.submitted == n_each
+        assert tel.evaluated + tel.cache_hits == tel.submitted
+        assert tel.timeouts == 0
+    total_evaluated = sum(t.evaluated for t in tels)
+    import json as _json
+
+    with open(path, encoding="utf-8") as fh:
+        lines = fh.readlines()
+    # one whole line per fresh measurement — atomic appends, no tearing
+    assert len(lines) == total_evaluated
+    keys = set()
+    for line in lines:
+        assert line.endswith("\n"), "torn (unterminated) record"
+        keys.add(_json.loads(line)["genes"])
+    replay = ep.FitnessCache(path, fingerprint="steady-onemax")
+    assert len(replay) == len(keys)
+    replay.close()
+
+
 def test_evaluator_fingerprints_distinguish_configs():
     prog = miniapps.himeno_program()
     a = ev.MiniappEvaluator(prog, tr.TransferMode.BULK, staged=True)

@@ -365,6 +365,23 @@ def test_diversity_threads_through_the_spec(tmp_path):
     assert spec2 == spec
 
 
+def test_fast_search_knobs_thread_through_the_spec(tmp_path):
+    spec = dataclasses.replace(
+        SPEC, ga=GAControls(steady_state=True), generations=4)
+    res, _ = _run(tmp_path, "steady", spec)
+    ga_payload = res.stage("search").payload["ga"]
+    assert ga_payload["steady_state"] is True
+    spec2 = OffloadSpec.from_dict(json.loads(spec.to_json()))
+    assert spec2.ga.steady_state and spec2 == spec
+    # knobs-off searches must not even carry the keys: payload and spec
+    # JSON stay byte-identical to pre-fast-search artifacts
+    base, _ = _run(tmp_path, "base", SPEC)
+    assert "steady_state" not in base.stage("search").payload["ga"]
+    assert "batch" not in base.stage("search").payload["ga"]
+    d = json.loads(SPEC.to_json())
+    assert "steady_state" not in d["ga"] and "batch" not in d["ga"]
+
+
 # ---------------------------------------------------------------------------
 # the trace CLI verb
 # ---------------------------------------------------------------------------
@@ -380,6 +397,11 @@ def test_trace_cli_renders_budget_attribution(tmp_path, capsys):
     for stage in ("calibrate", "analyze", "seed", "search", "verify",
                   "report"):
         assert stage in out
+    # the evalpool's per-generation clocks (recorded under the events'
+    # digest-exempt timing sub-dict) must actually be RENDERED: the
+    # barrier-idle / lane-starvation column was recorded but invisible
+    assert "idle_s" in out
+    assert "eval_s" in out
 
 
 def test_trace_cli_exit_codes(tmp_path, capsys):

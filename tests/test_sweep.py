@@ -153,13 +153,25 @@ def test_v2_point_appends_after_v1_points(tmp_path):
     # ISSUE 8: v3 points add a per-cell block-substitution summary and
     # append cleanly after the v1/v2 history
     v3 = _point({CID_A: 0.85}, ts="2026-01-03T00:00:00Z")
-    v3["v"] = sw.SWEEP_POINT_VERSION
+    v3["v"] = 3
     for c in v3["cells"]:
         c["quality"] = {"stability": {"skipped": "zero generations"},
                         "rank": {"skipped": "rank_probe disabled"}}
         c["blocks"] = None  # binary cell: feature not applicable
     traj = sw.append_point(path, v3)
-    assert traj.points == [v1, v2, v3]
+
+    # ISSUE 10: v4 points add per-cell search throughput (genomes/sec)
+    # and append cleanly after the v1/v2/v3 history
+    v4 = _point({CID_A: 0.80}, ts="2026-01-04T00:00:00Z")
+    v4["v"] = sw.SWEEP_POINT_VERSION
+    for c in v4["cells"]:
+        c["quality"] = {"stability": {"skipped": "zero generations"},
+                        "rank": {"skipped": "rank_probe disabled"}}
+        c["blocks"] = None
+        if isinstance(c.get("search"), dict):
+            c["search"]["throughput"] = 4200.0
+    traj = sw.append_point(path, v4)
+    assert traj.points == [v1, v2, v3, v4]
     # the file-level schema version did not move — old readers still load
     d = json.loads((tmp_path / "BENCH_sweep.json").read_text())
     assert d["v"] == sw.SWEEP_SCHEMA_VERSION == 1
@@ -180,15 +192,19 @@ def test_v2_point_appends_after_v1_points(tmp_path):
     sw.validate_point(_point({CID_A: 0.8}))
 
 
-def test_run_sweep_emits_v3_points_with_quality_and_blocks(tmp_path):
+def test_run_sweep_emits_v4_points_with_quality_blocks_throughput(tmp_path):
     cell = sw.SweepCell("himeno", "quadro-p4000", "binary")
     p = sw.run_sweep([cell], out_dir=str(tmp_path / "sweep"), smoke=True)
-    assert p["v"] == sw.SWEEP_POINT_VERSION == 3
+    assert p["v"] == sw.SWEEP_POINT_VERSION == 4
     q = p["cells"][0]["quality"]
     assert q is not None
     assert q["stability"]["k"] >= 2 and 0.0 <= q["stability"]["pass_at_k"] <= 1.0
     # binary cells never run the block matcher: summary present but None
     assert p["cells"][0]["blocks"] is None
+    # v4: modeled-search throughput lands in every ok cell's search
+    # summary (the fast-search knobs' headline number)
+    s = p["cells"][0]["search"]
+    assert s["throughput"] is None or s["throughput"] > 0
     sw.validate_point(p)
 
 
